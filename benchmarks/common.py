@@ -1,0 +1,85 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset builders.
+
+Datasets mirror the paper's experiments at their small-scale operating
+points with synthetic data of matched statistics (DESIGN.md §8, point 4):
+  * tiny-images-like  -> unit-norm Gaussian-mixture image vectors (Sec. 6.1)
+  * parkinsons-like   -> 22-dim biomedical-like vectors (Sec. 6.2)
+  * social graph      -> preferential-attachment graph ~ the 1.9k-node
+                         Facebook-like network (Sec. 6.3)
+  * set systems       -> Zipfian item-set transactions ~ Accidents/Kosarak
+                         (Sec. 6.4)
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+  for _ in range(warmup):
+    jax.block_until_ready(fn(*args))
+  ts = []
+  for _ in range(repeats):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    ts.append(time.perf_counter() - t0)
+  return min(ts)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+  print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def tiny_images_like(n: int, d: int = 64, clusters: int = 50, seed: int = 0):
+  """Unit-norm clustered vectors (the 3072-dim images are PCA'd in spirit)."""
+  kc, ka, kn = jax.random.split(jax.random.PRNGKey(seed), 3)
+  centers = jax.random.normal(kc, (clusters, d))
+  centers = centers / jnp.linalg.norm(centers, axis=1, keepdims=True)
+  assign = jax.random.randint(ka, (n,), 0, clusters)
+  f = centers[assign] + 0.35 * jax.random.normal(kn, (n, d))
+  return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+
+def parkinsons_like(n: int = 1024, d: int = 22, seed: int = 0):
+  """22-attribute biomedical-like vectors, normalized as in Sec. 6.2."""
+  k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+  base = jax.random.normal(k1, (n, d))
+  corr = jax.random.normal(k2, (d, d)) * 0.4 + jnp.eye(d)
+  f = base @ corr
+  f = f - jnp.mean(f, axis=0)
+  return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+
+def social_graph(n: int = 512, m_edges: int = 4, seed: int = 0) -> np.ndarray:
+  """Preferential-attachment (Barabasi-Albert-like) adjacency, weighted."""
+  rng = np.random.default_rng(seed)
+  deg = np.ones(n)
+  w = np.zeros((n, n), np.float32)
+  for v in range(1, n):
+    p = deg[:v] / deg[:v].sum()
+    targets = rng.choice(v, size=min(m_edges, v), replace=False, p=p)
+    for t in targets:
+      weight = rng.exponential(1.0)
+      w[v, t] = w[t, v] = weight
+      deg[v] += 1
+      deg[t] += 1
+  return w
+
+
+def set_system(n_sets: int = 2048, n_elements: int = 4096, alpha: float = 1.3,
+               avg_size: int = 12, seed: int = 0) -> np.ndarray:
+  """Zipfian transactions (Accidents/Kosarak-like) as a binary incidence."""
+  rng = np.random.default_rng(seed)
+  ranks = np.arange(1, n_elements + 1, dtype=np.float64)
+  p = ranks ** -alpha
+  p /= p.sum()
+  inc = np.zeros((n_sets, n_elements), np.float32)
+  for i in range(n_sets):
+    size = max(1, rng.poisson(avg_size))
+    items = rng.choice(n_elements, size=min(size, n_elements), replace=False,
+                       p=p)
+    inc[i, items] = 1.0
+  return inc

@@ -1,0 +1,56 @@
+"""Fig. 10 reproduction: submodular (max-)coverage vs GreedyScaling
+(Kumar et al. 2013) on Zipfian set systems matched to Accidents/Kosarak
+statistics.  Coverage == facility location on 0/1 incidence rows (the
+eval set is the element universe).
+
+GreedyScaling's reported distributed/centralized ratios on these datasets
+are ~0.96-1.00 with O(log n) MapReduce rounds; GreeDi runs exactly TWO
+rounds.  We report GreeDi's ratio for the same k sweep.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, set_system
+from repro.core import objectives as O
+from repro.core.greedi import centralized_greedy, greedi_reference
+
+OBJ = O.FacilityLocationPre(kernel="linear")
+
+
+def run(n_sets: int = 2048, n_elements: int = 4096, seeds: int = 2,
+        quick: bool = False):
+  inc = jnp.asarray(set_system(n_sets, n_elements))
+  universe = jnp.eye(n_elements, dtype=jnp.float32)
+
+  def init(ef, em, cf=None):
+    # eval set = element universe; candidate rows = set incidences
+    del ef, em
+    return OBJ.init(universe, jnp.ones((n_elements,), jnp.float32),
+                    cf if cf is not None else inc)
+
+  rows = []
+  k_sweep = [10, 20, 40, 80] if not quick else [10, 40]
+  for k in k_sweep:
+    _, v_c = centralized_greedy(inc, k, objective=OBJ, init_for=init)
+    vals = []
+    for s in range(seeds):
+      r = greedi_reference(jax.random.PRNGKey(s), inc, m=8, kappa=k,
+                           k_final=k, objective=OBJ, init_for=init)
+      vals.append(float(r.value / v_c))
+    ratio = float(np.mean(vals))
+    rows.append(("fig10", 8, k, ratio))
+    print(f"k={k:3d} m=8 greedi/centralized={ratio:.3f} "
+          f"(GreedyScaling paper-reported: ~0.96-1.00, in O(log n) rounds; "
+          f"GreeDi: 2 rounds)", flush=True)
+
+  ratios = [r[3] for r in rows]
+  emit("fig10_coverage", 0.0,
+       f"min_ratio={min(ratios):.3f} mean={np.mean(ratios):.3f} rounds=2")
+  return rows
+
+
+if __name__ == "__main__":
+  run()

@@ -1,0 +1,192 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms for
+every dry-run cell from the compiled artifacts.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / link_bw   (per-device bytes from the
+                      partitioned HLO; equivalent to the global formulation)
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI; inter-pod DCI modeled at 25 GB/s effective per device.
+
+FLOPs source: the dry-run's *unrolled* cost pass (exact trip counts,
+includes remat recompute).  Bytes source: the same pass -- pre-fusion, so it
+is an upper bound on HBM traffic (fusion only removes traffic); the
+compiled per-device "bytes accessed" is also recorded (loop bodies counted
+once -> lower bound).  Collective bytes: parsed per collective kind from the
+partitioned module.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train shapes;
+2*N(_active)*D for single-token decode; 2*N*D for prefill.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link (intra-pod)
+DCI_BW = 25e9                # B/s effective inter-pod per device
+
+DEFAULT_RECORDS = os.path.join(os.path.dirname(__file__), "data",
+                               "dryrun.jsonl")
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,          # one token per sequence
+    "long_500k": 1,
+}
+
+
+def analytic_bytes(arch: str, shape: str) -> float:
+  """Global HBM traffic per step from an explicit model (see EXPERIMENTS.md):
+
+    train:   params*(3 reads/writes bf16) + opt update (f32 m/v/grads r+w)
+             + activation traffic ~ 16 tensor-passes/layer bf16 x 3 passes
+             + the per-period residual stack (w+r)
+    prefill: params read once + activations (1 pass) + cache write
+    decode:  params read once per token + FULL KV/state cache read
+             (+ write of the new slot)
+
+  Why not HLO 'bytes accessed': the CPU backend fuses far less than TPU and
+  counts while-loop bodies once, so the HLO numbers only bracket the truth
+  (recorded as diagnostics); this model is the standard napkin roofline.
+  """
+  BF = 2.0
+  if arch == "greedi-select":
+    n, d, kappa, kf = 1 << 20, 256, 64, 64
+    # every greedy step re-reads eval feats + cov and writes gains
+    return (n * d * 4.0 + 2 * n * 4.0) * (kappa + kf)
+  cfg = get_config(arch)
+  p_total = float(cfg.param_count())
+  L, dm = cfg.n_layers, cfg.d_model
+  toks = SHAPE_TOKENS[shape]
+  seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 32768,
+         "long_500k": 524288}[shape]
+  batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+           "long_500k": 1}[shape]
+
+  if cfg.family in ("ssm",):
+    # recurrent state: (B, H, P, N) f32 per layer = B * expand*dm * N * 4
+    cache = batch * 4.0 * L * (cfg.ssm.expand * dm) * cfg.ssm.d_state
+  elif cfg.sliding_window and cfg.family == "hybrid":
+    n_attn = L // 3 + (1 if cfg.n_remainder > 2 else 0)
+    cache = (batch * cfg.n_kv_heads * min(seq, cfg.sliding_window)
+             * cfg.head_dim * 2 * BF * n_attn
+             + batch * 4.0 * (L - n_attn) * RG_STATE(cfg))
+  else:
+    cache = batch * cfg.n_kv_heads * seq * cfg.head_dim * 2 * BF * L
+
+  act = toks * dm * L * 16 * BF          # ~16 tensor-passes per layer, bf16
+  if shape == "train_4k":
+    w = p_total * (3 * BF + 4 * 4.0 + 2 * 4.0)   # fwd/bwd/remat + adam f32
+    resid = toks * dm * BF * L * 2               # remat stack write + read
+    return w + 3 * act + resid
+  if shape == "prefill_32k":
+    return p_total * BF + act + cache
+  # decode: one token per sequence
+  return p_total * BF + cache + batch * dm * L * 16 * BF
+
+
+def RG_STATE(cfg) -> float:
+  return float(cfg.rec.lru_width or cfg.d_model)
+
+
+def model_flops(arch: str, shape: str) -> float:
+  if arch == "greedi-select":
+    # selection: kappa local steps of (n_local x d) gain matmuls + k_final
+    # distributed steps over (n x m*kappa) -- dominated by round 1:
+    # 2 * n * d * kappa per full pass plus round 2 2 * n * (m kappa) d ... use
+    # 2 * n * d * (kappa + k_final) as the useful-FLOP model.
+    n, d, kappa, kf = 1 << 20, 256, 64, 64
+    return 2.0 * n * d * (kappa + kf)
+  cfg = get_config(arch)
+  n_active = cfg.active_param_count()
+  d_tokens = SHAPE_TOKENS[shape]
+  if shape == "train_4k":
+    return 6.0 * n_active * d_tokens
+  return 2.0 * n_active * d_tokens
+
+
+def analyze(rec: dict) -> dict:
+  chips = rec["chips"]
+  flops_g = rec.get("flops_global_exact") or rec["flops_per_device"] * chips
+  bytes_g = analytic_bytes(rec["arch"], rec["shape"])
+  bytes_upper = rec.get("bytes_global_exact") or bytes_g  # pre-fusion HLO
+  coll = rec.get("collective_bytes_per_device", {})
+  multi = rec["mesh"].startswith("2x")
+  # inter-pod traffic: all collectives that span the pod axis ride DCI; we
+  # conservatively bill all-reduce/all-gather at ICI speed intra-pod and add
+  # a DCI surcharge for the multi-pod mesh (half the reduce volume crosses).
+  ici_bytes = sum(coll.values())
+  t_compute = flops_g / (chips * PEAK_FLOPS)
+  t_memory = bytes_g / (chips * HBM_BW)
+  t_coll = ici_bytes / ICI_BW
+  if multi:
+    t_coll += 0.5 * coll.get("all-reduce", 0.0) / DCI_BW
+  terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+  dom = max(terms, key=terms.get)
+  mf = model_flops(rec["arch"], rec["shape"])
+  useful = mf / max(flops_g, 1.0)
+  # roofline fraction: useful model FLOPs per second achievable if the step
+  # takes max(terms) seconds, over the fleet peak.
+  step_time = max(terms.values())
+  frac = (mf / step_time) / (chips * PEAK_FLOPS) if step_time > 0 else 0.0
+  return dict(rec=rec, terms=terms, dominant=dom, model_flops=mf,
+              useful_ratio=useful, roofline_frac=frac,
+              memory_upper_s=bytes_upper / (chips * HBM_BW))
+
+
+def fmt_row(a: dict) -> str:
+  r = a["rec"]
+  t = a["terms"]
+  return (f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+          f"comp={t['compute']*1e3:9.3f}ms mem={t['memory']*1e3:9.3f}ms "
+          f"coll={t['collective']*1e3:9.3f}ms dom={a['dominant']:10s} "
+          f"useful={a['useful_ratio']*100:5.1f}% "
+          f"roofline={a['roofline_frac']*100:5.2f}%")
+
+
+def run(records_path: str = DEFAULT_RECORDS, quick: bool = False):
+  if not os.path.exists(records_path):
+    print(f"# roofline: no records at {records_path}; run "
+          f"`python -m repro.launch.dryrun --out {records_path}` first")
+    return []
+  # keep the LAST record per cell (later runs supersede earlier ones)
+  by_cell = {}
+  with open(records_path) as f:
+    for line in f:
+      rec = json.loads(line)
+      by_cell[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+  out = []
+  for key in sorted(by_cell):
+    a = analyze(by_cell[key])
+    out.append(a)
+    print(fmt_row(a), flush=True)
+  if out:
+    worst = min(out, key=lambda a: a["roofline_frac"])
+    collb = max(out, key=lambda a: a["terms"]["collective"]
+                / max(sum(a["terms"].values()), 1e-30))
+    print(f"# worst roofline fraction: {worst['rec']['arch']} "
+          f"{worst['rec']['shape']} {worst['rec']['mesh']} "
+          f"({worst['roofline_frac']*100:.2f}%)")
+    print(f"# most collective-bound:   {collb['rec']['arch']} "
+          f"{collb['rec']['shape']} {collb['rec']['mesh']}")
+  print(f"fig_roofline,0.0,cells={len(out)}")
+  return out
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--records", default=DEFAULT_RECORDS)
+  args = ap.parse_args()
+  run(args.records)
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,47 @@
+"""Benchmark suite entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
+``--quick`` shrinks sweeps; ``--only <name>`` runs a single benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--quick", action="store_true")
+  ap.add_argument("--only", default=None)
+  args = ap.parse_args()
+
+  from benchmarks import (fig4_exemplar, fig6_active_set, fig8_speedup,
+                          fig9_maxcut, fig10_coverage, kernels_bench,
+                          roofline)
+
+  suites = {
+      "fig4_exemplar": lambda: fig4_exemplar.run(quick=args.quick),
+      "fig6_active_set": lambda: fig6_active_set.run(quick=args.quick),
+      "fig9_maxcut": lambda: fig9_maxcut.run(quick=args.quick),
+      "fig10_coverage": lambda: fig10_coverage.run(quick=args.quick),
+      "fig8_speedup": lambda: fig8_speedup.run(quick=args.quick),
+      "kernels": lambda: kernels_bench.run(quick=args.quick),
+      "roofline": lambda: roofline.run(quick=args.quick),
+  }
+  names = [args.only] if args.only else list(suites)
+  failures = []
+  for name in names:
+    print(f"\n### {name} " + "#" * (60 - len(name)), flush=True)
+    t0 = time.time()
+    try:
+      suites[name]()
+    except Exception as e:  # keep the suite going; failures print clearly
+      failures.append(name)
+      print(f"{name},FAILED,{e!r}", flush=True)
+    print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+  if failures:
+    raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,69 @@
+"""Sparse GP inference with a GreeDi-selected active set (Sec. 3.4.1 / 6.2).
+
+End-to-end: select an active set S maximizing the IVM information gain with
+the distributed protocol, then run GP regression with the selected points
+and measure test RMSE against (a) a random active set of the same size and
+(b) the centralized greedy selection.
+
+    PYTHONPATH=src python examples/active_set_gp.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import objectives as O
+from repro.core.greedi import centralized_greedy, greedi_reference
+
+H, SIGMA = 0.75, 0.3
+
+
+def gp_predict(x_train, y_train, x_test, active_idx):
+  """GP regression using only the active set (Sec. 3.4.1, Eqs. 3-4)."""
+  xa = x_train[active_idx]
+  ya = y_train[active_idx]
+  kaa = O.rbf_kernel(xa, xa, h=H) + SIGMA ** 2 * jnp.eye(len(active_idx))
+  kta = O.rbf_kernel(x_test, xa, h=H)
+  return kta @ jnp.linalg.solve(kaa, ya)
+
+
+def main():
+  # a smooth nonlinear function on 8-dim inputs
+  key = jax.random.PRNGKey(0)
+  k1, k2, k3 = jax.random.split(key, 3)
+  x = jax.random.normal(k1, (1024, 8)) * 0.8
+  w = jax.random.normal(k2, (8,))
+  f = lambda x: jnp.sin(x @ w) + 0.3 * jnp.cos(2.0 * x[:, 0])
+  y = f(x) + SIGMA * jax.random.normal(k3, (1024,))
+  x_test = jax.random.normal(jax.random.PRNGKey(9), (256, 8)) * 0.8
+  y_test = f(x_test)
+
+  k, m = 48, 8
+  obj = O.InformationGain(k_max=k, kernel="rbf", kernel_kwargs=(("h", H),),
+                          sigma=SIGMA)
+  init = lambda ef, em: obj.init_d(8)
+
+  def rmse(idx):
+    pred = gp_predict(x, y, x_test, jnp.asarray(idx))
+    return float(jnp.sqrt(jnp.mean((pred - y_test) ** 2)))
+
+  # GreeDi selection -> recover indices by matching selected feature rows
+  r = greedi_reference(jax.random.PRNGKey(1), x, m=m, kappa=k, k_final=k,
+                       objective=obj, init_for=init)
+  sims = O.rbf_kernel(r.sel_feats, x, h=0.1)
+  greedi_idx = np.asarray(jnp.argmax(sims, axis=1))[np.asarray(r.sel_valid)]
+
+  rc, v_c = centralized_greedy(x, k, objective=obj, init_for=init)
+  central_idx = np.asarray(rc.idx)
+
+  rand_idx = np.asarray(jax.random.choice(jax.random.PRNGKey(3), 1024, (k,),
+                                          replace=False))
+
+  print(f"information gain: GreeDi {float(r.value):.2f} vs centralized "
+        f"{float(v_c):.2f} (ratio {float(r.value / v_c):.3f})")
+  print(f"test RMSE  random active set      : {rmse(rand_idx):.4f}")
+  print(f"test RMSE  GreeDi active set      : {rmse(greedi_idx):.4f}")
+  print(f"test RMSE  centralized active set : {rmse(central_idx):.4f}")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,108 @@
+"""End-to-end driver: GreeDi coreset selection -> LM training (deliverable b).
+
+The paper motivates distributed submodular maximization for "data subset
+selection for training complex models"; this example closes that loop:
+
+  1. build a clustered document corpus (embeddings + token sequences);
+  2. select a coreset with sharded GreeDi (facility location);
+  3. train a qwen3-family model on (a) the coreset and (b) a random subset
+     of the same size, and compare eval loss on held-out docs drawn from
+     ALL clusters -- coverage of the embedding space translates into
+     coverage of the token distribution.
+
+Defaults are CPU-sized (--full-size trains a ~100M-param model for a few
+hundred steps -- the deliverable configuration for a real machine).
+
+    PYTHONPATH=src python examples/train_with_selection.py [--steps 120]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.data.pipeline import EmbeddedCorpus, batches_from_indices
+from repro.data.selection import coverage_ratio, greedi_select_indices
+from repro.models import Parallelism, build_model
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+PAR = Parallelism(dp_axes=(), dp_size=0)
+
+
+def train(model, corpus, indices, steps, batch_size, eval_batch, label):
+  params = model.init(jax.random.PRNGKey(42))
+  opt = init_opt_state(params)
+  step_fn = jax.jit(make_train_step(
+      model, OptConfig(lr=1e-3, warmup_steps=max(steps // 10, 5),
+                       total_steps=steps), PAR))
+  eval_fn = jax.jit(lambda p, b: model.loss_fn(p, b, PAR)[0])
+  t0 = time.time()
+  for step, batch in enumerate(
+      batches_from_indices(corpus, indices, batch_size, steps)):
+    params, opt, metrics = step_fn(params, opt, batch)
+    if step % 20 == 0:
+      print(f"  [{label}] step {step:4d} loss {float(metrics['loss']):.4f}",
+            flush=True)
+  ev = float(eval_fn(params, eval_batch))
+  print(f"  [{label}] eval loss {ev:.4f}  ({time.time()-t0:.0f}s)")
+  return ev
+
+
+def main():
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--steps", type=int, default=120)
+  ap.add_argument("--batch", type=int, default=8)
+  ap.add_argument("--coreset", type=int, default=256)
+  ap.add_argument("--full-size", action="store_true",
+                  help="~100M params, a few hundred steps (needs a big box)")
+  args = ap.parse_args()
+
+  cfg = get_config("qwen3-4b")
+  if args.full_size:
+    cfg = dataclasses.replace(cfg, n_layers=8, d_model=768, n_heads=12,
+                              n_kv_heads=4, head_dim=64, d_ff=2048,
+                              vocab=32768)  # ~100M params
+    seq_len = 512
+  else:
+    cfg = reduced(cfg)
+    seq_len = 64
+
+  corpus = EmbeddedCorpus(n_docs=4096, feat_dim=64, vocab=cfg.vocab,
+                          seq_len=seq_len, n_clusters=48)
+  feats = corpus.features()
+
+  # --- the paper's technique: two-round distributed selection -------------
+  t0 = time.time()
+  sel = greedi_select_indices(jax.random.PRNGKey(0), feats, m=8,
+                              kappa=args.coreset // 4,
+                              k_final=args.coreset)
+  cov = coverage_ratio(feats, sel, args.coreset)
+  print(f"GreeDi selected {len(sel)} docs in {time.time()-t0:.0f}s; "
+        f"facility-location coverage = {cov:.3f} of centralized greedy")
+  sel_clusters = np.unique(np.asarray(corpus.cluster_assignments())[sel])
+  print(f"coreset covers {len(sel_clusters)}/48 clusters")
+
+  rng = np.random.default_rng(0)
+  rand = rng.choice(corpus.n_docs, size=len(sel), replace=False)
+  rand_clusters = np.unique(np.asarray(corpus.cluster_assignments())[rand])
+  print(f"random subset covers {len(rand_clusters)}/48 clusters")
+
+  # held-out eval batch spanning all clusters
+  eval_ids = jnp.asarray(rng.choice(corpus.n_docs, size=32, replace=False))
+  eval_batch = corpus.tokens_for(eval_ids)
+
+  model = build_model(cfg, remat=None)
+  ev_core = train(model, corpus, sel, args.steps, args.batch, eval_batch,
+                  "greedi-coreset")
+  ev_rand = train(model, corpus, rand, args.steps, args.batch, eval_batch,
+                  "random-subset")
+  print(f"\neval loss: greedi-coreset {ev_core:.4f} vs random {ev_rand:.4f} "
+        f"({'BETTER' if ev_core < ev_rand else 'not better'})")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,2 @@
+"""repro: GreeDi (distributed submodular maximization) as a production JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""qwen3-4b [dense]: 36L d=2560 32H (GQA kv=8) d_ff=9728 vocab=151936,
+qk_norm + GQA.  [hf:Qwen/Qwen3-8B family; hf]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense", n_layers=36, d_model=2560, n_heads=32,
+    n_kv_heads=8, d_ff=9728, vocab=151936, head_dim=128, qk_norm=True,
+    rope_theta=1e6, pattern=("attn",),
+)

@@ -1,0 +1,16 @@
+"""GreeDi core: submodular objectives, greedy variants, distributed protocol."""
+from repro.core import bounds, constraints, objectives, partition
+from repro.core.greedy import GreedyResult, best_of_knapsack, greedy
+from repro.core.greedi import (GreediResult, baselines, centralized_greedy,
+                               greedi_hierarchical, greedi_reference,
+                               greedi_sharded, greedi_sharded_fast,
+                               set_value_feats)
+
+__all__ = [
+    "bounds", "constraints", "objectives", "partition",
+    "GreedyResult", "greedy", "best_of_knapsack",
+    "GreediResult", "greedi_reference", "greedi_sharded",
+    "greedi_hierarchical", "greedi_sharded_fast", "baselines",
+    "centralized_greedy",
+    "set_value_feats",
+]

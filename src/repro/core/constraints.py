@@ -1,0 +1,156 @@
+"""Hereditary constraint systems (Sec. 5) as mask-based state machines.
+
+A constraint exposes:
+
+    state = c.init()
+    mask  = c.mask(state, meta)     # (n,) bool: feasible to *add* item i now
+    state = c.update(state, meta_i) # account for the chosen item
+
+``meta`` is a dict of per-item attribute arrays (partition ids, costs, ...)
+aligned with the candidate axis; in the distributed protocol these attributes
+travel with the candidate feature blocks.  Heredity is what Theorem 12 needs:
+every subset of a feasible set is feasible, which mask-based systems satisfy
+by construction (masks only ever *shrink* as items are added).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Cardinality:
+  """|S| <= k (the uniform matroid)."""
+  k: int
+
+  def init(self):
+    return jnp.zeros((), jnp.int32)
+
+  def mask(self, state, meta):
+    n = _n_items(meta)
+    return jnp.broadcast_to(state < self.k, (n,))
+
+  def update(self, state, meta_i):
+    return state + 1
+
+  def rho(self) -> int:
+    """max feasible set size (rho(zeta) of Thm 12)."""
+    return self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMatroid:
+  """At most caps[p] items from each part; ``meta_key`` selects the item
+  attribute holding part ids (so p different matroids can constrain the same
+  ground set through different groupings, e.g. topic x source)."""
+  num_parts: int
+  caps: tuple  # length num_parts
+  meta_key: str = "part"
+
+  def init(self):
+    return jnp.zeros((self.num_parts,), jnp.int32)
+
+  def mask(self, state, meta):
+    part = meta[self.meta_key]
+    caps = jnp.asarray(self.caps, jnp.int32)
+    return state[part] < caps[part]
+
+  def update(self, state, meta_i):
+    return state.at[meta_i[self.meta_key]].add(1)
+
+  def rho(self) -> int:
+    return int(sum(self.caps))
+
+
+@dataclasses.dataclass(frozen=True)
+class Knapsack:
+  """sum of costs <= budget; meta key ``cost``."""
+  budget: float
+  min_cost: float = 1e-3  # for the rho bound ceil(R / min_cost)
+
+  def init(self):
+    return jnp.zeros((), jnp.float32)
+
+  def mask(self, state, meta):
+    return meta["cost"] <= (self.budget - state)
+
+  def update(self, state, meta_i):
+    return state + meta_i["cost"]
+
+  def rho(self) -> int:
+    import math
+    return math.ceil(self.budget / self.min_cost)
+
+
+@dataclasses.dataclass(frozen=True)
+class Intersection:
+  """Intersection of hereditary systems (e.g. p matroids, p-system + d knapsacks)."""
+  systems: tuple
+
+  def init(self):
+    return tuple(s.init() for s in self.systems)
+
+  def mask(self, state, meta):
+    m = self.systems[0].mask(state[0], meta)
+    for s, st in zip(self.systems[1:], state[1:]):
+      m = jnp.logical_and(m, s.mask(st, meta))
+    return m
+
+  def update(self, state, meta_i):
+    return tuple(s.update(st, meta_i) for s, st in zip(self.systems, state))
+
+  def rho(self) -> int:
+    return min(s.rho() for s in self.systems)
+
+
+@dataclasses.dataclass(frozen=True)
+class PSystem:
+  """Explicit p-independence system via a feasibility oracle.
+
+  ``feasible(counts_state, item_meta)`` must implement a hereditary predicate
+  (Sec. 5.1); the greedy 1/(p+1) guarantee (Fisher et al. 1978) and Thm 12's
+  tau/min(m, rho) then apply with tau = 1/(p+1).  The built-in oracle covers
+  the canonical example used in the tests: the intersection of p partition
+  matroids presented as a single system.
+  """
+  p: int
+  matroids: tuple  # tuple[PartitionMatroid, ...] with len == p
+
+  def init(self):
+    return tuple(m.init() for m in self.matroids)
+
+  def mask(self, state, meta):
+    out = self.matroids[0].mask(state[0], meta)
+    for m, st in zip(self.matroids[1:], state[1:]):
+      out = jnp.logical_and(out, m.mask(st, meta))
+    return out
+
+  def update(self, state, meta_i):
+    return tuple(m.update(st, meta_i) for m, st in zip(self.matroids, state))
+
+  def rho(self) -> int:
+    return min(m.rho() for m in self.matroids)
+
+  def tau(self) -> float:
+    """Greedy's guarantee on this system (Fisher et al. 1978)."""
+    return 1.0 / (self.p + 1)
+
+
+def _n_items(meta: dict[str, Array]) -> int:
+  for v in meta.values():
+    return v.shape[0]
+  raise ValueError("constraint meta must contain at least one array "
+                   "(use meta={'_n': jnp.zeros(n)} for attribute-free items)")
+
+
+def slice_meta(meta: dict[str, Array], i: Array) -> dict[str, Array]:
+  return {k: v[i] for k, v in meta.items()}
+
+
+def default_meta(n: int) -> dict[str, Array]:
+  return {"_n": jnp.zeros((n,), jnp.float32)}

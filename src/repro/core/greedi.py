@@ -1,0 +1,539 @@
+"""GreeDi: the paper's two-round distributed protocol (Alg. 2 / Alg. 3).
+
+Three implementations share the greedy machinery from core/greedy.py:
+
+  * ``greedi_reference``   -- single-process, vmap-over-partitions. Used by the
+    paper-figure benchmarks (Figs. 4, 6, 9, 10) and the theory tests; supports
+    global and local (decomposable, Sec. 4.5) objective evaluation and all
+    four naive baselines of Sec. 6.
+  * ``greedi_sharded``     -- production path: shard_map over a mesh data axis.
+    Round 1 is embarrassingly parallel per shard; the merge is one all_gather
+    of (kappa, d) candidate blocks (bytes independent of n, the paper's
+    communication model); round 2 is a *distributed* greedy whose per-step
+    marginal gains are psum-reduced partial sums, so the full ground set is
+    used for evaluation without ever moving it.
+  * ``greedi_hierarchical``-- multi-pod: device -> pod (ICI all_gather) ->
+    global (DCI all_gather) three-level merge, generalizing the paper's
+    "multiple rounds" remark. Bounds compose (core/bounds.py).
+
+Fault tolerance: ``straggler_keep`` masks partitions out of the merge; the
+protocol and Thm 4's proof degrade gracefully to the surviving machines (the
+merged B simply misses some A_i).  Elasticity: the number of logical
+partitions is decoupled from physical shards via core/partition.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import constraints as C
+from repro.core.greedy import GreedyResult, greedy
+from repro.core.partition import random_partition
+from repro.util import fori as _ufori
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+
+def set_value_feats(objective, state0, sel_feats: Array, valid: Array):
+  """Replay updates for an explicit selected-feature block -> final state."""
+
+  def body(state, fv):
+    f, v = fv
+    new = objective.update(state, f)
+    state = jax.tree.map(lambda a, b: jnp.where(v, a, b), new, state)
+    return state, ()
+
+  state, _ = jax.lax.scan(body, state0, (sel_feats, valid))
+  return state
+
+
+class GreediResult(NamedTuple):
+  sel_feats: Array      # (k_final, d) the returned solution A_gd
+  sel_valid: Array      # (k_final,) bool
+  value: Array          # f(A_gd) under the final evaluation objective
+  value_merged: Array   # f(A_B^gc)   (round-2 solution)
+  value_best_single: Array  # f(A_max^gc) (best single-machine solution)
+  stage1_values: Array  # (m,) f(A_i) under final evaluation
+
+
+# ---------------------------------------------------------------------------
+# reference implementation (single process, vmap over partitions)
+# ---------------------------------------------------------------------------
+
+
+def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
+                     k_final: int, objective, init_for,
+                     local_eval: bool = False,
+                     final_subset: int | None = None,
+                     mode: str = "standard", sample_frac: float | None = None,
+                     stop_nonpositive: bool = False) -> GreediResult:
+  """Algorithm 2 (GreeDi) on one host.
+
+  Args:
+    init_for: callable (eval_feats, eval_mask) -> objective state. For
+      set-only objectives (information gain, DPP) it may ignore its inputs.
+    local_eval: round-1 machines evaluate f on their local partition only
+      (the decomposable mode of Sec. 4.5 / Fig. 4b).
+    final_subset: if given, round 2 and the final comparison evaluate f on a
+      random subset U of this size (Thm 10); else on the full ground set.
+  """
+  n, d = feats.shape
+  r_part, r_sel, r_u = jax.random.split(rng, 3)
+  parts, pmask, _ = random_partition(r_part, feats, m)
+
+  # ---- round 1: independent greedy per machine --------------------------
+  def _init(ef, em, cand):
+    # objectives with a precompute path accept the candidate block too
+    try:
+      return init_for(ef, em, cand)
+    except TypeError:
+      return init_for(ef, em)
+
+  def run_one(part, mask_row, key):
+    if local_eval:
+      st0 = _init(part, mask_row.astype(part.dtype), part)
+    else:
+      st0 = _init(feats, jnp.ones((n,), part.dtype), part)
+    return greedy(objective, st0, part, kappa, cand_mask=mask_row,
+                  rng=key, mode=mode, sample_frac=sample_frac,
+                  stop_nonpositive=stop_nonpositive)
+
+  keys = jax.random.split(r_sel, m)
+  r1 = jax.vmap(run_one)(parts, pmask, keys)      # feats: (m, kappa, d)
+  valid1 = r1.idx >= 0
+
+  # ---- final evaluation objective ---------------------------------------
+  if final_subset is not None:
+    u_idx = jax.random.choice(r_u, n, (final_subset,), replace=False)
+    eval_feats = feats[u_idx]
+    eval_mask = jnp.ones((final_subset,), feats.dtype)
+  else:
+    eval_feats = feats
+    eval_mask = jnp.ones((n,), feats.dtype)
+  st_final0 = _init(eval_feats, eval_mask,
+                    r1.feats.reshape(m * kappa, d))
+
+  # ---- A_max: best single-machine solution under final evaluation -------
+  stage1_vals = jax.vmap(
+      lambda sf, v: objective.value(set_value_feats(objective, st_final0, sf, v))
+  )(r1.feats, valid1)
+  best_i = jnp.argmax(stage1_vals)
+
+  # ---- round 2: greedy over the merged candidates ------------------------
+  B = r1.feats.reshape(m * kappa, d)
+  bmask = valid1.reshape(m * kappa)
+  r2 = greedy(objective, st_final0, B, k_final, cand_mask=bmask,
+              rng=r_sel, mode=mode, sample_frac=sample_frac,
+              stop_nonpositive=stop_nonpositive)
+  v_merged = objective.value(r2.state)
+  v_best_single = stage1_vals[best_i]
+
+  use_merged = v_merged >= v_best_single
+  # A_max may have kappa > k_final items; truncate to the first k_final (they
+  # are the greedy prefix, which is exactly A_max^gc[k_final]).
+  alt_feats = r1.feats[best_i][:k_final]
+  alt_valid = valid1[best_i][:k_final]
+  sel_feats = jnp.where(use_merged, r2.feats, alt_feats)
+  sel_valid = jnp.where(use_merged, r2.idx >= 0, alt_valid)
+  value = jnp.maximum(v_merged, v_best_single)
+  return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
+                      stage1_vals)
+
+
+def centralized_greedy(feats: Array, k: int, *, objective, init_for,
+                       rng: Array | None = None, mode: str = "standard",
+                       sample_frac: float | None = None,
+                       stop_nonpositive: bool = False) -> tuple[GreedyResult, Array]:
+  n = feats.shape[0]
+  try:
+    st0 = init_for(feats, jnp.ones((n,), feats.dtype), feats)
+  except TypeError:
+    st0 = init_for(feats, jnp.ones((n,), feats.dtype))
+  r = greedy(objective, st0, feats, k, rng=rng, mode=mode,
+             sample_frac=sample_frac, stop_nonpositive=stop_nonpositive)
+  return r, objective.value(r.state)
+
+
+# ---------------------------------------------------------------------------
+# naive baselines of Sec. 6
+# ---------------------------------------------------------------------------
+
+
+def baselines(rng: Array, feats: Array, *, m: int, k: int, objective,
+              init_for, stop_nonpositive: bool = False) -> dict[str, Array]:
+  """random/random, random/greedy, greedy/merge, greedy/max (paper Sec. 6)."""
+  n, d = feats.shape
+  r_part, r_a, r_b = jax.random.split(rng, 3)
+  parts, pmask, _ = random_partition(r_part, feats, m)
+  npp = parts.shape[1]
+  st_full0 = init_for(feats, jnp.ones((n,), feats.dtype))
+  out: dict[str, Array] = {}
+
+  # -- random/random: k random out of (m x k random) == k random overall
+  idx = jax.random.choice(r_a, n, (k,), replace=False)
+  st = set_value_feats(objective, st_full0, feats[idx], jnp.ones((k,), bool))
+  out["random/random"] = objective.value(st)
+
+  # -- random/greedy: k random per machine, then greedy over the mk pool
+  def pick_rand(key, mask_row):
+    pr = jax.random.uniform(key, (npp,)) - jnp.where(mask_row, 0.0, 1e9)
+    return jax.lax.top_k(pr, min(k, npp))[1]
+  keys = jax.random.split(r_b, m)
+  rand_idx = jax.vmap(pick_rand)(keys, pmask)               # (m, k)
+  pool = jnp.take_along_axis(parts, rand_idx[..., None], axis=1)
+  pool_mask = jnp.take_along_axis(pmask, rand_idx, axis=1)
+  r = greedy(objective, st_full0, pool.reshape(-1, d), k,
+             cand_mask=pool_mask.reshape(-1),
+             stop_nonpositive=stop_nonpositive)
+  out["random/greedy"] = objective.value(r.state)
+
+  # -- greedy/merge: ceil(k/m) greedy per machine, merged as-is
+  kpm = -(-k // m)
+  def run_small(part, mask_row):
+    st0 = init_for(feats, jnp.ones((n,), feats.dtype))
+    return greedy(objective, st0, part, kpm, cand_mask=mask_row,
+                  stop_nonpositive=stop_nonpositive)
+  r1 = jax.vmap(run_small)(parts, pmask)
+  merged = r1.feats.reshape(m * kpm, d)[:k]
+  mvalid = (r1.idx >= 0).reshape(m * kpm)[:k]
+  st = set_value_feats(objective, st_full0, merged, mvalid)
+  out["greedy/merge"] = objective.value(st)
+
+  # -- greedy/max: greedy k per machine, report the best single solution
+  def run_k(part, mask_row):
+    st0 = init_for(feats, jnp.ones((n,), feats.dtype))
+    return greedy(objective, st0, part, k, cand_mask=mask_row,
+                  stop_nonpositive=stop_nonpositive)
+  rk = jax.vmap(run_k)(parts, pmask)
+  vals = jax.vmap(
+      lambda sf, v: objective.value(set_value_feats(objective, st_full0, sf, v))
+  )(rk.feats, rk.idx >= 0)
+  out["greedy/max"] = jnp.max(vals)
+  return out
+
+
+# ---------------------------------------------------------------------------
+# production path: shard_map over the mesh
+# ---------------------------------------------------------------------------
+
+
+def _combined_index(axis_names: tuple[str, ...]) -> Array:
+  idx = jax.lax.axis_index(axis_names[0])
+  for a in axis_names[1:]:
+    idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+  return idx
+
+
+def _psum(x, axis_names):
+  return jax.lax.psum(x, axis_names)
+
+
+def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
+                   objective, axis_names: tuple[str, ...] = ("data",),
+                   straggler_keep: Array | None = None,
+                   u_subset_eval: bool = False,
+                   rng: Array | None = None):
+  """GreeDi over a device mesh; round-2 gains are psum-reduced partial sums.
+
+  Args:
+    feats: (n, d) ground set, n divisible by the product of axis sizes.
+    objective: must expose init/gains/update/value and partial_stats (the
+      facility-location family -- the paper's decomposable flagship).
+    straggler_keep: optional (m,) bool; False partitions are dropped at the
+      merge (failed/straggling machines).  The Thm 4 bound then holds with
+      m_alive = sum(straggler_keep).
+    u_subset_eval: Thm 10 mode -- evaluate round 2 on machine 0's partition
+      (a uniformly random n/m subset) instead of psum over the full set.
+
+  Returns a GreediResult (replicated on every shard).
+  """
+  m = 1
+  for a in axis_names:
+    m *= mesh.shape[a]
+  n, d = feats.shape
+  assert n % m == 0, (n, m)
+  if straggler_keep is None:
+    straggler_keep = jnp.ones((m,), bool)
+  if rng is None:
+    rng = jax.random.PRNGKey(0)
+
+  in_specs = (P(axis_names), P(), P())
+  out_specs = jax.tree.map(lambda _: P(), GreediResult(
+      sel_feats=0, sel_valid=0, value=0, value_merged=0,
+      value_best_single=0, stage1_values=0))
+
+  def fn(local_feats, keep, key):
+    me = _combined_index(axis_names)
+    n_local = local_feats.shape[0]
+    my_keep = keep[me]
+
+    # ---- round 1: local greedy on the shard's partition ------------------
+    st0 = objective.init(local_feats)
+    r1 = greedy(objective, st0, local_feats, kappa, rng=key)
+    sel = r1.feats                                   # (kappa, d)
+    valid = (r1.idx >= 0) & my_keep
+
+    # ---- merge: one all_gather of the candidate blocks -------------------
+    B = jax.lax.all_gather(sel, axis_names)          # (m, kappa, d)
+    Bvalid = jax.lax.all_gather(valid, axis_names)   # (m, kappa)
+    Bflat = B.reshape(m * kappa, d)
+    Bmask = Bvalid.reshape(m * kappa)
+
+    # evaluation weight of this shard: full-set eval or U = partition 0
+    w = jnp.where(u_subset_eval, (me == 0).astype(jnp.float32), 1.0)
+
+    # ---- A_max: value of each machine's solution under final eval --------
+    def value_of(sel_i, valid_i):
+      st = set_value_feats(objective, objective.init(local_feats), sel_i,
+                           valid_i)
+      # local mean * local count -> psum-able sum
+      return objective.value(st) * n_local * w
+    part_vals = jax.vmap(value_of)(B, Bvalid)        # (m,)
+    denom = _psum(jnp.asarray(n_local, jnp.float32) * w, axis_names)
+    stage1_vals = _psum(part_vals, axis_names) / denom
+    stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
+    best_i = jnp.argmax(stage1_vals)
+
+    # ---- round 2: distributed greedy over B ------------------------------
+    def body(t, c):
+      state, selmask, outf, outv = c
+      psum_part, cnt = objective.partial_stats(state, Bflat)   # (m*kappa,),()
+      gains = _psum(psum_part * w, axis_names) / denom
+      feasible = Bmask & (~selmask)
+      masked = jnp.where(feasible, gains, -1e30)
+      chosen = jnp.argmax(masked)
+      take = jnp.any(feasible)
+      feat = Bflat[chosen]
+      new_state = objective.update(state, feat)
+      state = jax.tree.map(lambda a, b: jnp.where(take, a, b), new_state,
+                           state)
+      selmask = selmask.at[chosen].set(jnp.where(take, True, selmask[chosen]))
+      outf = outf.at[t].set(jnp.where(take, feat, 0.0))
+      outv = outv.at[t].set(take)
+      return (state, selmask, outf, outv)
+
+    st2 = objective.init(local_feats)
+    c0 = (st2, jnp.zeros((m * kappa,), bool),
+          jnp.zeros((k_final, d), feats.dtype), jnp.zeros((k_final,), bool))
+    st2, _, merged_feats, merged_valid = _ufori(0, k_final, body, c0)
+    v_merged = _psum(objective.value(st2) * n_local * w, axis_names) / denom
+
+    # ---- pick the better of A_B and A_max --------------------------------
+    v_best_single = stage1_vals[best_i]
+    use_merged = v_merged >= v_best_single
+    alt_feats = B[best_i][:k_final]
+    alt_valid = Bvalid[best_i][:k_final]
+    sel_feats = jnp.where(use_merged, merged_feats, alt_feats)
+    sel_valid = jnp.where(use_merged, merged_valid, alt_valid)
+    value = jnp.maximum(v_merged, v_best_single)
+    return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
+                        stage1_vals)
+
+  shmapped = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_vma=False)
+  return shmapped(feats, straggler_keep, rng)
+
+
+def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
+                        axis_names: tuple[str, ...] = ("data",),
+                        rng: Array | None = None):
+  """Perf-optimized sharded GreeDi for the linear-kernel facility-location
+  objective (the production data-selection path).
+
+  vs ``greedi_sharded`` (perf hillclimb #3, see EXPERIMENTS.md Sec Perf):
+    * round 1 precomputes the local (n/m x n/m) similarity matrix ONCE; each
+      greedy step is then a masked relu-reduce instead of a fresh
+      (n/m x n/m x d) MXU contraction  -> kappa-fold FLOP cut;
+    * round 2 precomputes S2 = sim(local eval, merged B) once; per-step
+      gains are relu(S2 - cov) column sums + one psum;
+    * A_max needs NO replay: f(A_i) = mean_e max over machine i's columns
+      of S2 (a reshape + max + psum).
+
+  Marginal-gain math is identical, so the returned solution matches
+  ``greedi_sharded`` exactly (tests assert this).
+  """
+  m = 1
+  for a in axis_names:
+    m *= mesh.shape[a]
+  n, d = feats.shape
+  assert n % m == 0, (n, m)
+  if rng is None:
+    rng = jax.random.PRNGKey(0)
+
+  out_specs = jax.tree.map(lambda _: P(), GreediResult(
+      sel_feats=0, sel_valid=0, value=0, value_merged=0,
+      value_best_single=0, stage1_values=0))
+
+  def fn(local_feats, key):
+    n_local = local_feats.shape[0]
+    denom = jnp.asarray(n, jnp.float32)
+
+    # ---- round 1: local greedy over the precomputed local Gram matrix ----
+    s11 = (local_feats @ local_feats.T).astype(jnp.float32)  # (nl, nl)
+
+    def r1_body(t, c):
+      cov, selmask, sel_idx = c
+      gains = jnp.sum(jnp.maximum(s11 - cov[:, None], 0.0), axis=0)
+      gains = jnp.where(selmask, -1e30, gains)
+      j = jnp.argmax(gains)
+      cov = jnp.maximum(cov, s11[:, j])
+      return (cov, selmask.at[j].set(True), sel_idx.at[t].set(j))
+
+    cov0 = jnp.zeros((n_local,), jnp.float32)
+    _, _, sel_idx = _ufori(
+        0, kappa, r1_body,
+        (cov0, jnp.zeros((n_local,), bool),
+         jnp.zeros((kappa,), jnp.int32)))
+    sel = local_feats[sel_idx]                                # (kappa, d)
+
+    # ---- merge + ONE cross-similarity matmul ------------------------------
+    B = jax.lax.all_gather(sel, axis_names)                   # (m, kappa, d)
+    Bflat = B.reshape(m * kappa, d)
+    s2 = (local_feats @ Bflat.T).astype(jnp.float32)          # (nl, m*kappa)
+
+    # ---- A_max: no replay needed ------------------------------------------
+    per_machine = jnp.max(jnp.maximum(
+        s2.reshape(n_local, m, kappa), 0.0), axis=2)          # (nl, m)
+    stage1_vals = _psum(jnp.sum(per_machine, axis=0), axis_names) / denom
+    best_i = jnp.argmax(stage1_vals)
+
+    # ---- round 2: distributed greedy over cached columns -------------------
+    def r2_body(t, c):
+      cov, selmask, outf, outv = c
+      part = jnp.sum(jnp.maximum(s2 - cov[:, None], 0.0), axis=0)
+      gains = _psum(part, axis_names)
+      gains = jnp.where(selmask, -1e30, gains)
+      j = jnp.argmax(gains)
+      cov = jnp.maximum(cov, s2[:, j])
+      return (cov, selmask.at[j].set(True),
+              outf.at[t].set(Bflat[j]), outv.at[t].set(True))
+
+    cov, _, merged_feats, merged_valid = _ufori(
+        0, k_final, r2_body,
+        (jnp.zeros((n_local,), jnp.float32),
+         jnp.zeros((m * kappa,), bool),
+         jnp.zeros((k_final, d), feats.dtype),
+         jnp.zeros((k_final,), bool)))
+    v_merged = _psum(jnp.sum(cov), axis_names) / denom
+
+    v_best_single = stage1_vals[best_i]
+    use_merged = v_merged >= v_best_single
+    sel_feats = jnp.where(use_merged, merged_feats, B[best_i][:k_final])
+    sel_valid = jnp.where(use_merged, merged_valid,
+                          jnp.ones((k_final,), bool))
+    value = jnp.maximum(v_merged, v_best_single)
+    return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
+                        stage1_vals)
+
+  shmapped = jax.shard_map(fn, mesh=mesh, in_specs=(P(axis_names), P()),
+                           out_specs=out_specs, check_vma=False)
+  return shmapped(feats, rng)
+
+
+def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
+                        objective,
+                        pod_axis: str = "pod", data_axis: str = "data",
+                        rng: Array | None = None):
+  """Three-level GreeDi for multi-pod meshes: device -> pod -> global.
+
+  Level 1: each device greedily selects kappa from its local partition.
+  Level 2: all_gather over the *intra-pod* data axis (ICI); a distributed
+           greedy (gains psum-reduced over the pod) picks kappa per pod.
+  Level 3: all_gather the per-pod solutions over the pod axis (DCI, i.e. the
+           expensive inter-pod links carry only (pods * kappa * d) bytes);
+           a distributed greedy over the full mesh picks k_final.
+
+  The returned value also tracks the best lower-level solution so the final
+  answer is max over levels, mirroring Alg. 2's max(A_max, A_B).
+  """
+  mp, md = mesh.shape[pod_axis], mesh.shape[data_axis]
+  m = mp * md
+  n, d = feats.shape
+  assert n % m == 0, (n, m)
+  if rng is None:
+    rng = jax.random.PRNGKey(0)
+  both = (pod_axis, data_axis)
+
+  def fn(local_feats, key):
+    n_local = local_feats.shape[0]
+    denom_all = jnp.asarray(n, jnp.float32)
+
+    # ---- level 1: device-local greedy ------------------------------------
+    st0 = objective.init(local_feats)
+    r1 = greedy(objective, st0, local_feats, kappa, rng=key)
+    valid1 = r1.idx >= 0
+
+    def dist_greedy(cands, cmask, steps, axes, denom):
+      """Distributed greedy over a replicated candidate block; evaluation is
+      psum-reduced over ``axes`` (gains use every shard's local data)."""
+      def body(t, c):
+        state, selmask, outf, outv = c
+        part, _ = objective.partial_stats(state, cands)
+        gains = _psum(part, axes) / denom
+        feasible = cmask & (~selmask)
+        masked = jnp.where(feasible, gains, -1e30)
+        chosen = jnp.argmax(masked)
+        take = jnp.any(feasible)
+        feat = cands[chosen]
+        new_state = objective.update(state, feat)
+        state = jax.tree.map(lambda a, b: jnp.where(take, a, b), new_state,
+                             state)
+        selmask = selmask.at[chosen].set(
+            jnp.where(take, True, selmask[chosen]))
+        outf = outf.at[t].set(jnp.where(take, feat, 0.0))
+        outv = outv.at[t].set(take)
+        return (state, selmask, outf, outv)
+
+      nc = cands.shape[0]
+      c0 = (objective.init(local_feats), jnp.zeros((nc,), bool),
+            jnp.zeros((steps, d), feats.dtype), jnp.zeros((steps,), bool))
+      state, _, f, v = _ufori(0, steps, body, c0)
+      val = _psum(objective.value(state) * n_local, axes) / denom
+      return f, v, val
+
+    # ---- level 2: intra-pod merge + distributed greedy (ICI) --------------
+    Bp = jax.lax.all_gather(r1.feats, data_axis).reshape(md * kappa, d)
+    Bp_mask = jax.lax.all_gather(valid1, data_axis).reshape(md * kappa)
+    denom_pod = jnp.asarray(n_local * md, jnp.float32)
+    pod_f, pod_v, pod_val = dist_greedy(Bp, Bp_mask, kappa, (data_axis,),
+                                        denom_pod)
+
+    # ---- level 3: inter-pod merge + distributed greedy (DCI) --------------
+    Bg = jax.lax.all_gather(pod_f, pod_axis).reshape(mp * kappa, d)
+    Bg_mask = jax.lax.all_gather(pod_v, pod_axis).reshape(mp * kappa)
+    glob_f, glob_v, glob_val = dist_greedy(Bg, Bg_mask, k_final, both,
+                                           denom_all)
+
+    # best pod-level solution, evaluated globally
+    def pod_value(sel_i, valid_i):
+      st = set_value_feats(objective, objective.init(local_feats), sel_i,
+                           valid_i)
+      return objective.value(st) * n_local
+    pods_f = jax.lax.all_gather(pod_f, pod_axis)        # (mp, kappa, d)
+    pods_v = jax.lax.all_gather(pod_v, pod_axis)
+    pod_vals = _psum(jax.vmap(pod_value)(pods_f, pods_v), both) / denom_all
+    best_p = jnp.argmax(pod_vals)
+    v_best_pod = pod_vals[best_p]
+
+    use_glob = glob_val >= v_best_pod
+    sel_feats = jnp.where(use_glob, glob_f, pods_f[best_p][:k_final])
+    sel_valid = jnp.where(use_glob, glob_v, pods_v[best_p][:k_final])
+    value = jnp.maximum(glob_val, v_best_pod)
+    return GreediResult(sel_feats, sel_valid, value, glob_val, v_best_pod,
+                        pod_vals)
+
+  out_specs = jax.tree.map(lambda _: P(), GreediResult(
+      sel_feats=0, sel_valid=0, value=0, value_merged=0,
+      value_best_single=0, stage1_values=0))
+  shmapped = jax.shard_map(fn, mesh=mesh, in_specs=(P(both), P()),
+                           out_specs=out_specs, check_vma=False)
+  return shmapped(feats, rng)

@@ -1,0 +1,474 @@
+"""Submodular objectives as fixed-shape, jit/scan-friendly state machines.
+
+Every objective exposes the same functional interface so the greedy loops in
+``core/greedy.py`` and the distributed protocol in ``core/greedi.py`` can be
+written once:
+
+    state = obj.init(eval_feats)                    # summary of f restricted to
+                                                    # the *evaluation* set
+    gains = obj.gains(state, cand_feats)            # marginal gains f(S+v)-f(S)
+                                                    # for every candidate, (nc,)
+    state = obj.update(state, chosen_feat)          # S <- S + {v*}
+    value = obj.value(state)                        # f(S) w.r.t. the eval set
+
+The *evaluation set* is the data over which f is defined.  In GreeDi's global
+mode it is (a shard of) the full ground set; in the decomposable/local mode of
+Sec. 4.5 (Thm 10) it is the machine-local partition or the random subset U.
+Candidates are represented purely by feature vectors, so the only data that
+ever crosses machines is ``(kappa, d)`` blocks -- the paper's communication
+model (poly(m, k), independent of n).
+
+All state is padded to static shapes (``k_max``) so that the greedy loop is a
+single ``lax.fori_loop`` and the whole selection jits/lowers cleanly under
+``shard_map`` on a production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Similarity kernels
+# ---------------------------------------------------------------------------
+
+
+def linear_kernel(x: Array, y: Array) -> Array:
+  """Dot-product similarity. x: (n, d), y: (m, d) -> (n, m)."""
+  return x @ y.T
+
+
+def rbf_kernel(x: Array, y: Array, h: float = 0.75) -> Array:
+  """Squared-exponential kernel exp(-||x-y||^2 / h^2) (paper Sec. 3.4.1)."""
+  x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+  y2 = jnp.sum(y * y, axis=-1, keepdims=True)
+  d2 = jnp.maximum(x2 - 2.0 * (x @ y.T) + y2.T, 0.0)
+  return jnp.exp(-d2 / (h * h))
+
+
+def neg_sq_dist(x: Array, y: Array) -> Array:
+  """-||x-y||^2: the (negated) k-means dissimilarity l = d^2 of Sec. 6.1."""
+  x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+  y2 = jnp.sum(y * y, axis=-1, keepdims=True)
+  return -(x2 - 2.0 * (x @ y.T) + y2.T)
+
+
+KERNELS: dict[str, Callable[..., Array]] = {
+    "linear": linear_kernel,
+    "rbf": rbf_kernel,
+    "neg_sq_dist": neg_sq_dist,
+}
+
+
+# ---------------------------------------------------------------------------
+# Facility location (exemplar-based clustering, Sec. 3.4.2) and max-coverage
+# ---------------------------------------------------------------------------
+
+
+class FLState(NamedTuple):
+  """cov[i] = max_{s in S} sim(i, s), clipped below at the phantom baseline."""
+  cov: Array          # (n_eval,) current best similarity per eval point
+  eval_feats: Array   # (n_eval, d) -- carried so gains() needs no closure
+  eval_mask: Array    # (n_eval,) 1.0 for live eval rows (padding support)
+  value: Array        # scalar f(S)
+
+
+@dataclasses.dataclass(frozen=True)
+class FacilityLocation:
+  """f(S) = mean_i [ max_{s in S} sim(e_i, s) - baseline ]_+ .
+
+  With ``sim = -l`` (negated dissimilarity) and ``baseline = -l(e_i, e_0)``
+  this is exactly the phantom-exemplar k-medoid surrogate of Eq. (6):
+  f(S) = L({e0}) - L(S + {e0}).  With a 0/1 incidence "similarity" it is
+  weighted max-coverage.  Monotone, nonnegative, decomposable (Sec 4.5).
+
+  ``use_pallas`` routes the gain computation through the fused Pallas kernel
+  (kernels/facility_gain.py) instead of materializing sim(eval, cand).
+  """
+  kernel: str = "linear"
+  kernel_kwargs: tuple = ()
+  baseline: float = 0.0
+  use_pallas: bool = False
+
+  def _sim(self, x: Array, y: Array) -> Array:
+    return KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
+
+  def init(self, eval_feats: Array, eval_mask: Array | None = None) -> FLState:
+    n = eval_feats.shape[0]
+    if eval_mask is None:
+      eval_mask = jnp.ones((n,), eval_feats.dtype)
+    cov = jnp.full((n,), self.baseline, eval_feats.dtype)
+    return FLState(cov, eval_feats, eval_mask, jnp.zeros((), eval_feats.dtype))
+
+  def gains(self, state: FLState, cand_feats: Array) -> Array:
+    denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    if self.use_pallas:
+      from repro.kernels import ops as kops
+      return kops.facility_gain(
+          state.eval_feats, cand_feats, state.cov, state.eval_mask,
+          kernel=self.kernel, **dict(self.kernel_kwargs)) / denom
+    sim = self._sim(state.eval_feats, cand_feats)          # (ne, nc)
+    inc = jnp.maximum(sim - state.cov[:, None], 0.0)
+    return (state.eval_mask @ inc) / denom
+
+  def update(self, state: FLState, feat: Array) -> FLState:
+    sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
+    new_cov = jnp.maximum(state.cov, sim)
+    denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    gain = jnp.sum((new_cov - state.cov) * state.eval_mask) / denom
+    return FLState(new_cov, state.eval_feats, state.eval_mask,
+                   state.value + gain)
+
+  def value(self, state: FLState) -> Array:
+    return state.value
+
+  # Distributed evaluation helper: partial (unnormalized) statistics so that
+  # a psum over shards reproduces the global objective exactly.
+  def partial_stats(self, state: FLState, cand_feats: Array) -> tuple[Array, Array]:
+    """Returns (sum-of-gains (nc,), live-count ()) -- psum-able."""
+    sim = self._sim(state.eval_feats, cand_feats)
+    inc = jnp.maximum(sim - state.cov[:, None], 0.0)
+    return state.eval_mask @ inc, jnp.sum(state.eval_mask)
+
+
+class FLPreState(NamedTuple):
+  cov: Array
+  sim: Array          # (n_eval, n_cand) precomputed similarities
+  eval_feats: Array
+  eval_mask: Array
+  value: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class FacilityLocationPre:
+  """Facility location with the (eval x cand) similarity matrix precomputed
+  once per greedy run instead of once per *step*.
+
+  Greedy recomputes every candidate's marginal gain each step; with the
+  matrix cached, a step is one masked relu-reduce over S instead of a fresh
+  (n_e x n_c x d) contraction -- a k-fold FLOP reduction for the whole run.
+  Memory trade: O(n_e * n_c) resident, so this is the small-n benchmark path
+  (and the TPU path keeps the streaming Pallas kernel instead).
+  """
+  kernel: str = "linear"
+  kernel_kwargs: tuple = ()
+  baseline: float = 0.0
+
+  def _sim(self, x, y):
+    return KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
+
+  def init(self, eval_feats: Array, eval_mask: Array | None = None,
+           cand_feats: Array | None = None) -> FLPreState:
+    n = eval_feats.shape[0]
+    if eval_mask is None:
+      eval_mask = jnp.ones((n,), eval_feats.dtype)
+    if cand_feats is None:
+      cand_feats = eval_feats
+    sim = self._sim(eval_feats, cand_feats)
+    cov = jnp.full((n,), self.baseline, eval_feats.dtype)
+    return FLPreState(cov, sim, eval_feats, eval_mask,
+                      jnp.zeros((), eval_feats.dtype))
+
+  def gains(self, state: FLPreState, cand_feats: Array) -> Array:
+    del cand_feats  # static candidate set: use the cached matrix
+    denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    inc = jnp.maximum(state.sim - state.cov[:, None], 0.0)
+    return (state.eval_mask @ inc) / denom
+
+  def update(self, state: FLPreState, feat: Array) -> FLPreState:
+    sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
+    new_cov = jnp.maximum(state.cov, sim)
+    denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    gain = jnp.sum((new_cov - state.cov) * state.eval_mask) / denom
+    return FLPreState(new_cov, state.sim, state.eval_feats, state.eval_mask,
+                      state.value + gain)
+
+  def value(self, state: FLPreState) -> Array:
+    return state.value
+
+
+# ---------------------------------------------------------------------------
+# Information gain for GP active-set selection / IVM (Sec. 3.4.1)
+# ---------------------------------------------------------------------------
+
+
+class IGState(NamedTuple):
+  sel_feats: Array   # (k_max, d) selected features, zero-padded
+  count: Array       # () int32 number selected
+  chol: Array        # (k_max, k_max) Cholesky of (K_SS + sigma^2 I), identity-padded
+  value: Array       # scalar f(S) = 0.5 logdet(I + sigma^-2 K_SS)
+
+
+@dataclasses.dataclass(frozen=True)
+class InformationGain:
+  """f(S) = 0.5 logdet(I + sigma^-2 K_SS); monotone submodular (Krause+Guestrin).
+
+  Incremental Cholesky of M = K_SS + sigma^2 I in a fixed (k_max, k_max)
+  buffer.  Marginal gain of v:  0.5 log( (k_vv + s2 - ||L^-1 k_Sv||^2) / s2 ).
+  """
+  k_max: int
+  kernel: str = "rbf"
+  kernel_kwargs: tuple = (("h", 0.75),)
+  sigma: float = 1.0
+
+  def _k(self, x: Array, y: Array) -> Array:
+    return KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
+
+  # f does not depend on an eval set, only on the selected set; buffers are
+  # sized by the feature dim, so init takes ``d`` instead of eval features.
+  def init_d(self, d: int, dtype=jnp.float32) -> IGState:
+    return IGState(
+        sel_feats=jnp.zeros((self.k_max, d), dtype),
+        count=jnp.zeros((), jnp.int32),
+        chol=jnp.eye(self.k_max, dtype=dtype),
+        value=jnp.zeros((), dtype),
+    )
+
+  def _cross(self, state: IGState, cand_feats: Array) -> Array:
+    """L^-1 K_{S,cand} with rows past ``count`` zeroed: (k_max, nc)."""
+    k_sc = self._k(state.sel_feats, cand_feats)            # (k_max, nc)
+    row_live = (jnp.arange(self.k_max) < state.count)[:, None]
+    k_sc = jnp.where(row_live, k_sc, 0.0)
+    return jax.scipy.linalg.solve_triangular(state.chol, k_sc, lower=True)
+
+  def gains(self, state: IGState, cand_feats: Array) -> Array:
+    s2 = self.sigma ** 2
+    c = self._cross(state, cand_feats)                     # (k_max, nc)
+    k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
+    cond = k_vv + s2 - jnp.sum(c * c, axis=0)
+    cond = jnp.maximum(cond, 1e-12)
+    return 0.5 * jnp.log(cond / s2)
+
+  def update(self, state: IGState, feat: Array) -> IGState:
+    s2 = self.sigma ** 2
+    c = self._cross(state, feat[None, :])[:, 0]            # (k_max,)
+    k_vv = self._k(feat[None], feat[None])[0, 0]
+    diag = jnp.sqrt(jnp.maximum(k_vv + s2 - jnp.sum(c * c), 1e-12))
+    i = state.count
+    # Write row i of the Cholesky: [c_0..c_{i-1}, diag, 0...]; keep the
+    # identity padding on the diagonal for rows > i.
+    row = jnp.where(jnp.arange(self.k_max) < i, c, 0.0)
+    row = row.at[i].set(diag)
+    chol = jax.lax.dynamic_update_slice(state.chol, row[None, :], (i, 0))
+    sel = jax.lax.dynamic_update_slice(state.sel_feats, feat[None, :], (i, 0))
+    gain = 0.5 * jnp.log(jnp.maximum(diag * diag, 1e-12) / s2)
+    return IGState(sel, i + 1, chol, state.value + gain)
+
+  def value(self, state: IGState) -> Array:
+    return state.value
+
+
+# ---------------------------------------------------------------------------
+# Log-det of a DPP kernel (Sec. 3.4.1; non-monotone in general)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LogDetDPP:
+  """f(S) = logdet(K_S) via the same incremental Cholesky, no noise floor.
+
+  Non-monotone once marginal conditional variances drop below 1.
+  """
+  k_max: int
+  kernel: str = "rbf"
+  kernel_kwargs: tuple = (("h", 0.75),)
+  jitter: float = 1e-6
+
+  def _k(self, x, y):
+    k = KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
+    return k
+
+  def init_d(self, d: int, dtype=jnp.float32) -> IGState:
+    return IGState(
+        sel_feats=jnp.zeros((self.k_max, d), dtype),
+        count=jnp.zeros((), jnp.int32),
+        chol=jnp.eye(self.k_max, dtype=dtype),
+        value=jnp.zeros((), dtype),
+    )
+
+  def _cross(self, state, cand_feats):
+    k_sc = self._k(state.sel_feats, cand_feats)
+    row_live = (jnp.arange(self.k_max) < state.count)[:, None]
+    k_sc = jnp.where(row_live, k_sc, 0.0)
+    return jax.scipy.linalg.solve_triangular(state.chol, k_sc, lower=True)
+
+  def gains(self, state, cand_feats):
+    c = self._cross(state, cand_feats)
+    k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
+    cond = jnp.maximum(k_vv + self.jitter - jnp.sum(c * c, axis=0), 1e-12)
+    return jnp.log(cond)
+
+  def update(self, state, feat):
+    c = self._cross(state, feat[None, :])[:, 0]
+    k_vv = self._k(feat[None], feat[None])[0, 0]
+    diag = jnp.sqrt(jnp.maximum(k_vv + self.jitter - jnp.sum(c * c), 1e-12))
+    i = state.count
+    row = jnp.where(jnp.arange(self.k_max) < i, c, 0.0)
+    row = row.at[i].set(diag)
+    chol = jax.lax.dynamic_update_slice(state.chol, row[None, :], (i, 0))
+    sel = jax.lax.dynamic_update_slice(state.sel_feats, feat[None, :], (i, 0))
+    gain = jnp.log(jnp.maximum(diag * diag, 1e-12))
+    return IGState(sel, i + 1, chol, state.value + gain)
+
+  def value(self, state):
+    return state.value
+
+
+class SatCovState(NamedTuple):
+  cover: Array        # (n_eval,) accumulated similarity mass per eval point
+  eval_feats: Array
+  eval_mask: Array
+  value: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SaturatedCoverage:
+  """Lin & Bilmes (2011) document-summarization objective:
+
+      f(S) = sum_i min( C_i(S), alpha * C_i(V) ),   C_i(S) = sum_{j in S} s_ij
+
+  Monotone submodular; the saturation alpha*C_i(V) rewards covering every
+  document a little instead of a few documents a lot.  ``total`` (C_i(V))
+  is supplied at init so the objective stays decomposable/local (Sec. 4.5):
+  each machine can use the saturation levels of its own partition.
+  """
+  kernel: str = "linear"
+  kernel_kwargs: tuple = ()
+  alpha: float = 0.25
+
+  def _sim(self, x, y):
+    return jnp.maximum(KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs)),
+                       0.0)
+
+  def init(self, eval_feats: Array, eval_mask: Array | None = None,
+           total: Array | None = None) -> SatCovState:
+    n = eval_feats.shape[0]
+    if eval_mask is None:
+      eval_mask = jnp.ones((n,), eval_feats.dtype)
+    cover = jnp.zeros((n,), jnp.float32)
+    return SatCovState(cover, eval_feats, eval_mask, jnp.zeros(()))
+
+  def _cap(self, state: SatCovState) -> Array:
+    total = jnp.sum(self._sim(state.eval_feats, state.eval_feats)
+                    * state.eval_mask[None, :], axis=1)
+    return self.alpha * total
+
+  def gains(self, state: SatCovState, cand_feats: Array) -> Array:
+    sim = self._sim(state.eval_feats, cand_feats)          # (ne, nc)
+    cap = self._cap(state)
+    new = jnp.minimum(state.cover[:, None] + sim, cap[:, None])
+    inc = new - jnp.minimum(state.cover, cap)[:, None]
+    denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    return (state.eval_mask @ inc) / denom
+
+  def update(self, state: SatCovState, feat: Array) -> SatCovState:
+    sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
+    cap = self._cap(state)
+    new_cover = state.cover + sim
+    denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    gain = jnp.sum((jnp.minimum(new_cover, cap) -
+                    jnp.minimum(state.cover, cap)) * state.eval_mask) / denom
+    return SatCovState(new_cover, state.eval_feats, state.eval_mask,
+                       state.value + gain)
+
+  def value(self, state: SatCovState) -> Array:
+    return state.value
+
+
+# ---------------------------------------------------------------------------
+# Graph cut (Sec. 6.3; non-monotone) -- index-based, explicit weight matrix
+# ---------------------------------------------------------------------------
+
+
+class CutState(NamedTuple):
+  w: Array        # (n, n) symmetric weights over the universe
+  in_s: Array     # (n,) {0,1} indicator of S restricted to the universe
+  value: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCut:
+  """f(S) = sum_{i in S, j not in S} w_ij on an explicit (small) graph.
+
+  Candidates are *universe indices* encoded as one-hot rows so the generic
+  greedy loop (which traffics in "feature" rows) applies unchanged: the
+  "feature" of node v is e_v, and gains/update recover the index by argmax.
+  The paper evaluates this on a 1,899-node social graph, so a dense,
+  replicated W is the intended regime.
+  """
+
+  def init_w(self, w: Array) -> CutState:
+    n = w.shape[0]
+    w = 0.5 * (w + w.T)
+    w = w * (1.0 - jnp.eye(n, dtype=w.dtype))  # zero diagonal
+    return CutState(w, jnp.zeros((n,), w.dtype), jnp.zeros((), w.dtype))
+
+  def gains(self, state: CutState, cand_feats: Array) -> Array:
+    # cand_feats: (nc, n) one-hot. gain(v) = deg_v - 2 * (W x)_v  for v not in S
+    wx = state.w @ state.in_s                  # (n,)
+    deg = jnp.sum(state.w, axis=1)
+    node_gain = deg - 2.0 * wx
+    return cand_feats @ node_gain
+
+  def update(self, state: CutState, feat: Array) -> CutState:
+    gain = self.gains(state, feat[None, :])[0]
+    in_s = jnp.maximum(state.in_s, feat)
+    return CutState(state.w, in_s, state.value + gain)
+
+  def value(self, state: CutState) -> Array:
+    return state.value
+
+
+# ---------------------------------------------------------------------------
+# Modular (additive) objective -- sanity baseline: GreeDi is exactly optimal
+# ---------------------------------------------------------------------------
+
+
+class ModState(NamedTuple):
+  weights: Array   # (d,) fixed linear weights
+  value: Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Modular:
+  """f(S) = sum_{v in S} relu(w . x_v): modular => distributed == centralized."""
+
+  def init_w(self, weights: Array) -> ModState:
+    return ModState(weights, jnp.zeros((), weights.dtype))
+
+  def gains(self, state: ModState, cand_feats: Array) -> Array:
+    return jnp.maximum(cand_feats @ state.weights, 0.0)
+
+  def update(self, state: ModState, feat: Array) -> ModState:
+    return ModState(state.weights,
+                    state.value + jnp.maximum(feat @ state.weights, 0.0))
+
+  def value(self, state: ModState) -> Array:
+    return state.value
+
+
+# ---------------------------------------------------------------------------
+# Brute force / exact evaluation helpers (tests & tiny benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def set_value(objective: Any, state0: Any, feats: Array, idx: Array,
+              mask: Array | None = None) -> Array:
+  """f({feats[i] for i in idx}) by replaying updates; mask skips entries."""
+  k = idx.shape[0]
+  if mask is None:
+    mask = jnp.ones((k,), bool)
+
+  def body(state, im):
+    i, live = im
+    new = objective.update(state, feats[i])
+    state = jax.tree.map(lambda a, b: jnp.where(live, a, b), new, state)
+    return state, ()
+
+  state, _ = jax.lax.scan(body, state0, (idx, mask))
+  return objective.value(state)

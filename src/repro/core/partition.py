@@ -1,0 +1,39 @@
+"""Random partitioning of the ground set (GreeDi step 1) + elasticity helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def random_partition(rng: Array, feats: Array, m: int):
+  """Uniformly-at-random partition into m equal parts (pad if needed).
+
+  Returns (parts (m, npp, d), mask (m, npp) bool, perm (m*npp,) int32 with -1
+  padding).  Uniform random assignment is what Theorems 8-11 assume.
+  """
+  n, d = feats.shape
+  npp = -(-n // m)  # ceil
+  perm = jax.random.permutation(rng, n)
+  pad = m * npp - n
+  perm_p = jnp.concatenate([perm, jnp.full((pad,), -1, perm.dtype)])
+  mask = perm_p >= 0
+  safe = jnp.maximum(perm_p, 0)
+  parts = feats[safe].reshape(m, npp, d)
+  parts = jnp.where(mask.reshape(m, npp)[..., None], parts, 0.0)
+  return parts, mask.reshape(m, npp), perm_p.reshape(m, npp)
+
+
+def repartition(rng: Array, feats: Array, m_new: int):
+  """Elastic re-partition: the number of logical partitions m is decoupled
+  from physical devices, so scaling the fleet up/down between GreeDi rounds is
+  just a fresh random_partition (the guarantees only need uniformity)."""
+  return random_partition(rng, feats, m_new)
+
+
+def shard_for_mesh(feats: Array, mesh, axis_names) -> Array:
+  """Lay the (already padded) ground set out across mesh data axes."""
+  from jax.sharding import NamedSharding, PartitionSpec as P
+  spec = P(axis_names)
+  return jax.device_put(feats, NamedSharding(mesh, spec))

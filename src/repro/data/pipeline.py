@@ -1,0 +1,108 @@
+"""Deterministic synthetic data pipeline, host-sharded.
+
+Every batch is a pure function of (seed, step, shard), so:
+  * restart-after-failure resumes mid-epoch with no iterator state to
+    checkpoint (the step counter *is* the data state);
+  * every data shard draws disjoint, reproducible token streams;
+  * elastic re-sharding (different shard count after restart) is just a
+    different (shard, num_shards) factorization of the same stream.
+
+Two sources:
+  * ``SyntheticLM``   -- Zipf-ish token sequences for LM training;
+  * ``EmbeddedCorpus``-- documents with feature embeddings (a Gaussian
+    mixture: clustered, so submodular selection has structure to find),
+    the substrate for GreeDi coreset selection (data/selection.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+  vocab: int
+  seq_len: int
+  global_batch: int
+  seed: int = 0
+  zipf_alpha: float = 1.2
+
+  def batch(self, step: int, *, shard: int = 0, num_shards: int = 1) -> dict:
+    """Returns the shard's slice of global batch ``step``."""
+    assert self.global_batch % num_shards == 0
+    b = self.global_batch // num_shards
+    key = jax.random.fold_in(jax.random.fold_in(
+        jax.random.PRNGKey(self.seed), step), shard)
+    u = jax.random.uniform(key, (b, self.seq_len + 1), minval=1e-6)
+    # inverse-CDF of a truncated power law ~ Zipf(alpha)
+    toks = (self.vocab * u ** self.zipf_alpha).astype(jnp.int32)
+    toks = jnp.clip(toks, 0, self.vocab - 1)
+    return {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+        "mask": jnp.ones((b, self.seq_len), jnp.float32),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddedCorpus:
+  """n documents; each has a feature embedding and a token sequence.
+
+  Embeddings come from a k-cluster Gaussian mixture on the unit sphere, so
+  facility-location selection has real cluster structure (the regime of the
+  paper's Theorems 8-9: dense alpha-neighborhoods around exemplars).
+  """
+  n_docs: int
+  feat_dim: int
+  vocab: int
+  seq_len: int
+  n_clusters: int = 32
+  seed: int = 0
+
+  def features(self) -> Array:
+    key = jax.random.PRNGKey(self.seed)
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (self.n_clusters, self.feat_dim))
+    centers = centers / jnp.linalg.norm(centers, axis=1, keepdims=True)
+    assign = jax.random.randint(ka, (self.n_docs,), 0, self.n_clusters)
+    noise = 0.3 * jax.random.normal(kn, (self.n_docs, self.feat_dim))
+    f = centers[assign] + noise
+    return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+  def cluster_assignments(self) -> Array:
+    key = jax.random.PRNGKey(self.seed)
+    _, ka, _ = jax.random.split(key, 3)
+    return jax.random.randint(ka, (self.n_docs,), 0, self.n_clusters)
+
+  def tokens_for(self, doc_ids: Array) -> dict:
+    """Deterministic token sequences for the given docs.  Tokens are drawn
+    from a cluster-specific vocabulary band, so models trained on a coreset
+    that covers all clusters see the full token distribution."""
+    key = jax.random.PRNGKey(self.seed + 1)
+    assign = self.cluster_assignments()[doc_ids]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(doc_ids)
+    band = self.vocab // self.n_clusters
+
+    def one(k, c):
+      u = jax.random.uniform(k, (self.seq_len + 1,), minval=1e-6)
+      t = (band * u ** 1.1).astype(jnp.int32) + c * band
+      return jnp.clip(t, 0, self.vocab - 1)
+
+    toks = jax.vmap(one)(keys, assign)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:],
+            "mask": jnp.ones((doc_ids.shape[0], self.seq_len), jnp.float32)}
+
+
+def batches_from_indices(corpus: EmbeddedCorpus, indices: np.ndarray,
+                         batch_size: int, steps: int, seed: int = 0):
+  """Cycle batches over a (GreeDi-) selected index set."""
+  rng = np.random.default_rng(seed)
+  idx = np.asarray(indices)
+  for step in range(steps):
+    take = rng.choice(idx, size=batch_size, replace=len(idx) < batch_size)
+    yield corpus.tokens_for(jnp.asarray(take))

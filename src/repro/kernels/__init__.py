@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), validated against
+the pure-jnp oracles in ref.py via ops.py's dispatching wrappers.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: causal GQA flash attention (training / prefill).
+
+The LM substrate's perf-critical compute layer.  Online-softmax tiling: the
+(Lq, Lk) logit matrix never exists in HBM; (BQ, dh) query tiles stay resident
+in VMEM while (BK, dh) key/value tiles stream past.  Running max / normalizer
+/ accumulator live in VMEM scratch that persists across the innermost grid
+dimension.  Causal blocks above the diagonal are skipped entirely (the grid
+still visits them, but the body is predicated off -- on TPU this is a cheap
+scalar branch, and it halves the effective FLOPs).
+
+GQA is handled in the index map: query-head h reads kv-head h // group.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  lk_valid: int):
+  i = pl.program_id(2)
+  j = pl.program_id(3)
+  nk = pl.num_programs(3)
+
+  @pl.when(j == 0)
+  def _init():
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+
+  q_start = i * block_q
+  k_start = j * block_k
+  live = k_start < lk_valid
+  if causal:
+    live = jnp.logical_and(live, k_start <= q_start + block_q - 1)
+
+  @pl.when(live)
+  def _compute():
+    q = q_ref[0, 0].astype(jnp.float32) * scale        # (BQ, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                # (BK, dh)
+    v = v_ref[0, 0].astype(jnp.float32)                # (BK, dh)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (BQ, BK)
+    k_ids = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_ids < lk_valid
+    if causal:
+      q_ids = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                 (block_q, block_k), 0)
+      mask = jnp.logical_and(mask, k_ids <= q_ids)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, :1]                               # (BQ, 1)
+    l_prev = l_ref[:, :1]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+    l_ref[...] = jnp.broadcast_to(l_cur, l_ref.shape)
+
+  @pl.when(j == nk - 1)
+  def _finish():
+    l = jnp.maximum(l_ref[:, :1], 1e-30)
+    o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           scale: float | None = None,
+                           block_q: int = DEFAULT_BQ,
+                           block_k: int = DEFAULT_BK,
+                           lk_valid: int | None = None,
+                           interpret: bool = False):
+  """q: (B, H, L, dh); k, v: (B, Hkv, L, dh). L % block == 0 (ops.py pads).
+
+  ``lk_valid``: true (pre-padding) sequence length; padded keys are masked.
+  """
+  b, hq, lq, dh = q.shape
+  hkv, lk = k.shape[1], k.shape[2]
+  assert lq == lk, "training/prefill kernel assumes self-attention"
+  assert lq % block_q == 0 and lk % block_k == 0, (lq, lk, block_q, block_k)
+  group = hq // hkv
+  if scale is None:
+    scale = dh ** -0.5
+  if lk_valid is None:
+    lk_valid = lk
+
+  grid = (b, hq, lq // block_q, lk // block_k)
+  return pl.pallas_call(
+      functools.partial(_flash_kernel, scale=scale, causal=causal,
+                        block_q=block_q, block_k=block_k, lk_valid=lk_valid),
+      grid=grid,
+      in_specs=[
+          pl.BlockSpec((1, 1, block_q, dh),
+                       lambda b_, h, i, j: (b_, h, i, 0)),
+          pl.BlockSpec((1, 1, block_k, dh),
+                       lambda b_, h, i, j: (b_, h // group, j, 0)),
+          pl.BlockSpec((1, 1, block_k, dh),
+                       lambda b_, h, i, j: (b_, h // group, j, 0)),
+      ],
+      out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                             lambda b_, h, i, j: (b_, h, i, 0)),
+      out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+      scratch_shapes=[
+          pltpu.VMEM((block_q, dh), jnp.float32),
+          pltpu.VMEM((block_q, 128), jnp.float32),
+          pltpu.VMEM((block_q, 128), jnp.float32),
+      ],
+      interpret=interpret,
+  )(q, k, v)

@@ -1,0 +1,104 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, dtype promotion, and backend dispatch:
+on the CPU container the kernels execute in interpret mode (the kernel body
+runs as traced jnp ops -- bit-accurate vs the TPU lowering semantics), on TPU
+they compile to Mosaic.  ``force_xla=True`` routes to the pure-jnp reference
+(used to A/B the kernels and by tiny shapes where tiling is overhead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.facility_gain import facility_gain_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pairwise import pairwise_pallas
+
+Array = jax.Array
+
+
+def _interpret() -> bool:
+  return jax.default_backend() != "tpu"
+
+
+def _pad_rows(x: Array, mult: int, value=0.0) -> Array:
+  n = x.shape[0]
+  pad = (-n) % mult
+  if pad == 0:
+    return x
+  return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1),
+                 constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
+                                             "block_n", "force_xla"))
+def facility_gain(eval_feats: Array, cand_feats: Array, cov: Array,
+                  eval_mask: Array, *, kernel: str = "linear", h: float = 0.75,
+                  block_m: int = 256, block_n: int = 256,
+                  force_xla: bool = False) -> Array:
+  """Unnormalized facility-location gains (nc,) -- see facility_gain.py."""
+  if force_xla:
+    return ref.facility_gain_ref(eval_feats, cand_feats, cov, eval_mask,
+                                 kernel=kernel, h=h)
+  ne, nc = eval_feats.shape[0], cand_feats.shape[0]
+  bm, bn = min(block_m, _ceil_mult(ne)), min(block_n, _ceil_mult(nc))
+  ev = _pad_rows(eval_feats, bm)
+  cd = _pad_rows(cand_feats, bn)
+  cv = _pad_rows(cov, bm, value=jnp.inf)   # inf cover => padded rows gain 0
+  mk = _pad_rows(eval_mask, bm, value=0.0)
+  out = facility_gain_pallas(ev, cd, cv, mk, kernel=kernel, h=h, block_m=bm,
+                             block_n=bn, interpret=_interpret())
+  return out[:nc]
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_x",
+                                             "block_y", "force_xla"))
+def pairwise(x: Array, y: Array, *, kernel: str = "rbf", h: float = 0.75,
+             block_x: int = 256, block_y: int = 256,
+             force_xla: bool = False) -> Array:
+  """Similarity matrix (nx, ny) float32 -- see pairwise.py."""
+  if force_xla:
+    return ref.pairwise_ref(x, y, kernel=kernel, h=h)
+  nx, ny = x.shape[0], y.shape[0]
+  bx, by = min(block_x, _ceil_mult(nx)), min(block_y, _ceil_mult(ny))
+  xp = _pad_rows(x, bx)
+  yp = _pad_rows(y, by)
+  out = pairwise_pallas(xp, yp, kernel=kernel, h=h, block_x=bx, block_y=by,
+                        interpret=_interpret())
+  return out[:nx, :ny]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "force_xla"))
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, force_xla: bool = False) -> Array:
+  """Causal GQA attention (B, H, L, dh) -- see flash_attention.py."""
+  if force_xla:
+    return ref.mha_ref(q, k, v, causal=causal, scale=scale)
+  lq = q.shape[2]
+  bq = min(block_q, _ceil_mult(lq))
+  bk = min(block_k, _ceil_mult(lq))
+  pad = (-lq) % max(bq, bk)
+  if pad:
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+  else:
+    qp, kp, vp = q, k, v
+  out = flash_attention_pallas(qp, kp, vp, causal=causal, scale=scale,
+                               block_q=bq, block_k=bk, lk_valid=lq,
+                               interpret=_interpret())
+  return out[:, :, :lq]
+
+
+def _ceil_mult(n: int) -> int:
+  """Largest power-of-two block <= 256 that keeps padding overhead sane."""
+  for b in (256, 128, 64, 32, 16, 8):
+    if n >= b:
+      return b
+  return 8

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each Pallas kernel must match its oracle to numerical tolerance across the
+shape/dtype sweeps in tests/test_kernels.py (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _sim(ev: Array, cd: Array, kernel: str, h: float) -> Array:
+  if kernel == "linear":
+    return ev @ cd.T
+  if kernel == "rbf":
+    e2 = jnp.sum(ev * ev, axis=-1, keepdims=True)
+    c2 = jnp.sum(cd * cd, axis=-1, keepdims=True)
+    d2 = jnp.maximum(e2 - 2.0 * (ev @ cd.T) + c2.T, 0.0)
+    return jnp.exp(-d2 / (h * h))
+  raise ValueError(kernel)
+
+
+def facility_gain_ref(eval_feats: Array, cand_feats: Array, cov: Array,
+                      eval_mask: Array, *, kernel: str = "linear",
+                      h: float = 0.75) -> Array:
+  """Unnormalized marginal coverage gains: (nc,) float32.
+
+  gain[j] = sum_i mask_i * max(sim(e_i, c_j) - cov_i, 0)
+  """
+  sim = _sim(eval_feats.astype(jnp.float32), cand_feats.astype(jnp.float32),
+             kernel, h)
+  inc = jnp.maximum(sim - cov.astype(jnp.float32)[:, None], 0.0)
+  return eval_mask.astype(jnp.float32) @ inc
+
+
+def pairwise_ref(x: Array, y: Array, *, kernel: str = "rbf",
+                 h: float = 0.75) -> Array:
+  """Full similarity matrix (nx, ny) float32."""
+  return _sim(x.astype(jnp.float32), y.astype(jnp.float32), kernel, h)
+
+
+def mha_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
+            scale: float | None = None) -> Array:
+  """Reference GQA attention. q: (B, H, Lq, dh); k, v: (B, Hkv, Lk, dh)."""
+  b, hq, lq, dh = q.shape
+  hkv = k.shape[1]
+  group = hq // hkv
+  if scale is None:
+    scale = dh ** -0.5
+  kr = jnp.repeat(k, group, axis=1)
+  vr = jnp.repeat(v, group, axis=1)
+  logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                      kr.astype(jnp.float32)) * scale
+  if causal:
+    lk = k.shape[2]
+    mask = jnp.arange(lq)[:, None] + (lk - lq) >= jnp.arange(lk)[None, :]
+    logits = jnp.where(mask, logits, -1e30)
+  p = jax.nn.softmax(logits, axis=-1)
+  out = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+  return out.astype(q.dtype)

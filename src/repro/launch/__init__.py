@@ -1,0 +1,3 @@
+# Launch layer: mesh definitions, AOT dry-run, training driver.
+# NOTE: do not import repro.launch.dryrun from library code -- importing it
+# sets XLA_FLAGS (512 host devices) before jax initializes.

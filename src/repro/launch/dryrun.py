@@ -1,0 +1,379 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# NOTE: the two lines above MUST run before any other import (jax locks the
+# device count on first init), which is why they precede the module docstring
+# and the __future__ import is omitted.
+_DOC = """Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for every cell
+we build ShapeDtypeStruct stand-ins (no allocation), jit with explicit
+in/out shardings on the production mesh, ``.lower().compile()``, and report
+
+  * memory_analysis()   -- per-device bytes (fits / doesn't fit)
+  * cost_analysis()     -- per-device HLO FLOPs + bytes accessed
+  * collective bytes    -- parsed from the partitioned HLO text
+
+which benchmarks/roofline.py turns into the three roofline terms.
+
+The XLA_FLAGS line above MUST run before any other import so the CPU
+platform exposes 512 placeholder devices.  Do not set that flag anywhere
+else (smoke tests and benchmarks want the real single device).
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.launch.mesh import dp_axes_of, dp_size_of, make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models.registry import Model, Parallelism, build_model
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.train_step import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES: dict[str, dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+# the paper's own technique as a dry-run cell: sharded GreeDi selection
+SELECT_SHAPES = {
+    "select_1m": dict(kind="select", n=1 << 20, d=256, kappa=64, k=64),
+    # perf hillclimb #3: precomputed-similarity implementation (same math)
+    "select_1m_fast": dict(kind="select", n=1 << 20, d=256, kappa=64, k=64,
+                           fast=True),
+}
+
+
+def applicable(cfg: ModelConfig, shape: str) -> bool:
+  if shape == "long_500k":
+    return cfg.subquadratic          # sub-quadratic archs only (DESIGN.md §5)
+  return True
+
+
+def parallelism_for(cfg: ModelConfig, mesh, kind: str = "train") -> Parallelism:
+  dp = dp_axes_of(mesh)
+  msz = mesh.shape["model"]
+  # Serving has no optimizer state, so FSDP's per-use weight all-gather is
+  # pure overhead whenever the TP-sharded weights fit in HBM: at bf16 the
+  # budget is ~10 GB/device.  (Perf hillclimb #1: baseline FSDP-for-serving
+  # made every decode step all-gather the whole model -- see EXPERIMENTS.md.)
+  fsdp = True
+  if kind != "train":
+    # 12 GB bf16-weight budget: llama-3.2-vision-90b (11.25 GB/device) serves
+    # TP-only; only grok-314B (39 GB/device) keeps weight-gathered FSDP.
+    fsdp = cfg.param_count() * 2.0 / msz > 12e9
+  ep = bool(cfg.moe.num_experts) and cfg.moe.num_experts % msz == 0
+  psz = mesh.shape.get("pod", 1)
+  ep_pod = (bool(cfg.moe.num_experts) and not ep and psz > 1
+            and cfg.moe.num_experts % psz == 0)
+  return Parallelism(
+      dp_axes=dp, model_axis="model", ep=ep, ep_pod=ep_pod,
+      fsdp=fsdp, dp_size=dp_size_of(mesh), model_size=msz, seq_shard=True,
+      dp_axis_sizes=tuple(mesh.shape[a] for a in dp))
+
+
+def _shard(mesh, tree_specs):
+  return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                      is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_structs(cfg: ModelConfig, b: int, s: int, dp) -> tuple[dict, dict]:
+  structs = {"tokens": SDS((b, s), jnp.int32),
+             "labels": SDS((b, s), jnp.int32),
+             "mask": SDS((b, s), jnp.float32)}
+  specs = {"tokens": P(dp, None), "labels": P(dp, None),
+           "mask": P(dp, None)}
+  dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+  if cfg.family == "encdec":
+    structs["frames"] = SDS((b, cfg.encoder.n_frames, cfg.d_model), dt)
+    specs["frames"] = P(dp, None, None)
+  if cfg.family == "vlm":
+    structs["img_embeds"] = SDS((b, cfg.n_img_tokens, cfg.d_model), dt)
+    specs["img_embeds"] = P(dp, None, None)
+  return structs, specs
+
+
+def build_cell(arch: str, shape: str, mesh, remat: str = "full"):
+  """Returns (fn, arg_structs, in_shardings, out_shardings)."""
+  cfg = get_config(arch)
+  sh = SHAPES[shape]
+  model = build_model(cfg, remat=remat)
+  par = parallelism_for(cfg, mesh, kind=sh["kind"])
+  dp = par.dp_axes
+
+  params_s = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+  pspecs = model.param_specs(par)
+  pshard = _shard(mesh, pspecs)
+
+  b, s = sh["batch"], sh["seq"]
+
+  if sh["kind"] == "train":
+    microbatches = sh.get("microbatches", 8)
+    opt_s = jax.eval_shape(init_opt_state, params_s)
+    ospecs = type(opt_s)(P(), pspecs, pspecs)
+    oshard = _shard(mesh, ospecs)
+    batch_s, bspecs = _batch_structs(cfg, b // microbatches, s, dp)
+    if microbatches > 1:  # leading microbatch axis, scanned sequentially
+      batch_s = jax.tree.map(
+          lambda x: SDS((microbatches,) + x.shape, x.dtype), batch_s)
+      bspecs = jax.tree.map(lambda p_: P(None, *p_), bspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+    bshard = _shard(mesh, bspecs)
+    step = make_train_step(model, OptConfig(), par, microbatches=microbatches)
+    metric_shard = NamedSharding(mesh, P())
+    fn = step
+    args = (params_s, opt_s, batch_s)
+    in_sh = (pshard, oshard, bshard)
+    out_sh = (pshard, oshard, jax.tree.map(lambda _: metric_shard,
+                                           jax.eval_shape(step, *args)[2]))
+    return fn, args, in_sh, out_sh
+
+  batch_shardable = b > 1
+  memory_struct = None
+  if cfg.family == "vlm":
+    memory_struct = SDS((b, cfg.n_img_tokens, cfg.d_model), jnp.bfloat16)
+  if cfg.family == "encdec":
+    memory_struct = SDS((b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+  cache_s = jax.eval_shape(
+      lambda: model.init_cache(
+          b, s, memory=(jnp.zeros(memory_struct.shape, memory_struct.dtype)
+                        if memory_struct is not None else None)))
+  cspecs = model.cache_specs(par, batch_shardable=batch_shardable)
+  cshard = _shard(mesh, cspecs)
+
+  if sh["kind"] == "prefill":
+    batch_s, bspecs = _batch_structs(cfg, b, s, dp)
+    del batch_s["labels"], batch_s["mask"]
+    del bspecs["labels"], bspecs["mask"]
+    bshard = _shard(mesh, bspecs)
+
+    def fn(params, batch, caches):
+      return model.prefill(params, batch, caches, par)
+
+    args = (params_s, batch_s, cache_s)
+    in_sh = (pshard, bshard, cshard)
+    vspec = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    out_sh = (NamedSharding(mesh, P(dp if batch_shardable else None,
+                                    vspec)), cshard)
+    return fn, args, in_sh, out_sh
+
+  # decode
+  tok_s = SDS((b, 1), jnp.int32)
+  pos_s = SDS((), jnp.int32)
+  tok_spec = P(dp, None) if batch_shardable else P(None, None)
+
+  def fn(params, token, pos, caches):
+    return model.decode_step(params, token, pos, caches, par)
+
+  args = (params_s, tok_s, pos_s, cache_s)
+  in_sh = (pshard, NamedSharding(mesh, tok_spec), NamedSharding(mesh, P()),
+           cshard)
+  vspec = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+  out_sh = (NamedSharding(mesh, P(dp if batch_shardable else None, vspec)),
+            cshard)
+  return fn, args, in_sh, out_sh
+
+
+def build_select_cell(shape: str, mesh):
+  """The paper technique itself on the production mesh."""
+  from repro.core import objectives as O
+  from repro.core.greedi import (greedi_hierarchical, greedi_sharded,
+                                 greedi_sharded_fast)
+  sh = SELECT_SHAPES[shape]
+  n, d = sh["n"], sh["d"]
+  obj = O.FacilityLocation(kernel="linear")
+  multi = "pod" in mesh.axis_names
+
+  def fn(feats):
+    if sh.get("fast"):
+      # perf iteration: every mesh device is a GreeDi machine (m = chips),
+      # so the local partition (and its cached Gram matrix) is n/chips --
+      # with only the data axis, each device held a 65k-row partition and
+      # the cached similarity blew up to 17 GB/device.
+      axes = ("pod", "data", "model") if multi else ("data", "model")
+      return greedi_sharded_fast(feats, mesh=mesh, kappa=sh["kappa"],
+                                 k_final=sh["k"], axis_names=axes)
+    if multi:
+      return greedi_hierarchical(feats, mesh=mesh, kappa=sh["kappa"],
+                                 k_final=sh["k"], objective=obj)
+    return greedi_sharded(feats, mesh=mesh, kappa=sh["kappa"],
+                          k_final=sh["k"], objective=obj,
+                          axis_names=("data",))
+
+  args = (SDS((n, d), jnp.float32),)
+  if sh.get("fast"):
+    axes = ("pod", "data", "model") if multi else ("data", "model")
+    in_sh = (NamedSharding(mesh, P(axes, None)),)
+  else:
+    in_sh = (NamedSharding(mesh, P(dp_axes_of(mesh), None)),)
+  return fn, args, in_sh, None
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLL_RE = re.compile(
+    r"(\w+)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[\w-]*\(")
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+  """Per-device bytes moved by each collective kind (partitioned module)."""
+  out: dict[str, float] = {}
+  for line in hlo_text.splitlines():
+    line = line.strip()
+    m = re.search(r"=\s+(.+?)\s+(all-gather|all-reduce|reduce-scatter"
+                  r"|all-to-all|collective-permute)(-start|-done)?\(", line)
+    if not m or (m.group(3) == "-done"):
+      continue
+    kind = m.group(2)
+    shapes = SHAPE_RE.findall(m.group(1))
+    total = 0.0
+    for dt, dims in shapes:
+      if dt not in DTYPE_BYTES:
+        continue
+      sz = DTYPE_BYTES[dt]
+      for x in dims.split(","):
+        if x:
+          sz *= int(x)
+      total += sz
+    out[kind] = out.get(kind, 0.0) + total
+  return out
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             verbose: bool = True, cost_pass: bool = True) -> dict:
+  mesh = make_production_mesh(multi_pod=multi_pod)
+  t0 = time.time()
+  if arch == "greedi-select":
+    fn, args, in_sh, out_sh = build_select_cell(shape, mesh)
+  else:
+    fn, args, in_sh, out_sh = build_cell(arch, shape, mesh)
+  with mesh:
+    jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+  mem = compiled.memory_analysis()
+  cost = compiled.cost_analysis() or {}
+  coll = collective_bytes(compiled.as_text())
+
+  # ---- exact-FLOPs cost pass: re-lower with every scan fully unrolled.
+  # XLA's cost analysis counts a while-loop body once regardless of trip
+  # count, so the rolled compile above undercounts; the unrolled *lowering*
+  # (no XLA compile, global shapes) gives exact whole-step HLO FLOPs,
+  # including remat recompute.
+  cost_unrolled = {}
+  if cost_pass:
+    from repro.util import unroll_scans
+    try:
+      # fresh wrapper object: jax's tracing cache is keyed on function
+      # identity and would otherwise reuse the rolled jaxpr, silently
+      # ignoring the unroll switch (verified on a minimal case).
+      fresh = lambda *a: fn(*a)  # noqa: E731
+      with unroll_scans(), mesh:
+        lo_u = jax.jit(fresh, in_shardings=in_sh, out_shardings=out_sh
+                       ).lower(*args)
+      cost_unrolled = lo_u.cost_analysis() or {}
+    except Exception as e:
+      cost_unrolled = {"error": repr(e)[:200]}
+
+  rec = {
+      "arch": arch, "shape": shape,
+      "mesh": "2x16x16" if multi_pod else "16x16",
+      "chips": 512 if multi_pod else 256,
+      "compile_s": round(time.time() - t0, 1),
+      "flops_per_device": float(cost.get("flops", 0.0)),
+      "bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+      "flops_global_exact": float(cost_unrolled.get("flops", 0.0)),
+      "bytes_global_exact": float(cost_unrolled.get("bytes accessed", 0.0)),
+      "cost_pass_error": cost_unrolled.get("error"),
+      "collective_bytes_per_device": coll,
+      "mem": {
+          "argument_gb": mem.argument_size_in_bytes / 1e9,
+          "output_gb": mem.output_size_in_bytes / 1e9,
+          "temp_gb": mem.temp_size_in_bytes / 1e9,
+          "alias_gb": mem.alias_size_in_bytes / 1e9,
+      },
+  }
+  if verbose:
+    peak = (rec["mem"]["argument_gb"] + rec["mem"]["temp_gb"]
+            - rec["mem"]["alias_gb"])
+    print(f"[dryrun] {arch:22s} {shape:12s} {rec['mesh']:8s} "
+          f"compile={rec['compile_s']:6.1f}s "
+          f"flops/dev={rec['flops_per_device']:.3e} "
+          f"mem(arg+temp-alias)={peak:6.2f}GB "
+          f"coll={ {k: f'{v/1e6:.1f}MB' for k, v in coll.items()} }",
+          flush=True)
+  return rec
+
+
+def all_cells() -> list[tuple[str, str]]:
+  cells = [(a, s) for a in ARCHS for s in SHAPES
+           if applicable(get_config(a), s)]
+  cells += [("greedi-select", s) for s in SELECT_SHAPES]
+  return cells
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default=None)
+  ap.add_argument("--shape", default=None)
+  ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                  default="both")
+  ap.add_argument("--out", default=None, help="append JSONL records here")
+  args = ap.parse_args()
+
+  cells = all_cells()
+  if args.arch:
+    cells = [(a, s) for a, s in cells if a == args.arch]
+  if args.shape:
+    cells = [(a, s) for a, s in cells if s == args.shape]
+  meshes = {"single": [False], "multi": [True],
+            "both": [False, True]}[args.mesh]
+
+  failures = []
+  for arch, shape in cells:
+    for multi in meshes:
+      try:
+        rec = run_cell(arch, shape, multi_pod=multi)
+        if args.out:
+          with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+      except Exception as e:  # a dry-run failure is a bug in the system
+        failures.append((arch, shape, multi, repr(e)[:300]))
+        print(f"[dryrun] FAIL {arch} {shape} multi={multi}: {e!r}",
+              flush=True)
+  if failures:
+    print(f"[dryrun] {len(failures)} FAILURES")
+    sys.exit(1)
+  print("[dryrun] all cells compiled OK")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+A v5e pod is 16x16 = 256 chips; the multi-pod target is 2 pods = 512 chips
+with a leading "pod" axis (DCI links between pods, ICI within).  Meshes are
+built by a FUNCTION so importing this module never touches jax device state.
+
+A ``stage`` axis slot for pipeline parallelism is deliberately absent: with
+512 chips, DP x TP covers every assigned architecture (DESIGN.md §6); add a
+leading stage axis here if scaling past ~10T params.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+  shape = (2, 16, 16) if multi_pod else (16, 16)
+  axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+  return jax.make_mesh(shape, axes,
+                       axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(4, 2), axes=("data", "model")):
+  """Small mesh over forced host devices (tests / examples)."""
+  return jax.make_mesh(shape, axes,
+                       axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes_of(mesh) -> tuple:
+  return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size_of(mesh) -> int:
+  n = 1
+  for a in dp_axes_of(mesh):
+    n *= mesh.shape[a]
+  return n

@@ -1,0 +1,4 @@
+from repro.models.config import ModelConfig
+from repro.models.registry import Model, Parallelism, build_model
+
+__all__ = ["ModelConfig", "Model", "Parallelism", "build_model"]

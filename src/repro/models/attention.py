@@ -1,0 +1,244 @@
+"""Attention in three lowerings, all O(L) memory:
+
+  * ``chunked_attention`` -- pure-JAX online-softmax (flash) attention via
+    nested lax.scan.  This is the XLA path used by the CPU container and the
+    dry-run; on TPU the Pallas kernel (kernels/flash_attention.py) is used
+    instead (ops-level dispatch in ``self_attention``).
+  * ``local_attention``   -- sliding-window attention with per-chunk
+    dynamic-slice of the KV stream: compute is O(L * window), not O(L^2)
+    (RecurrentGemma's local-attn blocks; required for long-context shapes).
+  * ``decode_attention``  -- one query token vs a (possibly windowed) cache.
+
+GQA never materializes repeated KV heads: queries are reshaped to
+(B, Hkv, G, L, dh) and contracted against the raw KV tensors.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.util import scan as _uscan
+
+Array = jax.Array
+NEG = -1e30
+
+
+def _gqa_split(q: Array, n_kv: int) -> Array:
+  b, h, l, dh = q.shape
+  return q.reshape(b, n_kv, h // n_kv, l, dh)
+
+
+def _full_attention(q, k, v, *, causal, window, scale, q_chunk=1024,
+                    k_chunk=1024):
+  """Direct (materialized-logits) attention.  Used only under the dry-run's
+  cost pass (util.unroll_scans): it performs exactly the FLOPs the chunked
+  scan executes -- including the causal block skip (per q chunk, only the
+  k range up to the diagonal is touched, via static slices) -- but lowers
+  without a while loop, so HLO cost analysis sees true trip-count-scaled
+  FLOPs.  Never executed (AOT only)."""
+  b, h, lq, dh = q.shape
+  hkv, lk = k.shape[1], k.shape[2]
+  scale = dh ** -0.5 if scale is None else scale
+  q5 = _gqa_split(q, hkv).astype(jnp.float32) * scale
+
+  def block(qs, ks_, vs_, q0, k0):
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qs, ks_.astype(jnp.float32))
+    qpos = q0 + jnp.arange(qs.shape[3])
+    kpos = k0 + jnp.arange(ks_.shape[2])
+    mask = jnp.ones((qs.shape[3], ks_.shape[2]), bool)
+    if causal:
+      mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+      mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgqc,bkcd->bkgqd", p, vs_.astype(jnp.float32))
+
+  if not causal or lq % min(q_chunk, lq) != 0 or lq != lk:
+    out = block(q5, k, v, 0, 0)
+    return out.reshape(b, h, lq, dh).astype(q.dtype)
+
+  qc = min(q_chunk, lq)
+  kc = min(k_chunk, lk)
+  outs = []
+  for i in range(lq // qc):
+    k_end = min(((i * qc + qc - 1) // kc + 1) * kc, lk)  # causal skip
+    outs.append(block(q5[:, :, :, i * qc: (i + 1) * qc], k[:, :, :k_end],
+                      v[:, :, :k_end], i * qc, 0))
+  out = jnp.concatenate(outs, axis=3)
+  return out.reshape(b, h, lq, dh).astype(q.dtype)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      q_chunk: int = 256, k_chunk: int = 1024,
+                      window: int = 0, scale: float | None = None) -> Array:
+  """q: (B, H, Lq, dh); k, v: (B, Hkv, Lk, dh) with Lq == Lk.
+
+  Memory note: scan-backward saves the (qc, dh) f32 accumulator carry once
+  per k step, so the live residual footprint scales with (qc / kc) * L.
+  Small q chunks + large k chunks + checkpointed q_step keep the whole
+  backward under ~2 GB/device at 4k x 256 global batch."""
+  from repro.util import _unrolling
+  if _unrolling():
+    return _full_attention(q, k, v, causal=causal, window=window, scale=scale)
+  b, h, lq, dh = q.shape
+  hkv, lk = k.shape[1], k.shape[2]
+  scale = dh ** -0.5 if scale is None else scale
+  q_chunk = min(q_chunk, lq)
+  k_chunk = min(k_chunk, lk)
+  lq_true, lk_true = lq, lk
+  pq, pk = (-lq) % q_chunk, (-lk) % k_chunk
+  if pq or pk:  # pad to chunk multiples; padded keys masked below
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+    lq, lk = lq + pq, lk + pk
+  nq, nk = lq // q_chunk, lk // k_chunk
+
+  q5 = _gqa_split(q, hkv)                                    # (B,Hkv,G,L,dh)
+  g = q5.shape[2]
+  qs = jnp.moveaxis(q5.reshape(b, hkv, g, nq, q_chunk, dh), 3, 0)
+  ks = jnp.moveaxis(k.reshape(b, hkv, nk, k_chunk, dh), 2, 0)
+  vs = jnp.moveaxis(v.reshape(b, hkv, nk, k_chunk, dh), 2, 0)
+
+  def q_step(_, qi_qc):
+    qi, qc = qi_qc
+    qc32 = qc.astype(jnp.float32) * scale
+
+    def k_step(carry, ki_kc_vc):
+      m, l, acc = carry
+      ki, kc, vc = ki_kc_vc
+
+      def compute(carry):
+        m, l, acc = carry
+        s = jnp.einsum("bkgqd,bkcd->bkgqc", qc32, kc.astype(jnp.float32))
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+        kpos = ki * k_chunk + jnp.arange(k_chunk)
+        mask = jnp.broadcast_to(kpos[None, :] < lk_true, (q_chunk, k_chunk))
+        if causal:
+          mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+          mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32))
+        return (m_new, l_new, acc * alpha[..., None] + pv)
+
+      if causal:
+        # causal block skip: blocks fully above the diagonal contribute
+        # nothing -- branch them out entirely (lax.cond executes one side),
+        # halving the attention FLOPs of the whole pass.
+        live = ki * k_chunk <= qi * q_chunk + q_chunk - 1
+        return jax.lax.cond(live, compute, lambda c: c, (m, l, acc)), ()
+      return compute((m, l, acc)), ()
+
+    m0 = jnp.full((b, hkv, g, q_chunk), NEG, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, q_chunk), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, q_chunk, dh), jnp.float32)
+    # checkpoint: recompute the (BQ, BK) probability block in the backward
+    # pass instead of saving nk of them (flash-attention backward)
+    (m, l, acc), _ = _uscan(
+        jax.checkpoint(k_step), (m0, l0, a0), (jnp.arange(nk), ks, vs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return (), out.astype(q.dtype)
+
+  _, outs = _uscan(jax.checkpoint(q_step), (),
+                   (jnp.arange(nq), qs))  # (nq,B,Hkv,G,qc,dh)
+  out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, lq, dh)
+  return out.reshape(b, h, lq, dh)[:, :, :lq_true]
+
+
+def local_attention(q: Array, k: Array, v: Array, *, window: int,
+                    q_chunk: int = 1024, scale: float | None = None) -> Array:
+  """Causal sliding-window attention, compute O(L * (window + q_chunk)).
+
+  Each q chunk attends to a dynamically-sliced KV span of static length
+  (window + q_chunk), so no O(L^2) logits exist anywhere.
+  """
+  b, h, lq, dh = q.shape
+  hkv, lk = k.shape[1], k.shape[2]
+  scale = dh ** -0.5 if scale is None else scale
+  q_chunk = min(q_chunk, lq)
+  assert lq % q_chunk == 0
+  span = min(window + q_chunk, lk)
+  nq = lq // q_chunk
+
+  q5 = _gqa_split(q, hkv)
+  g = q5.shape[2]
+  qs = jnp.moveaxis(q5.reshape(b, hkv, g, nq, q_chunk, dh), 3, 0)
+
+  def q_step(_, qi_qc):
+    qi, qc = qi_qc
+    q_start = qi * q_chunk
+    start = jnp.clip(q_start + q_chunk - span, 0, lk - span)
+    kc = jax.lax.dynamic_slice_in_dim(k, start, span, axis=2)
+    vc = jax.lax.dynamic_slice_in_dim(v, start, span, axis=2)
+    s = jnp.einsum("bkgqd,bkcd->bkgqc", qc.astype(jnp.float32) * scale,
+                   kc.astype(jnp.float32))
+    qpos = q_start + jnp.arange(q_chunk)
+    kpos = start + jnp.arange(span)
+    mask = (qpos[:, None] >= kpos[None, :]) & \
+           ((qpos[:, None] - kpos[None, :]) < window)
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqc,bkcd->bkgqd", p, vc.astype(jnp.float32))
+    return (), out.astype(q.dtype)
+
+  _, outs = _uscan(jax.checkpoint(q_step), (), (jnp.arange(nq), qs))
+  out = jnp.moveaxis(outs, 0, 3).reshape(b, hkv, g, lq, dh)
+  return out.reshape(b, h, lq, dh)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     length: Array, *, scale: float | None = None) -> Array:
+  """One new token vs the cache.  q: (B, H, 1, dh); caches (B, Hkv, S, dh);
+  ``length``: number of valid cache entries (scalar or (B,))."""
+  b, h, _, dh = q.shape
+  hkv, s_max = k_cache.shape[1], k_cache.shape[2]
+  scale = dh ** -0.5 if scale is None else scale
+  q5 = _gqa_split(q, hkv)[..., 0, :]                        # (B,Hkv,G,dh)
+  s = jnp.einsum("bkgd,bksd->bkgs", q5.astype(jnp.float32) * scale,
+                 k_cache.astype(jnp.float32))
+  valid = (jnp.arange(s_max) < length)[None, None, None, :]
+  s = jnp.where(valid, s, NEG)
+  p = jax.nn.softmax(s, axis=-1)
+  out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+  return out.reshape(b, h, 1, dh).astype(q.dtype)
+
+
+def cross_attention(q: Array, k: Array, v: Array,
+                    scale: float | None = None,
+                    q_chunk: int = 256) -> Array:
+  """Full (non-causal) attention over an encoder/image memory (short Lk).
+
+  Not chunked: under sequence parallelism the query axis arrives sharded
+  over the model axis, so the (Lq/sp, Lk) probability block is already small
+  per device, and scan-chunking a sharded axis triggers involuntary SPMD
+  rematerialization (observed).  Everything here is pointwise in Lq, so the
+  SP sharding propagates straight through.
+  """
+  b, h, lq, dh = q.shape
+  hkv = k.shape[1]
+  scale = dh ** -0.5 if scale is None else scale
+  q5 = _gqa_split(q, hkv)
+  s = jnp.einsum("bkgqd,bkcd->bkgqc", q5.astype(jnp.float32) * scale,
+                 k.astype(jnp.float32))
+  p = jax.nn.softmax(s, axis=-1)
+  out = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+  return out.reshape(b, h, lq, dh).astype(q.dtype)
+
+
+def self_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                   window: int = 0, use_pallas: bool | None = None) -> Array:
+  """Dispatch: Pallas flash kernel on TPU, chunked XLA elsewhere."""
+  if use_pallas is None:
+    use_pallas = jax.default_backend() == "tpu"
+  if use_pallas and causal and not window and q.shape[2] % 128 == 0:
+    from repro.kernels import ops as kops
+    return kops.flash_attention(q, k, v, causal=True)
+  if window:
+    return local_attention(q, k, v, window=window)
+  return chunked_attention(q, k, v, causal=causal)

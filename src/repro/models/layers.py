@@ -1,0 +1,92 @@
+"""Shared primitive layers: norms, rope, embeddings, initializers.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every apply
+function is pure.  Matmul params are stored (in_dim, out_dim) so the natural
+tensor-parallel sharding is a PartitionSpec on one of the two axes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+  fan_in = shape[0]
+  if scale is None:
+    scale = fan_in ** -0.5
+  return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+  return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6) -> Array:
+  dt = x.dtype
+  x = x.astype(jnp.float32)
+  var = jnp.mean(x * x, axis=-1, keepdims=True)
+  return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(jnp.float32))
+          ).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+  return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                          / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+  """x: (..., L, dh); positions: (L,) or broadcastable to x[..., :, 0]."""
+  dh = x.shape[-1]
+  freqs = rope_freqs(dh, theta)                       # (dh/2,)
+  angles = positions[..., :, None].astype(jnp.float32) * freqs  # (L, dh/2)
+  cos, sin = jnp.cos(angles), jnp.sin(angles)
+  x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+  out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+  return out.astype(x.dtype)
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+  g = x @ w_gate
+  u = x @ w_up
+  return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) @ w_down
+
+
+def gelu_mlp(x: Array, w_up: Array, w_down: Array) -> Array:
+  return jax.nn.gelu((x @ w_up).astype(jnp.float32)).astype(x.dtype) @ w_down
+
+
+def causal_conv1d(x: Array, w: Array, state: Array | None = None):
+  """Depthwise causal conv. x: (B, L, C); w: (W, C).
+
+  Returns (y, new_state) where state holds the last W-1 inputs (for decode).
+  """
+  width = w.shape[0]
+  if state is None:
+    pad = jnp.zeros(x.shape[:-2] + (width - 1, x.shape[-1]), x.dtype)
+  else:
+    pad = state
+  xp = jnp.concatenate([pad, x], axis=-2)             # (B, L+W-1, C)
+  y = jnp.zeros_like(x)
+  for i in range(width):
+    y = y + xp[..., i: i + x.shape[-2], :] * w[i]
+  new_state = xp[..., -(width - 1):, :]
+  return y, new_state
+
+
+def softmax_xent(logits: Array, labels: Array, mask: Array) -> Array:
+  """Mean masked token cross-entropy. logits (B,S,V); labels/mask (B,S).
+
+  The gold logit is extracted with a fused one-hot reduction instead of
+  take_along_axis: a gather across a vocab-sharded axis would force GSPMD to
+  all-gather the full (B, S, V) logits; the masked reduction keeps the vocab
+  axis sharded end-to-end (partial sums + one small psum).
+  """
+  logits = logits.astype(jnp.float32)
+  logz = jax.scipy.special.logsumexp(logits, axis=-1)
+  v = logits.shape[-1]
+  onehot = (labels[..., None] == jnp.arange(v)[None, None, :])
+  gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+  nll = (logz - gold) * mask
+  return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,128 @@
+"""Mixture-of-Experts FFN with capacity-based einsum dispatch (GSPMD-friendly).
+
+DeepSeekMoE-style: ``num_shared`` always-on experts + ``num_experts`` routed
+experts with top-k gating (gates renormalized over the top-k).  Dispatch uses
+the dense one-hot formulation (a la Mesh-TF / MaxText): tokens are grouped
+into (G, Sg) blocks, each group builds a (Sg, E, C) dispatch tensor, and
+expert compute is a single batched einsum against the (E, d, f) stacked
+expert weights.  This keeps every intermediate statically shaped and lets
+GSPMD shard the expert dimension (EP) or the FFN dimension (TP) purely via
+PartitionSpecs -- see registry.param_specs.
+
+Sharding constraints are applied inside so the big dispatch tensors never
+replicate: tokens stay on the data axes, experts on the model axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+Array = jax.Array
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+  d = cfg.d_model
+  e = cfg.moe
+  ks = jax.random.split(key, 5)
+  p = {
+      "router": dense_init(ks[0], (d, e.num_experts), jnp.float32),
+      "gate": dense_init(ks[1], (e.num_experts, d, e.d_expert), dtype),
+      "up": dense_init(ks[2], (e.num_experts, d, e.d_expert), dtype),
+      "down": dense_init(ks[3], (e.num_experts, e.d_expert, d), dtype),
+  }
+  if e.num_shared:
+    fs = e.num_shared * e.d_expert
+    kss = jax.random.split(ks[4], 3)
+    p["shared"] = {
+        "gate": dense_init(kss[0], (d, fs), dtype),
+        "up": dense_init(kss[1], (d, fs), dtype),
+        "down": dense_init(kss[2], (fs, d), dtype),
+    }
+  return p
+
+
+def _constrain(x, spec):
+  try:
+    return jax.lax.with_sharding_constraint(x, spec)
+  except Exception:
+    return x  # outside a mesh context (pure CPU smoke tests)
+
+
+def moe_ffn(x: Array, p: dict, cfg: ModelConfig, *,
+            group_size: int | None = None, dp_axes=("data",),
+            ep_axis: str | None = "model") -> tuple[Array, Array]:
+  """x: (B, S, d) -> (y, aux_loss).
+
+  ``ep_axis`` shards the expert dim of dispatch intermediates when the expert
+  count divides the axis; otherwise experts replicate and the FFN dim is
+  TP-sharded through the weight specs alone.
+  """
+  b, s, d = x.shape
+  e = cfg.moe
+  E, k = e.num_experts, e.top_k
+  t_true = b * s
+  sg = min(group_size or e.group_size, t_true)
+  pad = (-t_true) % sg
+  xf = x.reshape(t_true, d)
+  if pad:
+    xf = jnp.pad(xf, ((0, pad), (0, 0)))
+  t = t_true + pad
+  g = t // sg
+  xg = xf.reshape(g, sg, d)
+  # padded tokens must neither dispatch nor consume expert capacity
+  tok_valid = (jnp.arange(t) < t_true).reshape(g, sg)
+
+  logits = (xg.astype(jnp.float32) @ p["router"])            # (G,Sg,E)
+  probs = jax.nn.softmax(logits, axis=-1)
+  top_p, top_e = jax.lax.top_k(probs, k)                     # (G,Sg,k)
+  top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+  if sg <= 32:
+    cap = sg     # decode / tiny groups: exact routing, no capacity drops
+  else:
+    cap = max(int(sg * k * e.capacity_factor / E), 1)
+  onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)       # (G,Sg,k,E)
+  onehot = onehot * tok_valid[..., None, None]
+  # priority order: token-major, choice-minor (matches Switch/MaxText)
+  flat = onehot.reshape(g, sg * k, E)
+  pos = jnp.cumsum(flat, axis=1) - flat                      # rank per expert
+  keep = pos < cap
+  slot = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+  disp4 = (flat * keep)[..., None] * slot                    # (G,Sg*k,E,C)
+  disp4 = disp4.reshape(g, sg, k, E, cap)
+  dispatch = jnp.sum(disp4, axis=2)                          # (G,Sg,E,C)
+  combine = jnp.sum(disp4 * top_p[..., None, None], axis=2)  # (G,Sg,E,C)
+
+  espec = ep_axis  # caller passes None when E does not divide the mesh axis
+  if espec is not None and espec in tuple(dp_axes):
+    # EP over a dp axis (e.g. "pod"): token groups shard over the remaining
+    # dp axes; GSPMD inserts the cross-pod all-to-all for dispatch/combine.
+    dp_axes = tuple(a for a in dp_axes if a != espec)
+  dispatch = _constrain(dispatch.astype(x.dtype), P(dp_axes, None, espec, None))
+  combine = _constrain(combine.astype(jnp.float32), P(dp_axes, None, espec, None))
+
+  buf = jnp.einsum("gsd,gsec->gecd", xg, dispatch)           # (G,E,C,d)
+  buf = _constrain(buf, P(dp_axes, espec, None, None))
+  gate = jnp.einsum("gecd,edf->gecf", buf, p["gate"])
+  up = jnp.einsum("gecd,edf->gecf", buf, p["up"])
+  h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+  out = jnp.einsum("gecf,efd->gecd", h, p["down"])           # (G,E,C,d)
+  y = jnp.einsum("gecd,gsec->gsd", out.astype(jnp.float32), combine)
+  y = y.astype(x.dtype).reshape(t, d)[:t_true].reshape(b, s, d)
+
+  if e.num_shared:
+    sh = p["shared"]
+    gsh = x @ sh["gate"]
+    ush = x @ sh["up"]
+    y = y + (jax.nn.silu(gsh.astype(jnp.float32)).astype(x.dtype) * ush) \
+        @ sh["down"]
+
+  # Switch-style load-balance loss: E * sum_e f_e * P_e
+  f_e = jnp.mean(jnp.max(onehot, axis=2), axis=(0, 1))       # fraction routed
+  p_e = jnp.mean(probs, axis=(0, 1))
+  aux = E * jnp.sum(f_e * p_e) * e.router_aux_weight
+  return y, aux

@@ -1,0 +1,507 @@
+"""Model: init / train / prefill / decode / sharding for every architecture.
+
+``Model`` wires embeddings -> scan-over-periods block stack (+ remainder
+layers) -> final norm -> LM head, for all six families.  Sharding is purely
+declarative: ``param_specs``/``cache_specs`` return PartitionSpec trees
+mirroring the parameter/cache pytrees, derived from leaf paths, and the
+launcher feeds them to pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import ssm as SSM
+from repro.models import rglru as RG
+from repro.models.config import ModelConfig
+from repro.models.layers import (dense_init, embed_init, rms_norm,
+                                 softmax_xent, swiglu)
+from repro.models.transformer import apply_block, init_block, init_block_cache
+from repro.util import scan as _uscan
+
+Array = jax.Array
+
+
+def _constrain(x, spec):
+  try:
+    return jax.lax.with_sharding_constraint(x, spec)
+  except Exception:
+    return x  # no mesh context (CPU smoke tests)
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+  dp_axes: tuple = ("data",)
+  model_axis: str = "model"
+  ep: bool = False      # shard MoE experts on model_axis (E % axis == 0)
+  fsdp: bool = False    # additionally shard params over dp_axes (ZeRO-3
+                        # storage; GSPMD all-gathers weights at use)
+  dp_size: int = 0      # product of dp axis sizes (needed for fsdp
+                        # divisibility checks)
+  min_fsdp_size: int = 1 << 20  # don't bother sharding small leaves
+  seq_shard: bool = False  # sequence parallelism: store the residual stream
+                           # (and its per-period remat stack) sharded over the
+                           # model axis on the sequence dim; blocks re-gather.
+  model_size: int = 0      # model axis size (seq_shard divisibility check)
+  ep_pod: bool = False     # expert parallelism over the POD axis (E divides
+                           # the pod count but not the model axis, e.g. grok
+                           # 8e on a 16-way model axis x 2 pods)
+  dp_axis_sizes: tuple = ()  # per-axis sizes matching dp_axes (for partial
+                             # FSDP when one dp axis is taken by EP)
+
+
+class Model:
+  def __init__(self, cfg: ModelConfig, remat: str | None = "dots"):
+    """remat: None | "dots" | "full" -- activation checkpointing policy for
+    the train-mode period scan ("dots" keeps matmul outputs, "full"
+    recomputes everything in the backward pass)."""
+    self.cfg = cfg
+    self.remat = remat
+    self.dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+  # ------------------------------------------------------------------ init
+  def init(self, rng: Array) -> dict:
+    cfg = self.cfg
+    dt = self.dtype
+    keys = jax.random.split(rng, 8)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab, cfg.d_model), dt),
+        "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+      params["head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+
+    def init_period(key):
+      ks = jax.random.split(key, len(cfg.pattern))
+      return {f"b{j}": init_block(ks[j], bt, cfg, dt)
+              for j, bt in enumerate(cfg.pattern)}
+
+    pkeys = jax.random.split(keys[2], max(cfg.n_periods, 1))
+    if cfg.n_periods:
+      params["periods"] = jax.vmap(init_period)(pkeys)
+    rkeys = jax.random.split(keys[3], max(cfg.n_remainder, 1))
+    params["rem"] = {
+        f"r{j}": init_block(rkeys[j], cfg.pattern[j], cfg, dt)
+        for j in range(cfg.n_remainder)}
+
+    if cfg.encoder.n_layers:
+      ekeys = jax.random.split(keys[4], cfg.encoder.n_layers)
+      params["encoder"] = {
+          "layers": {f"e{j}": init_block(ekeys[j], "attn", cfg, dt)
+                     for j in range(cfg.encoder.n_layers)},
+          "ln_f": jnp.zeros((cfg.d_model,), jnp.float32),
+      }
+    return params
+
+  # ------------------------------------------------------------- encoders
+  def _encode(self, params: dict, frames: Array, par: Parallelism) -> Array:
+    """Bidirectional encoder over stubbed modality frames (B, F, d)."""
+    cfg = self.cfg
+    h = frames.astype(self.dtype)
+    for j in range(cfg.encoder.n_layers):
+      p = params["encoder"]["layers"][f"e{j}"]
+      x = rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+      b, s, _ = x.shape
+      from repro.models.transformer import _project_qkv, _attn_out, _ffn
+      q, k, v = _project_qkv(x, p["attn"], cfg, jnp.arange(s))
+      attn = A.chunked_attention(q, k, v, causal=False)
+      h = h + _attn_out(attn, p["attn"], b, s)
+      h, _ = _ffn(h, p, cfg, dp_axes=par.dp_axes, ep_axis=None)
+    return rms_norm(h, params["encoder"]["ln_f"], cfg.rmsnorm_eps)
+
+  # -------------------------------------------------------------- forward
+  def _memory(self, params, batch, par: Parallelism) -> Array | None:
+    cfg = self.cfg
+    if cfg.family == "encdec":
+      return self._encode(params, batch["frames"], par)
+    if cfg.family == "vlm":
+      return batch["img_embeds"].astype(self.dtype)
+    return None
+
+  def _stack(self, h: Array, params: dict, *, mode: str, caches=None,
+             pos=None, memory=None, par: Parallelism = Parallelism()):
+    """Scan over periods + unrolled remainder. Returns (h, aux, new_caches)."""
+    cfg = self.cfg
+    ep_axis = par.model_axis if par.ep else ("pod" if par.ep_pod else None)
+
+    def win(bt):
+      return cfg.sliding_window if (bt == "attn" and cfg.sliding_window) else 0
+
+    def one_period(h, pparams, pcaches):
+      aux = jnp.zeros((), jnp.float32)
+      ncaches = {}
+      for j, bt in enumerate(cfg.pattern):
+        c = None if pcaches is None else pcaches[f"b{j}"]
+        h, a, nc = apply_block(bt, h, pparams[f"b{j}"], cfg, mode=mode,
+                               window=win(bt), memory=memory, cache=c,
+                               pos=pos, dp_axes=par.dp_axes, ep_axis=ep_axis,
+                               par=par)
+        if mode != "train":
+          # in train mode the constraint sits on the scan carry, outside the
+          # checkpointed body: a constraint inside jax.checkpoint makes the
+          # saved residual an f32 copy (observed: 2x residual memory)
+          h = self._act(h, par)
+        aux = aux + a
+        if nc is not None:
+          ncaches[f"b{j}"] = nc
+      return h, aux, ncaches
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if cfg.n_periods:
+      if mode == "train":
+        def body(carry, xs):
+          h, aux = carry
+          h, a, _ = one_period(h, xs, None)
+          h = self._act(h, par, seq=True)
+          return (h, aux + a), ()
+
+        # remat the *whole scan body*: residuals per period are exactly the
+        # (bf16) carry + param slice; everything else recomputes in bwd
+        if self.remat == "full":
+          body = jax.checkpoint(
+              body, policy=jax.checkpoint_policies.nothing_saveable)
+        elif self.remat == "dots":
+          body = jax.checkpoint(
+              body,
+              policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        (h, aux_total), _ = _uscan(body, (h, aux_total),
+                                         params["periods"])
+        new_caches = None
+      else:
+        # caches ride in the scan CARRY and are updated in place
+        # (dynamic_update_index); routing them through xs/ys makes GSPMD
+        # reshard the whole stacked cache (observed: a full-batch all-gather
+        # of the 36-layer KV stack per decode step).
+        if mode == "decode":
+          # Decode: python loop with STATIC layer indices.  Both scan-based
+          # formulations (caches as xs/ys or as carry with dynamic
+          # update-index) make GSPMD settle on a batch-replicated f32 cache
+          # and all-gather the whole 600+GB KV stack every step; static
+          # slices keep every per-layer cache exactly in its declared
+          # sharding.  Decode bodies are one token, so the unrolled HLO
+          # stays small.
+          pc = caches["periods"]
+          for t in range(cfg.n_periods):
+            pparams = jax.tree.map(lambda x: x[t], params["periods"])
+            pcache_t = jax.tree.map(lambda x: x[t], pc)
+            h, a, nc = one_period(h, pparams, pcache_t)
+            aux_total = aux_total + a
+            pc = jax.tree.map(
+                lambda buf, new: buf.at[t].set(new.astype(buf.dtype)),
+                pc, nc)
+          new_caches = {"periods": pc, "rem": {}}
+        else:
+          def body(carry, xs):
+            h, aux = carry
+            pparams, pcaches = xs
+            h, a, nc = one_period(h, pparams, pcaches)
+            return (h, aux + a), nc
+          (h, aux_total), new_p_caches = _uscan(
+              body, (h, aux_total), (params["periods"], caches["periods"]))
+          new_caches = {"periods": new_p_caches, "rem": {}}
+    else:
+      new_caches = None if mode == "train" else {"periods": None, "rem": {}}
+
+    for j in range(cfg.n_remainder):
+      bt = cfg.pattern[j]
+      c = None if mode == "train" else caches["rem"][f"r{j}"]
+      h, a, nc = apply_block(bt, h, params["rem"][f"r{j}"], cfg, mode=mode,
+                             window=win(bt), memory=memory, cache=c, pos=pos,
+                             dp_axes=par.dp_axes,
+                             ep_axis=par.model_axis if par.ep else None,
+                             par=par)
+      aux_total = aux_total + a
+      if mode != "train":
+        new_caches["rem"][f"r{j}"] = nc
+    return h, aux_total, new_caches
+
+  def _logits(self, h: Array, params: dict) -> Array:
+    cfg = self.cfg
+    h = rms_norm(h, params["ln_f"], cfg.rmsnorm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return h @ head
+
+  # --------------------------------------------------------------- public
+  def apply_train(self, params: dict, batch: dict,
+                  par: Parallelism = Parallelism()):
+    """batch: tokens (B, S) [+ frames / img_embeds] -> (logits, aux)."""
+    memory = self._memory(params, batch, par)
+    h = params["embed"][batch["tokens"]]
+    # pin the canonical activation layout (batch on dp, d replicated):
+    # without this, GSPMD can propagate the vocab-sharded embedding layout
+    # into the whole layer stack and replicate activations instead.
+    h = self._act(h, par, seq=True)
+    h, aux, _ = self._stack(h, params, mode="train", memory=memory, par=par)
+    h = self._act(h, par)
+    logits = self._logits(h, params)
+    return self._act(logits, par, last=par.model_axis), aux
+
+  def _act(self, h: Array, par: Parallelism, last=None,
+           seq: bool = False) -> Array:
+    """Activation sharding constraint (batch over dp axes) when divisible.
+
+    ``seq=True``: sequence parallelism -- additionally shard the sequence dim
+    over the model axis.  Used for the residual stream between periods so
+    the per-period remat stack is 1/model_size the size; blocks re-gather
+    (all-gather at the attention matmul, reduce-scatter after wo), the
+    standard SP trade of Korthikanti et al."""
+    if par.dp_size > 1 and h.shape[0] % par.dp_size == 0:
+      mid = [None] * (h.ndim - 2)
+      if (seq and par.seq_shard and h.ndim == 3 and par.model_size > 1
+          and h.shape[1] % par.model_size == 0 and last is None):
+        mid = [par.model_axis]
+      return _constrain(h, P(par.dp_axes, *mid, last))
+    return h
+
+  def loss_fn(self, params: dict, batch: dict,
+              par: Parallelism = Parallelism(), *, loss_chunk: int = 512):
+    """Sequence-chunked cross-entropy: the (B, S, V) logits never exist --
+    each (B, chunk, V) slice is projected, reduced, and (via checkpoint)
+    recomputed in the backward pass.  8x less live memory at vocab 152k."""
+    memory = self._memory(params, batch, par)
+    h = params["embed"][batch["tokens"]]
+    h = self._act(h, par, seq=True)
+    h, aux, _ = self._stack(h, params, mode="train", memory=memory, par=par)
+    h = self._act(h, par)
+    xent = self._chunked_xent(h, params, batch["labels"],
+                              batch.get("mask"), par, loss_chunk)
+    return xent + aux, {"xent": xent, "aux": aux}
+
+  def _chunked_xent(self, h: Array, params: dict, labels: Array,
+                    mask: Array | None, par: Parallelism,
+                    chunk: int) -> Array:
+    cfg = self.cfg
+    b, s, d = h.shape
+    if mask is None:
+      mask = jnp.ones((b, s), jnp.float32)
+    chunk = min(chunk, s)
+    if s % chunk:
+      chunk = s
+    nc = s // chunk
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    gamma = params["ln_f"]
+
+    hs = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(b, nc, chunk), 1, 0)
+
+    def body(carry, xs):
+      nll_sum, cnt = carry
+      hc, lc, mc = xs
+      hc = rms_norm(hc, gamma, cfg.rmsnorm_eps)
+      logits = (hc @ head).astype(jnp.float32)
+      logits = self._act(logits, par, last=par.model_axis)
+      logz = jax.scipy.special.logsumexp(logits, axis=-1)
+      onehot = lc[..., None] == jnp.arange(cfg.vocab)[None, None, :]
+      gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+      nll = (logz - gold) * mc
+      return (nll_sum + jnp.sum(nll), cnt + jnp.sum(mc)), ()
+
+    body = jax.checkpoint(body)
+    (nll_sum, cnt), _ = _uscan(body, (jnp.zeros(()), jnp.zeros(())),
+                               (hs, ls, ms))
+    return nll_sum / jnp.maximum(cnt, 1.0)
+
+  def init_cache(self, batch_size: int, max_len: int,
+                 memory: Array | None = None) -> dict:
+    cfg = self.cfg
+
+    def one_period_cache():
+      return {f"b{j}": init_block_cache(bt, cfg, batch_size, max_len,
+                                        self.dtype, memory)
+              for j, bt in enumerate(cfg.pattern)}
+
+    caches: dict[str, Any] = {"rem": {
+        f"r{j}": init_block_cache(cfg.pattern[j], cfg, batch_size, max_len,
+                                  self.dtype, memory)
+        for j in range(cfg.n_remainder)}}
+    if cfg.n_periods:
+      caches["periods"] = jax.tree.map(
+          lambda x: jnp.broadcast_to(x[None], (cfg.n_periods,) + x.shape),
+          one_period_cache())
+    else:
+      caches["periods"] = None
+    return caches
+
+  def prefill(self, params: dict, batch: dict, caches: dict,
+              par: Parallelism = Parallelism()):
+    """Fill caches from a prompt; returns (last_token_logits, caches)."""
+    memory = self._memory(params, batch, par)
+    h = params["embed"][batch["tokens"]]
+    h = self._act(h, par)
+    h, _, caches = self._stack(h, params, mode="prefill", caches=caches,
+                               memory=memory, par=par)
+    return self._logits(h[:, -1:], params)[:, 0], caches
+
+  def decode_step(self, params: dict, token: Array, pos: Array, caches: dict,
+                  par: Parallelism = Parallelism()):
+    """token: (B, 1) int32; pos: scalar int32. Returns (logits (B, V), caches)."""
+    h = params["embed"][token]
+    h, _, caches = self._stack(h, params, mode="decode", caches=caches,
+                               pos=pos, par=par)
+    return self._logits(h, params)[:, 0], caches
+
+  # ------------------------------------------------------------- sharding
+  def param_specs(self, par: Parallelism = Parallelism()):
+    """PartitionSpec tree mirroring init()'s output, by leaf path."""
+    shapes = jax.eval_shape(self.init, jax.random.PRNGKey(0))
+    mx = par.model_axis
+    ep = par.ep
+
+    def rule(path: str, ndim: int) -> P:
+      base = None
+      if path.endswith("embed"):
+        base = P(mx, None)
+      elif path.endswith("head"):
+        base = P(None, mx)
+      elif any(path.endswith(s) for s in
+               ("wq", "wk", "wv", "gate", "up", "w_in", "w_x", "w_gate",
+                "w_a", "w_i")):
+        base = P(None, mx)
+      elif any(path.endswith(s) for s in ("wo", "down", "w_out")):
+        base = P(mx, None)
+      else:
+        base = P()
+      if base is not None and len(base) and "moe" in path and \
+         any(path.endswith(s) for s in ("gate", "up", "down")) and \
+         "shared" not in path:
+        # stacked expert weights (E, d, f): EP on E when possible, else TP
+        if ep:
+          base = P(mx, None, None)
+        elif par.ep_pod:
+          base = P("pod", None, mx) if path.endswith(("gate", "up")) \
+              else P("pod", mx, None)
+        else:
+          base = P(None, None, mx) if path.endswith(("gate", "up")) \
+              else P(None, mx, None)
+      # stacked period dim (and any extra leading dims) -> None prefix
+      pad = ndim - len(base)
+      if pad > 0:
+        base = P(*([None] * pad + list(base)))
+      return base
+
+    def add_fsdp(spec: P, shape) -> P:
+      """Shard the largest not-yet-sharded dim over the dp axes (ZeRO-3).
+      dp axes already used by the spec (e.g. pod-axis EP on expert weights)
+      are excluded -- the remaining dp axes still shard the leaf."""
+      size = 1
+      for s in shape:
+        size *= s
+      if not par.fsdp or par.dp_size <= 1 or size < par.min_fsdp_size:
+        return spec
+      used = set()
+      for e in spec:
+        for a in (e if isinstance(e, (tuple, list)) else (e,)):
+          if a is not None:
+            used.add(a)
+      sizes = dict(zip(par.dp_axes, par.dp_axis_sizes)) if \
+          par.dp_axis_sizes else {a: 0 for a in par.dp_axes}
+      avail = tuple(a for a in par.dp_axes if a not in used)
+      if not avail:
+        return spec
+      if len(avail) == len(par.dp_axes):
+        asz = par.dp_size
+      else:
+        asz = 1
+        for a in avail:
+          if not sizes.get(a):
+            return spec  # unknown partial size: skip rather than guess
+          asz *= sizes[a]
+      dims = list(spec) + [None] * (len(shape) - len(spec))
+      cands = [(shape[i], i) for i in range(len(shape))
+               if dims[i] is None and asz > 1 and shape[i] % asz == 0]
+      if not cands:
+        return spec
+      _, i = max(cands)
+      dims[i] = avail
+      return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+      pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+      specs.append(_check_divisibility(
+          add_fsdp(rule(pstr, leaf.ndim), leaf.shape), leaf.shape, par))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+  def cache_specs(self, par: Parallelism = Parallelism(), *,
+                  batch_shardable: bool = True):
+    """Shardings for decode caches: batch on dp axes when batch > 1, else
+    sequence-parallel on the cache length; head_dim on the model axis."""
+    cfg = self.cfg
+    shapes = jax.eval_shape(
+        lambda: self.init_cache(2, 8, memory=jnp.zeros(
+            (2, max(cfg.n_img_tokens, cfg.encoder.n_frames, 1), cfg.d_model),
+            self.dtype)))
+    dp = par.dp_axes
+    mx = par.model_axis
+
+    msz = max(par.model_size, 1)
+
+    def rule(path: str, ndim: int) -> P:
+      name = path.rsplit("/", 1)[-1]  # exact leaf name: suffix matching once
+      # routed "conv" through the KV rule because "conv".endswith("v")
+      bdim = dp if batch_shardable else None
+      if name in ("k", "v", "xk", "xv"):              # (B, Hkv, S, dh)
+        seq = None if batch_shardable else dp
+        base = P(bdim, None, seq,
+                 mx if (msz > 1 and cfg.head_dim % msz == 0) else None)
+      elif name == "kpos":
+        base = P(None)
+      elif name == "conv":                            # (B, W-1, C)
+        base = P(bdim, None, mx)
+      elif name == "h" and ndim - (0 if "rem" in path else 1) == 4:
+        base = P(bdim, mx, None, None)                # ssm state (B,H,P,N)
+      elif name == "h":
+        base = P(bdim, mx)                            # rglru state (B, W)
+      else:
+        base = P()
+      pad = ndim - len(base)
+      if pad > 0:
+        base = P(*([None] * pad + list(base)))
+      return base
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for path, leaf in flat:
+      pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+      # NOTE: no divisibility check here -- these shapes come from a dummy
+      # (batch=2, len=8) cache used only for tree structure; checking real
+      # divisibility against dummy dims silently dropped the batch sharding
+      # (observed: batch-replicated f32 KV stack + an all-gather per step).
+      specs.append(rule(pstr, leaf.ndim))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _check_divisibility(spec: P, shape, par: Parallelism) -> P:
+  """Drop sharded dims whose size doesn't divide the axis size (e.g. a
+  50280-entry vocab on a 16-way model axis stays replicated)."""
+  def axis_size(entry) -> int:
+    if entry is None:
+      return 1
+    if isinstance(entry, (tuple, list)):
+      return max(par.dp_size, 1) if tuple(entry) == tuple(par.dp_axes) else 0
+    if entry == par.model_axis:
+      return max(par.model_size, 1)
+    if (entry,) == tuple(par.dp_axes):
+      return max(par.dp_size, 1)
+    return 0  # unknown axis: can't verify -> drop only if size unknown
+
+  dims = list(spec) + [None] * (len(shape) - len(spec))
+  out = []
+  for size, entry in zip(shape, dims):
+    asz = axis_size(entry)
+    if entry is not None and asz > 1 and size % asz != 0:
+      entry = None
+    out.append(entry)
+  return P(*out)
+
+
+def build_model(cfg: ModelConfig, remat: str | None = "dots") -> Model:
+  return Model(cfg, remat=remat)

@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates the diagonal linear recurrence with
+``jax.lax.associative_scan`` (O(log L) depth -- the TPU-friendly counterpart
+of the paper's sequential CPU loop); decode is one step.  The surrounding
+Griffin recurrent block is conv1d + RG-LRU on one branch, GeLU gate on the
+other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import causal_conv1d, dense_init
+
+Array = jax.Array
+
+
+def lru_width(cfg: ModelConfig) -> int:
+  return cfg.rec.lru_width or cfg.d_model
+
+
+def init_rglru(key, cfg: ModelConfig, dtype) -> dict:
+  d = cfg.d_model
+  w = lru_width(cfg)
+  ks = jax.random.split(key, 6)
+  return {
+      "w_x": dense_init(ks[0], (d, w), dtype),      # recurrent branch in
+      "w_gate": dense_init(ks[1], (d, w), dtype),   # gelu gate branch
+      "conv_w": (jax.random.normal(ks[2], (cfg.rec.conv_width, w)) * 0.1
+                 ).astype(dtype),
+      "w_a": dense_init(ks[3], (w, w), dtype),
+      "b_a": jnp.zeros((w,), jnp.float32),
+      "w_i": dense_init(ks[4], (w, w), dtype),
+      "b_i": jnp.zeros((w,), jnp.float32),
+      # Lambda init so a^c spans ~(0.9, 0.999) as in the paper
+      "lam": jnp.linspace(-4.0, 4.0, w).astype(jnp.float32),
+      "w_out": dense_init(ks[5], (w, d), dtype),
+  }
+
+
+def rglru_scan(x: Array, r: Array, i: Array, lam: Array, c: float,
+               h0: Array | None = None):
+  """x, r, i: (B, L, W) -> (h (B, L, W), h_last (B, W))."""
+  log_a = -c * jax.nn.softplus(lam)[None, None, :] * r      # (B,L,W) <= 0
+  a = jnp.exp(log_a)
+  b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+
+  if h0 is not None:
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+  def combine(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+  ah, bh = jax.lax.associative_scan(combine, (a, b), axis=1)
+  return bh, bh[:, -1]
+
+
+def rglru_decode_step(x: Array, r: Array, i: Array, lam: Array, c: float,
+                      h: Array):
+  """One step; x, r, i, h: (B, W)."""
+  a = jnp.exp(-c * jax.nn.softplus(lam)[None, :] * r)
+  h_new = a * h + jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+  return h_new, h_new
+
+
+def recurrent_block(x: Array, p: dict, cfg: ModelConfig, *,
+                    decode_state: tuple | None = None):
+  """Griffin recurrent block.  x: (B, L, d).
+
+  decode_state = (conv_state (B, W-1, lru_w), h (B, lru_w)) for decode
+  (L == 1); None for training/prefill.  Returns (y, new_state)."""
+  xr = x @ p["w_x"]                                          # (B, L, W)
+  gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype)
+
+  conv_state = None if decode_state is None else decode_state[0]
+  xr, conv_state_new = causal_conv1d(xr, p["conv_w"], conv_state)
+
+  xr32 = xr.astype(jnp.float32)
+  r = jax.nn.sigmoid(xr32 @ p["w_a"].astype(jnp.float32) + p["b_a"])
+  i = jax.nn.sigmoid(xr32 @ p["w_i"].astype(jnp.float32) + p["b_i"])
+
+  if decode_state is None:
+    h, h_last = rglru_scan(xr32, r, i, p["lam"], cfg.rec.c)
+  else:
+    h1, h_last = rglru_decode_step(xr32[:, 0], r[:, 0], i[:, 0], p["lam"],
+                                   cfg.rec.c, decode_state[1])
+    h = h1[:, None]
+
+  y = (h.astype(x.dtype) * gate) @ p["w_out"]
+  return y, (conv_state_new, h_last)

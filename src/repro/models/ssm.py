@@ -1,0 +1,176 @@
+"""Mamba-2 block: state-space duality (SSD) with chunked parallel scan.
+
+Follows the minimal SSD formulation of Dao & Gu (2024): within a chunk the
+recurrence is evaluated as a (masked, decay-weighted) attention-like matmul;
+across chunks a short sequential recurrence carries the (h, p, n) state.
+Training/prefill cost is O(L * chunk) intra + O(L / chunk) inter -- linear in
+L, which is what qualifies mamba2 for the long_500k shape.
+
+Decode is the exact SSM recurrence: h <- exp(dt A) h + dt B x, one step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import causal_conv1d, dense_init, rms_norm
+
+Array = jax.Array
+
+
+def d_inner(cfg: ModelConfig) -> int:
+  return cfg.ssm.expand * cfg.d_model
+
+
+def n_heads(cfg: ModelConfig) -> int:
+  return d_inner(cfg) // cfg.ssm.head_dim
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+  d = cfg.d_model
+  di = d_inner(cfg)
+  s = cfg.ssm
+  nh = n_heads(cfg)
+  conv_dim = di + 2 * s.n_groups * s.d_state
+  ks = jax.random.split(key, 6)
+  return {
+      # projects to [z (di), xBC (di + 2 g n), dt (nh)]
+      "w_in": dense_init(ks[0], (d, 2 * di + 2 * s.n_groups * s.d_state + nh),
+                         dtype),
+      "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim)) * 0.1
+                 ).astype(dtype),
+      "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+      "dt_bias": jnp.zeros((nh,), jnp.float32),
+      "d_skip": jnp.ones((nh,), jnp.float32),
+      "norm": jnp.zeros((di,), jnp.float32),
+      "w_out": dense_init(ks[5], (di, d), dtype),
+  }
+
+
+def _segsum(a: Array) -> Array:
+  """a: (..., l) log-decays -> (..., l, l) lower-tri cumulative sums,
+  seg[i, j] = sum_{t=j+1..i} a_t  (the decay from step j to step i)."""
+  l = a.shape[-1]
+  cum = jnp.cumsum(a, axis=-1)
+  seg = cum[..., :, None] - cum[..., None, :]
+  mask = jnp.tril(jnp.ones((l, l), bool))
+  return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                chunk: int, h0: Array | None = None):
+  """SSD scan.  x: (B, L, H, P); dt: (B, L, H); b, c: (B, L, G, N).
+
+  Returns (y (B, L, H, P), h_final (B, H, P, N)).
+  """
+  bb, l, h, p = x.shape
+  g, n = b.shape[2], b.shape[3]
+  chunk = min(chunk, l)
+  l_true = l
+  pad = (-l) % chunk
+  if pad:
+    # zero-pad the tail: dt=0 => decay exp(0)=1 and zero input, so padded
+    # steps leave the carried state (and hence h_last) unchanged.
+    x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l = l + pad
+  nc = l // chunk
+  rep = h // g
+
+  x32 = x.astype(jnp.float32)
+  a = -jnp.exp(a_log)[None, None, :] * dt                   # (B, L, H) <= 0
+  xbar = x32 * dt[..., None]
+
+  # chunk-major layout for the sequential chunk scan: (nc, B, chunk, ...)
+  xc = jnp.moveaxis(xbar.reshape(bb, nc, chunk, h, p), 1, 0)
+  ac = jnp.moveaxis(a.reshape(bb, nc, chunk, h), 1, 0)
+  bc = jnp.moveaxis(b.astype(jnp.float32).reshape(bb, nc, chunk, g, n), 1, 0)
+  cc = jnp.moveaxis(c.astype(jnp.float32).reshape(bb, nc, chunk, g, n), 1, 0)
+
+  def chunk_step(hprev, xs):
+    """One chunk: intra-chunk quadratic + carried-state contribution.
+
+    Sequential over chunks (not vectorized) so only ONE (B, H, lc, lc) decay
+    block is ever live; the backward pass recomputes it per chunk
+    (jax.checkpoint below).  hprev: (B, H, P, N)."""
+    xck, ack, bck, cck = xs                    # (B, lc, H, *), log-decays ack
+    br = jnp.repeat(bck, rep, axis=2)          # (B, lc, H, N)
+    cr = jnp.repeat(cck, rep, axis=2)
+    seg = _segsum(jnp.moveaxis(ack, 1, -1))    # (B, H, lc, lc)
+    ldec = jnp.exp(seg)
+    scores = jnp.einsum("bshn,bthn->bhst", cr, br)
+    y_diag = jnp.einsum("bhst,bhst,bthp->bshp", scores, ldec, xck)
+
+    a_cum = jnp.cumsum(ack, axis=1)            # (B, lc, H)
+    a_tot = a_cum[:, -1]                       # (B, H)
+    decay_to_end = jnp.exp(a_tot[:, None] - a_cum)
+    state_c = jnp.einsum("bthn,bth,bthp->bhpn", br, decay_to_end, xck)
+
+    decay_from_start = jnp.exp(a_cum)
+    y_off = jnp.einsum("bshn,bsh,bhpn->bshp", cr, decay_from_start, hprev)
+
+    hnew = hprev * jnp.exp(a_tot)[..., None, None] + state_c
+    return hnew, y_diag + y_off
+
+  h_init = (jnp.zeros((bb, h, p, n), jnp.float32) if h0 is None
+            else h0.astype(jnp.float32))
+  from repro.util import scan as _uscan
+  h_last, ys = _uscan(jax.checkpoint(chunk_step), h_init, (xc, ac, bc, cc))
+  y = jnp.moveaxis(ys, 0, 1).reshape(bb, l, h, p)
+  return y[:, :l_true], h_last
+
+
+def ssd_decode_step(x: Array, dt: Array, a_log: Array, b: Array, c: Array,
+                    h: Array):
+  """One token. x: (B, H, P); dt: (B, H); b, c: (B, G, N); h: (B, H, P, N)."""
+  g = b.shape[1]
+  rep = h.shape[1] // g
+  b = jnp.repeat(b.astype(jnp.float32), rep, axis=1)        # (B,H,N)
+  c = jnp.repeat(c.astype(jnp.float32), rep, axis=1)
+  a = jnp.exp(-jnp.exp(a_log)[None, :] * dt)                # (B,H)
+  xbar = x.astype(jnp.float32) * dt[..., None]              # (B,H,P)
+  h_new = h * a[..., None, None] + jnp.einsum("bhn,bhp->bhpn", b, xbar)
+  y = jnp.einsum("bhn,bhpn->bhp", c, h_new)
+  return y, h_new
+
+
+def mamba_block(x: Array, p: dict, cfg: ModelConfig, *,
+                decode_state: tuple | None = None):
+  """x: (B, L, d).  Training/prefill when decode_state is None; otherwise
+  decode_state = (conv_state (B, W-1, convdim), ssm_state (B, H, P, N)) and
+  L == 1.  Returns (y, new_decode_state_or_final_states)."""
+  bdim, l, d = x.shape
+  s = cfg.ssm
+  di = d_inner(cfg)
+  nh = n_heads(cfg)
+  gn = s.n_groups * s.d_state
+
+  zxbcdt = x @ p["w_in"]
+  z, xbc, dt_raw = jnp.split(zxbcdt, [di, 2 * di + 2 * gn], axis=-1)
+  dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+
+  conv_state = None if decode_state is None else decode_state[0]
+  xbc, conv_state_new = causal_conv1d(xbc, p["conv_w"], conv_state)
+  xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+  xin, b, c = jnp.split(xbc, [di, di + gn], axis=-1)
+  xh = xin.reshape(bdim, l, nh, s.head_dim)
+  bh = b.reshape(bdim, l, s.n_groups, s.d_state)
+  ch = c.reshape(bdim, l, s.n_groups, s.d_state)
+
+  if decode_state is None:
+    y, h_last = ssd_chunked(xh, dt, p["a_log"], bh, ch, s.chunk)
+  else:
+    y1, h_last = ssd_decode_step(xh[:, 0], dt[:, 0], p["a_log"], bh[:, 0],
+                                 ch[:, 0], decode_state[1])
+    y = y1[:, None]
+  y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+  y = y.reshape(bdim, l, di)
+
+  # gated RMSNorm (Mamba-2): norm(y * silu(z))
+  y = y * jax.nn.silu(z.astype(jnp.float32))
+  y = rms_norm(y.astype(x.dtype), p["norm"], cfg.rmsnorm_eps)
+  out = y @ p["w_out"]
+  return out, (conv_state_new, h_last)

@@ -1,0 +1,289 @@
+"""Unified decoder stack: dense / MoE / hybrid (RG-LRU) / SSM / VLM / enc-dec.
+
+The layer stack is a *periodic pattern* of typed blocks (config.py); the whole
+depth lowers as one ``lax.scan`` over stacked period parameters, so HLO size
+and compile time are O(period), not O(n_layers) -- essential for the 95- and
+100-layer assigned architectures on the 512-device dry-run.
+
+Three entry points share the block implementations:
+
+  train_forward   (B, S) tokens -> (B, S, V) logits (+ MoE aux loss)
+  prefill         fills the decode cache and returns last-token logits
+  decode_step     one token against the cache (ring-buffered for windowed
+                  attention; recurrent state for RG-LRU / SSD blocks)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSM
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_rope, dense_init, embed_init, rms_norm,
+                                 swiglu)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# block parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_mlp(key, cfg: ModelConfig, dtype):
+  d, f = cfg.d_model, cfg.d_ff
+  ks = jax.random.split(key, 3)
+  return {"gate": dense_init(ks[0], (d, f), dtype),
+          "up": dense_init(ks[1], (d, f), dtype),
+          "down": dense_init(ks[2], (f, d), dtype)}
+
+
+def _init_attn(key, cfg: ModelConfig, dtype):
+  d = cfg.d_model
+  hq = cfg.n_heads * cfg.head_dim
+  hkv = cfg.n_kv_heads * cfg.head_dim
+  ks = jax.random.split(key, 5)
+  p = {"wq": dense_init(ks[0], (d, hq), dtype),
+       "wk": dense_init(ks[1], (d, hkv), dtype),
+       "wv": dense_init(ks[2], (d, hkv), dtype),
+       "wo": dense_init(ks[3], (hq, d), dtype)}
+  if cfg.qkv_bias:
+    p["bq"] = jnp.zeros((hq,), dtype)
+    p["bk"] = jnp.zeros((hkv,), dtype)
+    p["bv"] = jnp.zeros((hkv,), dtype)
+  if cfg.qk_norm:
+    p["q_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    p["k_norm"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+  return p
+
+
+def init_block(key, btype: str, cfg: ModelConfig, dtype) -> dict:
+  d = cfg.d_model
+  k1, k2, k3, k4 = jax.random.split(key, 4)
+  if btype == "attn":
+    p = {"ln1": jnp.zeros((d,), jnp.float32),
+         "attn": _init_attn(k1, cfg, dtype),
+         "ln2": jnp.zeros((d,), jnp.float32)}
+    if cfg.moe.num_experts:
+      p["moe"] = MOE.init_moe(k2, cfg, dtype)
+    else:
+      p["mlp"] = _init_mlp(k2, cfg, dtype)
+    return p
+  if btype == "cross":
+    p = init_block(k1, "attn", cfg, dtype)
+    p["lnx"] = jnp.zeros((d,), jnp.float32)
+    p["xattn"] = _init_attn(k2, cfg, dtype)
+    return p
+  if btype == "rec":
+    return {"ln1": jnp.zeros((d,), jnp.float32),
+            "rec": RG.init_rglru(k1, cfg, dtype),
+            "ln2": jnp.zeros((d,), jnp.float32),
+            "mlp": _init_mlp(k2, cfg, dtype)}
+  if btype == "mamba":
+    return {"ln1": jnp.zeros((d,), jnp.float32),
+            "mamba": SSM.init_mamba(k1, cfg, dtype)}
+  raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# block cache init (decode)
+# ---------------------------------------------------------------------------
+
+
+def init_block_cache(btype: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype, memory: Array | None = None) -> dict:
+  dh = cfg.head_dim
+  hkv = cfg.n_kv_heads
+  if btype in ("attn", "cross"):
+    s_cache = min(max_len, cfg.sliding_window) if (
+        cfg.sliding_window and cfg.family == "hybrid") else max_len
+    c = {"k": jnp.zeros((batch, hkv, s_cache, dh), dtype),
+         "v": jnp.zeros((batch, hkv, s_cache, dh), dtype),
+         "kpos": jnp.full((s_cache,), -1, jnp.int32)}
+    if btype == "cross":
+      # cross-attention KV over the (image/encoder) memory, filled by prefill
+      n_mem = memory.shape[1] if memory is not None else cfg.n_img_tokens
+      c["xk"] = jnp.zeros((batch, hkv, n_mem, dh), dtype)
+      c["xv"] = jnp.zeros((batch, hkv, n_mem, dh), dtype)
+    return c
+  if btype == "rec":
+    w = RG.lru_width(cfg)
+    return {"conv": jnp.zeros((batch, cfg.rec.conv_width - 1, w), dtype),
+            "h": jnp.zeros((batch, w), jnp.float32)}
+  if btype == "mamba":
+    di = SSM.d_inner(cfg)
+    convdim = di + 2 * cfg.ssm.n_groups * cfg.ssm.d_state
+    return {"conv": jnp.zeros((batch, cfg.ssm.conv_width - 1, convdim), dtype),
+            "h": jnp.zeros((batch, SSM.n_heads(cfg), cfg.ssm.head_dim,
+                            cfg.ssm.d_state), jnp.float32)}
+  raise ValueError(btype)
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(x, p, cfg, positions):
+  b, s, _ = x.shape
+  dh = cfg.head_dim
+  q = x @ p["wq"] + (p.get("bq", 0.0) if cfg.qkv_bias else 0.0)
+  k = x @ p["wk"] + (p.get("bk", 0.0) if cfg.qkv_bias else 0.0)
+  v = x @ p["wv"] + (p.get("bv", 0.0) if cfg.qkv_bias else 0.0)
+  q = q.reshape(b, s, cfg.n_heads, dh)
+  k = k.reshape(b, s, cfg.n_kv_heads, dh)
+  v = v.reshape(b, s, cfg.n_kv_heads, dh)
+  if cfg.qk_norm:
+    q = rms_norm(q, p["q_norm"], cfg.rmsnorm_eps)
+    k = rms_norm(k, p["k_norm"], cfg.rmsnorm_eps)
+  q = apply_rope(jnp.swapaxes(q, 1, 2), positions, cfg.rope_theta)
+  k = apply_rope(jnp.swapaxes(k, 1, 2), positions, cfg.rope_theta)
+  v = jnp.swapaxes(v, 1, 2)
+  return q, k, v  # (B, H, S, dh)
+
+
+def _attn_out(attn, p, b, s):
+  return attn.swapaxes(1, 2).reshape(b, s, -1) @ p["wo"]
+
+
+def _ffn(h, p, cfg, *, dp_axes, ep_axis):
+  x = rms_norm(h, p["ln2"], cfg.rmsnorm_eps)
+  if cfg.moe.num_experts:
+    y, aux = MOE.moe_ffn(x, p["moe"], cfg, dp_axes=dp_axes, ep_axis=ep_axis)
+    return h + y, aux
+  return h + swiglu(x, p["mlp"]["gate"], p["mlp"]["up"], p["mlp"]["down"]), 0.0
+
+
+def apply_block(btype: str, h: Array, p: dict, cfg: ModelConfig, *,
+                mode: str, window: int = 0, memory: Array | None = None,
+                cache: dict | None = None, pos: Array | None = None,
+                dp_axes=("data",), ep_axis=None, par=None):
+  """Returns (h, aux_loss, new_cache)."""
+  b, s, d = h.shape
+
+  def _cache_spec():
+    """(B, Hkv, S, dh) spec matching cache_specs: batch on dp, dh on model.
+    Applied to the decode-attention operands so the q . cache contraction
+    lines up shard-for-shard -- without it GSPMD resorts to involuntary full
+    rematerialization and all-gathers the whole KV cache every layer
+    (observed: 78 GB/step/device at 32k; see EXPERIMENTS.md perf log)."""
+    if par is None:
+      return None
+    bdim = dp_axes if (par.dp_size > 1 and b % par.dp_size == 0) else None
+    mdim = par.model_axis if (par.model_size > 1
+                              and cfg.head_dim % par.model_size == 0) else None
+    if bdim is None and mdim is None:
+      return None
+    from jax.sharding import PartitionSpec as _P
+    return _P(bdim, None, None, mdim)
+  aux = 0.0
+  new_cache = cache
+
+  if btype in ("attn", "cross"):
+    x = rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+    if mode == "decode":
+      positions = jnp.full((1,), pos, jnp.int32)
+    else:
+      positions = jnp.arange(s)
+    q, k, v = _project_qkv(x, p["attn"], cfg, positions)
+
+    if mode == "decode":
+      s_cache = cache["k"].shape[2]
+      slot = pos % s_cache if window else jnp.minimum(pos, s_cache - 1)
+      kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(
+          cache["k"].dtype), slot, axis=2)
+      vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(
+          cache["v"].dtype), slot, axis=2)
+      kpos = jax.lax.dynamic_update_slice_in_dim(
+          cache["kpos"], jnp.full((1,), pos, jnp.int32), slot, axis=0)
+      valid = (kpos >= 0) & (kpos <= pos)
+      if window:
+        valid &= kpos > pos - window
+      # masked decode attention against the (ring) cache
+      cspec = _cache_spec()
+      qd = A._gqa_split(q, cfg.n_kv_heads)[..., 0, :]
+      if cspec is not None:
+        from repro.models.moe import _constrain
+        qspec = type(cspec)(cspec[0], None, None, cspec[3])
+        qd = _constrain(qd, qspec)
+        kc = _constrain(kc, cspec)
+        vc = _constrain(vc, cspec)
+      sc = jnp.einsum("bkgd,bksd->bkgs",
+                      qd.astype(jnp.float32) * cfg.head_dim ** -0.5,
+                      kc.astype(jnp.float32))
+      sc = jnp.where(valid[None, None, None, :], sc, -1e30)
+      pr = jax.nn.softmax(sc, axis=-1)
+      attn = jnp.einsum("bkgs,bksd->bkgd", pr, vc.astype(jnp.float32))
+      attn = attn.reshape(b, cfg.n_heads, 1, cfg.head_dim).astype(h.dtype)
+      new_cache = dict(cache, k=kc, v=vc, kpos=kpos)
+    else:
+      attn = A.self_attention(q, k, v, causal=True, window=window)
+      if mode == "prefill":
+        s_cache = cache["k"].shape[2]
+        kw, vw = k, v
+        if s <= s_cache:
+          kc = jax.lax.dynamic_update_slice_in_dim(
+              cache["k"], kw.astype(cache["k"].dtype), 0, axis=2)
+          vc = jax.lax.dynamic_update_slice_in_dim(
+              cache["v"], vw.astype(cache["v"].dtype), 0, axis=2)
+          kpos = jax.lax.dynamic_update_slice_in_dim(
+              cache["kpos"], jnp.arange(s, dtype=jnp.int32), 0, axis=0)
+        else:  # windowed cache shorter than the prompt: keep the tail
+          kc = kw[:, :, -s_cache:].astype(cache["k"].dtype)
+          vc = vw[:, :, -s_cache:].astype(cache["v"].dtype)
+          kpos = jnp.arange(s - s_cache, s, dtype=jnp.int32)
+        new_cache = dict(cache, k=kc, v=vc, kpos=kpos)
+    h = h + _attn_out(attn, p["attn"], b, s)
+
+    if btype == "cross":
+      xq = rms_norm(h, p["lnx"], cfg.rmsnorm_eps)
+      qx, _, _ = _project_qkv(xq, p["xattn"], cfg, positions)
+      if mode == "decode":
+        xk, xv = cache["xk"], cache["xv"]
+      else:
+        mem = memory
+        mb, ms, _ = mem.shape
+        xk = (mem @ p["xattn"]["wk"]).reshape(mb, ms, cfg.n_kv_heads,
+                                              cfg.head_dim).swapaxes(1, 2)
+        xv = (mem @ p["xattn"]["wv"]).reshape(mb, ms, cfg.n_kv_heads,
+                                              cfg.head_dim).swapaxes(1, 2)
+        if mode == "prefill":
+          new_cache = dict(new_cache, xk=xk.astype(cache["xk"].dtype),
+                           xv=xv.astype(cache["xv"].dtype))
+      xattn = A.cross_attention(qx, xk, xv)
+      h = h + _attn_out(xattn, p["xattn"], b, s)
+
+    h, aux = _ffn(h, p, cfg, dp_axes=dp_axes, ep_axis=ep_axis)
+    return h, aux, new_cache
+
+  if btype == "rec":
+    x = rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+    state = None if mode == "train" else (
+        (cache["conv"], cache["h"]) if mode == "decode" else None)
+    y, (conv_new, h_new) = RG.recurrent_block(x, p["rec"], cfg,
+                                              decode_state=state)
+    h = h + y
+    if mode in ("prefill", "decode"):
+      new_cache = dict(cache, conv=conv_new.astype(cache["conv"].dtype),
+                       h=h_new)
+    h, aux = _ffn(h, p, cfg, dp_axes=dp_axes, ep_axis=ep_axis)
+    return h, aux, new_cache
+
+  if btype == "mamba":
+    x = rms_norm(h, p["ln1"], cfg.rmsnorm_eps)
+    state = None if mode == "train" else (
+        (cache["conv"], cache["h"]) if mode == "decode" else None)
+    y, (conv_new, h_new) = SSM.mamba_block(x, p["mamba"], cfg,
+                                           decode_state=state)
+    h = h + y
+    if mode in ("prefill", "decode"):
+      new_cache = dict(cache, conv=conv_new.astype(cache["conv"].dtype),
+                       h=h_new)
+    return h, aux, new_cache
+
+  raise ValueError(btype)

@@ -1,0 +1,3 @@
+from repro.serve.serve_step import make_serve_fns, generate
+
+__all__ = ["make_serve_fns", "generate"]

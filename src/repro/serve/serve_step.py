@@ -1,0 +1,58 @@
+"""Serving: jitted prefill + decode steps and a batched generation loop.
+
+``decode_step`` is the function the decode_* and long_* dry-run shapes lower:
+one new token against a KV cache (or recurrent state) of ``seq_len``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model, Parallelism
+
+Array = jax.Array
+
+
+def make_serve_fns(model: Model, par: Parallelism = Parallelism()):
+  """Returns (prefill_fn, decode_fn), both jit-able."""
+
+  def prefill_fn(params, batch, caches):
+    return model.prefill(params, batch, caches, par)
+
+  def decode_fn(params, token, pos, caches):
+    return model.decode_step(params, token, pos, caches, par)
+
+  return prefill_fn, decode_fn
+
+
+def generate(model: Model, params, batch: dict, *, steps: int,
+             max_len: int | None = None, temperature: float = 0.0,
+             rng: Array | None = None,
+             par: Parallelism = Parallelism()) -> Array:
+  """Greedy/temperature sampling: prompt batch -> (B, steps) generated ids."""
+  tokens = batch["tokens"]
+  b, s = tokens.shape
+  max_len = max_len or (s + steps)
+  memory = model._memory(params, batch, par)
+  caches = model.init_cache(b, max_len, memory=memory)
+
+  prefill_fn, decode_fn = make_serve_fns(model, par)
+  prefill_fn = jax.jit(prefill_fn)
+  decode_fn = jax.jit(decode_fn)
+
+  logits, caches = prefill_fn(params, batch, caches)
+  rng = rng if rng is not None else jax.random.PRNGKey(0)
+  out = []
+  tok = None
+  for t in range(steps):
+    if temperature > 0.0:
+      rng, k = jax.random.split(rng)
+      tok = jax.random.categorical(k, logits / temperature, axis=-1)
+    else:
+      tok = jnp.argmax(logits, axis=-1)
+    out.append(tok)
+    logits, caches = decode_fn(params, tok[:, None].astype(jnp.int32),
+                               jnp.int32(s + t), caches)
+  return jnp.stack(out, axis=1)

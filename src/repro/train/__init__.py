@@ -1,0 +1,6 @@
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptConfig, OptState, adamw_update, init_opt_state
+from repro.train.train_step import make_eval_step, make_train_step
+
+__all__ = ["CheckpointManager", "OptConfig", "OptState", "adamw_update",
+           "init_opt_state", "make_train_step", "make_eval_step"]

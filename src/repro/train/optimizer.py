@@ -1,0 +1,103 @@
+"""AdamW with decoupled weight decay, global-norm clipping and cosine
+schedule, implemented directly on parameter pytrees (no optax dependency).
+
+Under pjit, optimizer moments inherit the parameters' PartitionSpecs, which
+gives ZeRO-1-style sharded optimizer state for free: each device holds only
+its parameter shard's moments and the update is local.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+  lr: float = 3e-4
+  min_lr_frac: float = 0.1
+  warmup_steps: int = 100
+  total_steps: int = 10_000
+  b1: float = 0.9
+  b2: float = 0.95
+  eps: float = 1e-8
+  weight_decay: float = 0.1
+  clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+  step: Array
+  mu: Any       # first moments  (pytree like params, f32)
+  nu: Any       # second moments (pytree like params, f32)
+
+
+def init_opt_state(params) -> OptState:
+  zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+  return OptState(jnp.zeros((), jnp.int32), zeros,
+                  jax.tree.map(jnp.copy, zeros))
+
+
+def schedule(cfg: OptConfig, step: Array) -> Array:
+  warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+  t = jnp.clip((step - cfg.warmup_steps)
+               / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+  cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+  frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+  return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> Array:
+  leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)]
+  return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+  norm = global_norm(grads)
+  scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+  return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def _decay_mask(path: str) -> bool:
+  """No weight decay on norms / biases / scalars."""
+  lowered = path.lower()
+  return not any(s in lowered for s in ("ln", "norm", "bias", "b_a", "b_i",
+                                        "lam", "a_log", "dt_bias", "d_skip"))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state: OptState):
+  """Returns (new_params, new_state, metrics)."""
+  grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+  step = state.step + 1
+  lr = schedule(cfg, step)
+  b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+  b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+  flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+  flat_g = jax.tree.leaves(grads)
+  flat_mu = jax.tree.leaves(state.mu)
+  flat_nu = jax.tree.leaves(state.nu)
+
+  new_p, new_mu, new_nu = [], [], []
+  for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+    pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+    g32 = g.astype(jnp.float32)
+    mu = cfg.b1 * mu + (1.0 - cfg.b1) * g32
+    nu = cfg.b2 * nu + (1.0 - cfg.b2) * g32 * g32
+    upd = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+    if _decay_mask(pstr):
+      upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+    new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+    new_mu.append(mu)
+    new_nu.append(nu)
+
+  params = jax.tree_util.tree_unflatten(treedef, new_p)
+  tdef = jax.tree_util.tree_structure(state.mu)
+  new_state = OptState(step, jax.tree_util.tree_unflatten(tdef, new_mu),
+                       jax.tree_util.tree_unflatten(tdef, new_nu))
+  return params, new_state, {"grad_norm": gnorm, "lr": lr}

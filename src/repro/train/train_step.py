@@ -1,0 +1,79 @@
+"""Training step factory: loss -> grads -> (optionally compressed) update.
+
+Microbatch gradient accumulation runs as a lax.scan so arbitrarily large
+global batches fit in memory; under pjit the data-parallel gradient mean is
+emitted by GSPMD as reduce-scatter + all-gather pairs which the XLA
+latency-hiding scheduler overlaps with the backward compute (flags set in
+launch/train.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import Model, Parallelism
+from repro.train.optimizer import OptConfig, OptState, adamw_update
+
+Array = jax.Array
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig,
+                    par: Parallelism = Parallelism(), *,
+                    microbatches: int = 1):
+  """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+  With microbatches > 1, batch leaves must have a leading
+  (microbatches, per_mb_batch, ...) layout.
+  """
+
+  def loss_fn(params, mb):
+    return model.loss_fn(params, mb, par)
+
+  try:
+    pspecs = model.param_specs(par)
+  except Exception:
+    pspecs = None
+
+  def _pin(grads):
+    """Keep the f32 grad accumulator sharded like the params across the
+    microbatch scan (otherwise GSPMD may carry it replicated)."""
+    if pspecs is None:
+      return grads
+    try:
+      return jax.tree.map(jax.lax.with_sharding_constraint, grads, pspecs)
+    except Exception:
+      return grads
+
+  def step(params, opt_state: OptState, batch):
+    if microbatches == 1:
+      (loss, metrics), grads = jax.value_and_grad(
+          loss_fn, has_aux=True)(params, batch)
+    else:
+      g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params))
+
+      def body(carry, mb):
+        g_acc, l_acc = carry
+        (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        g_acc = _pin(jax.tree.map(
+            lambda a, b: a + b.astype(jnp.float32) / microbatches, g_acc, g))
+        return (g_acc, l_acc + l / microbatches), m
+
+      from repro.util import scan as _uscan
+      (grads, loss), ms = _uscan(body, (g0, jnp.zeros(())), batch)
+      metrics = jax.tree.map(lambda x: x[-1], ms)
+
+    params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+    return params, opt_state, dict(metrics, loss=loss, **om)
+
+  return step
+
+
+def make_eval_step(model: Model, par: Parallelism = Parallelism()):
+  def step(params, batch):
+    loss, metrics = model.loss_fn(params, batch, par)
+    return dict(metrics, loss=loss)
+  return step

@@ -1,0 +1,52 @@
+"""Small framework utilities.
+
+``scan``/``fori`` wrap jax.lax control flow with a global "unroll" switch:
+XLA's cost_analysis counts a while-loop body ONCE regardless of trip count,
+so the dry-run's cost pass re-lowers the model with every scan fully unrolled
+(``unroll_scans()``) and reads exact HLO FLOPs from the *lowered* (pre-XLA)
+module.  The compiled artifact used for memory/collective analysis keeps the
+rolled loops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+_STATE = threading.local()
+
+
+def _unrolling() -> bool:
+  return getattr(_STATE, "unroll", False)
+
+
+@contextlib.contextmanager
+def unroll_scans():
+  prev = getattr(_STATE, "unroll", False)
+  _STATE.unroll = True
+  try:
+    yield
+  finally:
+    _STATE.unroll = prev
+
+
+def scan(body: Callable, init, xs, length: int | None = None, *,
+         unroll: int | bool | None = None):
+  if length is None:
+    length = jax.tree.leaves(xs)[0].shape[0]
+  if unroll is None:
+    unroll = length if _unrolling() else 1
+  return jax.lax.scan(body, init, xs, length=length, unroll=unroll)
+
+
+def fori(lo: int, hi: int, body: Callable, init):
+  """fori_loop that fully unrolls under ``unroll_scans()`` (static bounds)."""
+  if _unrolling():
+    c = init
+    for t in range(lo, hi):
+      c = body(t, c)
+    return c
+  return jax.lax.fori_loop(lo, hi, body, init)

@@ -1,0 +1,155 @@
+"""Property tests: the objectives really are (monotone) submodular, and their
+incremental state machines agree with direct evaluation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import objectives as O
+from repro.core.greedi import set_value_feats
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, D = 24, 6
+
+
+def _feats(seed: int):
+  f = jax.random.normal(jax.random.PRNGKey(seed), (N, D))
+  return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+
+_MAX = 16
+_cache = {}
+
+
+def _value_of_set(obj, state0, feats, idx_set):
+  """Fixed-shape jitted evaluator (padded to _MAX) so hypothesis examples
+  don't retrace."""
+  key = repr(obj)  # dataclasses: includes kernel/k_max/sigma etc.
+
+  if key not in _cache:
+    def fn(state0, feats, idx, mask):
+      st = set_value_feats(obj, state0, feats[idx], mask)
+      return obj.value(st)
+    _cache[key] = jax.jit(fn)
+  if len(idx_set) == 0:
+    return 0.0
+  idx = np.full((_MAX,), 0, np.int32)
+  mask = np.zeros((_MAX,), bool)
+  for j, v in enumerate(sorted(idx_set)):
+    idx[j] = v
+    mask[j] = True
+  return float(_cache[key](state0, feats, jnp.asarray(idx),
+                           jnp.asarray(mask)))
+
+
+sets_strategy = st.sets(st.integers(0, N - 1), min_size=0, max_size=6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(a=sets_strategy, b=sets_strategy, e=st.integers(0, N - 1),
+       seed=st.integers(0, 3))
+def test_facility_location_submodular_monotone(a, b, e, seed):
+  feats = _feats(seed)
+  obj = O.FacilityLocation(kernel="linear")
+  st0 = obj.init(feats)
+  small = a | b
+  big = small | b | a
+  # build A subseteq B
+  A, B = small, small | b
+  if e in B:
+    return
+  fA = _value_of_set(obj, st0, feats, A)
+  fB = _value_of_set(obj, st0, feats, B)
+  fAe = _value_of_set(obj, st0, feats, A | {e})
+  fBe = _value_of_set(obj, st0, feats, B | {e})
+  assert fB >= fA - 1e-5                      # monotone
+  assert fA >= -1e-6 and fB >= -1e-6          # nonnegative
+  assert (fAe - fA) >= (fBe - fB) - 1e-4      # diminishing returns
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.sets(st.integers(0, N - 1), min_size=0, max_size=4),
+       b=st.sets(st.integers(0, N - 1), min_size=0, max_size=4),
+       e=st.integers(0, N - 1), seed=st.integers(0, 2))
+def test_information_gain_submodular_monotone(a, b, e, seed):
+  feats = _feats(seed + 10)
+  obj = O.InformationGain(k_max=12, kernel="rbf", kernel_kwargs=(("h", 1.0),))
+  st0 = obj.init_d(D)
+  A, B = a, a | b
+  if e in B or len(B) + 1 > 10:
+    return
+  fA = _value_of_set(obj, st0, feats, A)
+  fB = _value_of_set(obj, st0, feats, B)
+  fAe = _value_of_set(obj, st0, feats, A | {e})
+  fBe = _value_of_set(obj, st0, feats, B | {e})
+  assert fB >= fA - 1e-4
+  assert (fAe - fA) >= (fBe - fB) - 2e-3
+
+
+def test_information_gain_matches_direct_logdet():
+  feats = _feats(3)
+  obj = O.InformationGain(k_max=8, kernel="rbf", kernel_kwargs=(("h", 0.75),),
+                          sigma=1.0)
+  idx = [0, 5, 7, 11, 13]
+  st0 = obj.init_d(D)
+  got = _value_of_set(obj, st0, feats, set(idx))
+  K = np.asarray(O.rbf_kernel(feats[jnp.array(idx)], feats[jnp.array(idx)],
+                              h=0.75))
+  want = 0.5 * np.linalg.slogdet(np.eye(len(idx)) + K)[1]
+  np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_graph_cut_matches_brute_force():
+  n = 16
+  w = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (n, n)))
+  obj = O.GraphCut()
+  st0 = obj.init_w(w)
+  eye = jnp.eye(n)
+  idx = {1, 4, 9}
+  st = set_value_feats(obj, st0, eye[jnp.array(sorted(idx))],
+                       jnp.ones((3,), bool))
+  x = np.zeros(n)
+  x[list(idx)] = 1
+  wn = np.asarray(st0.w)
+  want = float((x[:, None] * (1 - x[None, :]) * wn).sum())
+  np.testing.assert_allclose(float(obj.value(st)), want, rtol=1e-5)
+
+
+def test_graph_cut_nonmonotone():
+  """Adding ALL nodes gives cut 0 < cut of a proper subset."""
+  n = 10
+  w = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (n, n)))
+  obj = O.GraphCut()
+  st0 = obj.init_w(w)
+  eye = jnp.eye(n)
+  st_half = set_value_feats(obj, st0, eye[:5], jnp.ones((5,), bool))
+  st_all = set_value_feats(obj, st0, eye, jnp.ones((n,), bool))
+  assert float(obj.value(st_all)) < float(obj.value(st_half))
+  assert abs(float(obj.value(st_all))) < 1e-4
+
+
+def test_coverage_is_facility_location_with_binary_sim():
+  """Weighted max-coverage == facility location on 0/1 incidence rows."""
+  rng = np.random.default_rng(0)
+  inc = (rng.random((20, 12)) < 0.3).astype(np.float32)   # items x elements
+  obj = O.FacilityLocation(kernel="linear")
+  st0 = obj.init(jnp.eye(12, dtype=jnp.float32))           # eval = elements
+  sel = jnp.asarray(inc[[0, 3, 7]])
+  st = set_value_feats(obj, st0, sel, jnp.ones((3,), bool))
+  want = inc[[0, 3, 7]].max(axis=0).sum() / 12.0
+  np.testing.assert_allclose(float(obj.value(st)), want, rtol=1e-5)
+
+
+def test_incremental_value_matches_replay():
+  """FLState.value stays consistent with a fresh replay (regression)."""
+  feats = _feats(5)
+  obj = O.FacilityLocation(kernel="rbf", kernel_kwargs=(("h", 1.0),))
+  st = obj.init(feats)
+  for i in [2, 9, 4]:
+    st = obj.update(st, feats[i])
+  st2 = set_value_feats(obj, obj.init(feats), feats[jnp.array([2, 9, 4])],
+                        jnp.ones((3,), bool))
+  np.testing.assert_allclose(float(obj.value(st)), float(obj.value(st2)),
+                             rtol=1e-6)
