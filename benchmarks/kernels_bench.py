@@ -39,6 +39,50 @@ def run(quick: bool = False):
          f"ai_fused={flops/bytes_fused:.0f} ai_naive={flops/bytes_naive:.0f} "
          f"flops={flops:.2e}")
 
+    cap = cov + 1.0
+    cov_gain = jax.jit(lambda e, c, co, cp, m: ref.coverage_gain_ref(
+        e, c, co, cp, m, kernel="linear"))
+    t = timeit(cov_gain, ev, cd, cov, cap, mask)
+    bytes_fused_cv = 4.0 * (ne * d + nc * d + 3 * ne + nc)
+    bytes_naive_cv = bytes_fused_cv + 2 * 4.0 * ne * nc
+    emit(f"coverage_gain_{ne}x{nc}x{d}", t * 1e6,
+         f"ai_fused={flops/bytes_fused_cv:.0f} "
+         f"ai_naive={flops/bytes_naive_cv:.0f} flops={flops:.2e}")
+
+  # information-gain cross-term: streamed (k_max, nc) solve + diag reduce
+  ig_sizes = [(64, 4096, 128)] if quick else [(48, 4096, 64),
+                                              (64, 8192, 128),
+                                              (128, 16384, 128)]
+  for kmax, nc, d in ig_sizes:
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    sel = jax.random.normal(ks[0], (kmax, d), jnp.float32)
+    cand = jax.random.normal(ks[1], (nc, d), jnp.float32)
+    linv = jnp.tril(jax.random.normal(ks[2], (kmax, kmax)) * 0.1
+                    + jnp.eye(kmax))
+    ig = jax.jit(lambda s, l, c: ref.info_gain_cond_ref(
+        s, l, c, kernel="rbf", h=0.75, ridge=0.25))
+    t = timeit(ig, sel, linv, cand)
+    flops = 2.0 * kmax * nc * (d + kmax)
+    bytes_fused_ig = 4.0 * (kmax * d + kmax * kmax + nc * d + nc)
+    bytes_naive_ig = bytes_fused_ig + 2 * 4.0 * kmax * nc
+    emit(f"info_gain_{kmax}x{nc}x{d}", t * 1e6,
+         f"ai_fused={flops/bytes_fused_ig:.0f} "
+         f"ai_naive={flops/bytes_naive_ig:.0f} flops={flops:.2e}")
+
+  # graph-cut node-gain sweep: one pass over W instead of degree + matvec
+  for n in ([2048] if quick else [2048, 4096]):
+    ks = jax.random.split(jax.random.PRNGKey(3), 2)
+    w = jnp.abs(jax.random.normal(ks[0], (n, n), jnp.float32))
+    x = (jax.random.uniform(ks[1], (n,)) < 0.3).astype(jnp.float32)
+    cut = jax.jit(ref.graph_cut_gain_ref)
+    t = timeit(cut, w, x)
+    flops = 2.0 * n * n
+    bytes_fused_gc = 4.0 * (n * n + 2 * n)    # W read once
+    bytes_naive_gc = 4.0 * (2 * n * n + 3 * n)  # degree pass + matvec pass
+    emit(f"graph_cut_gain_{n}x{n}", t * 1e6,
+         f"ai_fused={flops/bytes_fused_gc:.2f} "
+         f"ai_naive={flops/bytes_naive_gc:.2f} flops={flops:.2e}")
+
   b, h, hkv, l, dh = 1, 8, 2, 1024, 128
   ks = jax.random.split(jax.random.PRNGKey(1), 3)
   q = jax.random.normal(ks[0], (b, h, l, dh), jnp.float32)

@@ -38,8 +38,10 @@ def main():
   y_test = f(x_test)
 
   k, m = 48, 8
+  # backend="auto": the gain sweep runs through the fused info-gain
+  # cross-term kernel on TPU (kernels/info_gain.py), the XLA oracle on CPU
   obj = O.InformationGain(k_max=k, kernel="rbf", kernel_kwargs=(("h", H),),
-                          sigma=SIGMA)
+                          sigma=SIGMA, backend="auto")
   init = lambda ef, em: obj.init_d(8)
 
   def rmse(idx):

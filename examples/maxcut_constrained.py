@@ -27,7 +27,9 @@ def main():
   w = jnp.asarray(social_graph(n))
   comm = jnp.arange(n) % n_comm                 # community labels
   matroid = C.PartitionMatroid(num_parts=n_comm, caps=(2,) * n_comm)
-  obj = O.GraphCut()
+  # backend="auto": the per-node gain sweep W(1-2x) dispatches to the fused
+  # single-pass kernel on TPU (kernels/graph_cut_gain.py)
+  obj = O.GraphCut(backend="auto")
   eye = jnp.eye(n, dtype=jnp.float32)
   meta = {"part": comm}
   k = 2 * n_comm

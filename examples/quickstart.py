@@ -38,7 +38,9 @@ def main():
   print(f"  worst-case bound (Thm 4): {bounds.thm4_bound(m, k):.3f}; "
         f"random-partition bound (Thm 11): {bounds.thm11_bound():.3f}")
 
-  obj_plain = O.FacilityLocation(kernel="linear")  # baselines re-pool
+  # backend="auto" resolves through kernels/dispatch.py: the fused Pallas
+  # gain kernel on TPU, the XLA oracle elsewhere (docs/kernels.md)
+  obj_plain = O.FacilityLocation(kernel="linear", backend="auto")
   b = baselines(jax.random.PRNGKey(2), feats, m=m, k=k, objective=obj_plain,
                 init_for=lambda ef, em: obj_plain.init(ef, em))
   for name, v in b.items():

@@ -31,9 +31,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import constraints as C
-from repro.core.greedy import GreedyResult, greedy
+from repro.core.greedy import GreedyResult, greedy, with_backend
 from repro.core.partition import random_partition
 from repro.util import fori as _ufori
+from repro.util import shard_map as _shard_map
 
 Array = jax.Array
 
@@ -75,7 +76,8 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
                      local_eval: bool = False,
                      final_subset: int | None = None,
                      mode: str = "standard", sample_frac: float | None = None,
-                     stop_nonpositive: bool = False) -> GreediResult:
+                     stop_nonpositive: bool = False,
+                     backend: str | None = None) -> GreediResult:
   """Algorithm 2 (GreeDi) on one host.
 
   Args:
@@ -85,7 +87,10 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
       (the decomposable mode of Sec. 4.5 / Fig. 4b).
     final_subset: if given, round 2 and the final comparison evaluate f on a
       random subset U of this size (Thm 10); else on the full ground set.
+    backend: optional gain-oracle backend override for both rounds
+      ("pallas" | "ref" | "auto", see kernels/dispatch.py).
   """
+  objective = with_backend(objective, backend)
   n, d = feats.shape
   r_part, r_sel, r_u = jax.random.split(rng, 3)
   parts, pmask, _ = random_partition(r_part, feats, m)
@@ -152,7 +157,9 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
 def centralized_greedy(feats: Array, k: int, *, objective, init_for,
                        rng: Array | None = None, mode: str = "standard",
                        sample_frac: float | None = None,
-                       stop_nonpositive: bool = False) -> tuple[GreedyResult, Array]:
+                       stop_nonpositive: bool = False,
+                       backend: str | None = None) -> tuple[GreedyResult, Array]:
+  objective = with_backend(objective, backend)
   n = feats.shape[0]
   try:
     st0 = init_for(feats, jnp.ones((n,), feats.dtype), feats)
@@ -169,8 +176,10 @@ def centralized_greedy(feats: Array, k: int, *, objective, init_for,
 
 
 def baselines(rng: Array, feats: Array, *, m: int, k: int, objective,
-              init_for, stop_nonpositive: bool = False) -> dict[str, Array]:
+              init_for, stop_nonpositive: bool = False,
+              backend: str | None = None) -> dict[str, Array]:
   """random/random, random/greedy, greedy/merge, greedy/max (paper Sec. 6)."""
+  objective = with_backend(objective, backend)
   n, d = feats.shape
   r_part, r_a, r_b = jax.random.split(rng, 3)
   parts, pmask, _ = random_partition(r_part, feats, m)
@@ -241,7 +250,8 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    objective, axis_names: tuple[str, ...] = ("data",),
                    straggler_keep: Array | None = None,
                    u_subset_eval: bool = False,
-                   rng: Array | None = None):
+                   rng: Array | None = None,
+                   backend: str | None = None):
   """GreeDi over a device mesh; round-2 gains are psum-reduced partial sums.
 
   Args:
@@ -253,9 +263,12 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
       m_alive = sum(straggler_keep).
     u_subset_eval: Thm 10 mode -- evaluate round 2 on machine 0's partition
       (a uniformly random n/m subset) instead of psum over the full set.
+    backend: optional gain-oracle backend override (kernels/dispatch.py);
+      applies to round-1 gains and the psum-reduced round-2 partial stats.
 
   Returns a GreediResult (replicated on every shard).
   """
+  objective = with_backend(objective, backend)
   m = 1
   for a in axis_names:
     m *= mesh.shape[a]
@@ -338,8 +351,8 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
                         stage1_vals)
 
-  shmapped = jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                           out_specs=out_specs, check_vma=False)
+  shmapped = _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
   return shmapped(feats, straggler_keep, rng)
 
 
@@ -434,15 +447,16 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
                         stage1_vals)
 
-  shmapped = jax.shard_map(fn, mesh=mesh, in_specs=(P(axis_names), P()),
-                           out_specs=out_specs, check_vma=False)
+  shmapped = _shard_map(fn, mesh=mesh, in_specs=(P(axis_names), P()),
+                        out_specs=out_specs)
   return shmapped(feats, rng)
 
 
 def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
                         objective,
                         pod_axis: str = "pod", data_axis: str = "data",
-                        rng: Array | None = None):
+                        rng: Array | None = None,
+                        backend: str | None = None):
   """Three-level GreeDi for multi-pod meshes: device -> pod -> global.
 
   Level 1: each device greedily selects kappa from its local partition.
@@ -455,6 +469,7 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
   The returned value also tracks the best lower-level solution so the final
   answer is max over levels, mirroring Alg. 2's max(A_max, A_B).
   """
+  objective = with_backend(objective, backend)
   mp, md = mesh.shape[pod_axis], mesh.shape[data_axis]
   m = mp * md
   n, d = feats.shape
@@ -534,6 +549,6 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
   out_specs = jax.tree.map(lambda _: P(), GreediResult(
       sel_feats=0, sel_valid=0, value=0, value_merged=0,
       value_best_single=0, stage1_values=0))
-  shmapped = jax.shard_map(fn, mesh=mesh, in_specs=(P(both), P()),
-                           out_specs=out_specs, check_vma=False)
+  shmapped = _shard_map(fn, mesh=mesh, in_specs=(P(both), P()),
+                        out_specs=out_specs)
   return shmapped(feats, rng)

@@ -20,6 +20,7 @@ shards) without retracing.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, NamedTuple
 
 import jax
@@ -30,6 +31,19 @@ from repro.util import fori as _ufori
 
 Array = jax.Array
 NEG = -1e30
+
+
+def with_backend(objective, backend: str | None):
+  """Return ``objective`` with its gain-oracle backend overridden.
+
+  No-op for ``backend=None`` and for objectives without a ``backend`` field
+  (e.g. Modular), so callers can thread the override unconditionally.
+  """
+  if backend is None or not dataclasses.is_dataclass(objective):
+    return objective
+  if not any(f.name == "backend" for f in dataclasses.fields(objective)):
+    return objective
+  return dataclasses.replace(objective, backend=backend)
 
 
 class GreedyResult(NamedTuple):
@@ -45,7 +59,8 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
            constraint=None, meta: dict[str, Array] | None = None,
            rng: Array | None = None, mode: str = "standard",
            sample_frac: float | None = None,
-           stop_nonpositive: bool = False) -> GreedyResult:
+           stop_nonpositive: bool = False,
+           backend: str | None = None) -> GreedyResult:
   """Select up to ``k_steps`` items from ``cand_feats`` maximizing ``objective``.
 
   Args:
@@ -63,7 +78,10 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
       canonical choice is (1/k) * ln(1/eps).
     stop_nonpositive: treat steps whose best gain <= 0 as no-ops (required
       for non-monotone objectives; harmless for monotone ones).
+    backend: optional gain-oracle backend override ("pallas" | "ref" |
+      "auto") applied to the objective for this run (see kernels/dispatch.py).
   """
+  objective = with_backend(objective, backend)
   n, d = cand_feats.shape
   if cand_mask is None:
     cand_mask = jnp.ones((n,), bool)
@@ -147,14 +165,17 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
 
 
 def best_of_knapsack(objective, state0, cand_feats, k_steps, *, meta,
-                     budget: float, cand_mask=None, rng=None) -> GreedyResult:
+                     budget: float, cand_mask=None, rng=None,
+                     backend: str | None = None) -> GreedyResult:
   """max(plain greedy, cost-benefit greedy) under a knapsack: the
   (1 - 1/sqrt(e))-approximation of Krause & Guestrin (2005b) (Sec. 5.2)."""
   kn = C.Knapsack(budget)
   a = greedy(objective, state0, cand_feats, k_steps, cand_mask=cand_mask,
-             constraint=kn, meta=meta, rng=rng, mode="standard")
+             constraint=kn, meta=meta, rng=rng, mode="standard",
+             backend=backend)
   b = greedy(objective, state0, cand_feats, k_steps, cand_mask=cand_mask,
-             constraint=kn, meta=meta, rng=rng, mode="cost_benefit")
+             constraint=kn, meta=meta, rng=rng, mode="cost_benefit",
+             backend=backend)
   va = objective.value(a.state)
   vb = objective.value(b.state)
   pick_a = va >= vb

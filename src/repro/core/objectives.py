@@ -21,6 +21,12 @@ model (poly(m, k), independent of n).
 All state is padded to static shapes (``k_max``) so that the greedy loop is a
 single ``lax.fori_loop`` and the whole selection jits/lowers cleanly under
 ``shard_map`` on a production mesh.
+
+Gain-oracle backends: every objective carries a ``backend`` field
+("pallas" | "ref" | "auto") resolved through kernels/dispatch.py, so the hot
+marginal-gain loop routes to a fused Pallas kernel on TPU (or its pure-jnp
+oracle elsewhere) without per-objective flags.  Similarity kernels outside
+``dispatch.FUSED_SIMS`` fall back to the generic jnp path below.
 """
 from __future__ import annotations
 
@@ -31,7 +37,14 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+
 Array = jax.Array
+
+
+def _kernel_h(kernel_kwargs: tuple) -> float:
+  """Bandwidth for the fused oracles (ignored by the linear kernel)."""
+  return float(dict(kernel_kwargs).get("h", 0.75))
 
 # ---------------------------------------------------------------------------
 # Similarity kernels
@@ -87,13 +100,14 @@ class FacilityLocation:
   f(S) = L({e0}) - L(S + {e0}).  With a 0/1 incidence "similarity" it is
   weighted max-coverage.  Monotone, nonnegative, decomposable (Sec 4.5).
 
-  ``use_pallas`` routes the gain computation through the fused Pallas kernel
-  (kernels/facility_gain.py) instead of materializing sim(eval, cand).
+  ``backend`` selects the gain oracle through kernels/dispatch.py: the fused
+  Pallas kernel (kernels/facility_gain.py) streams eval/candidate tiles
+  through VMEM instead of materializing sim(eval, cand) in HBM.
   """
   kernel: str = "linear"
   kernel_kwargs: tuple = ()
   baseline: float = 0.0
-  use_pallas: bool = False
+  backend: str = "auto"
 
   def _sim(self, x: Array, y: Array) -> Array:
     return KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
@@ -107,11 +121,10 @@ class FacilityLocation:
 
   def gains(self, state: FLState, cand_feats: Array) -> Array:
     denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
-    if self.use_pallas:
-      from repro.kernels import ops as kops
-      return kops.facility_gain(
-          state.eval_feats, cand_feats, state.cov, state.eval_mask,
-          kernel=self.kernel, **dict(self.kernel_kwargs)) / denom
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve("facility_gain", self.backend)
+      return fn(state.eval_feats, cand_feats, state.cov, state.eval_mask,
+                kernel=self.kernel, h=_kernel_h(self.kernel_kwargs)) / denom
     sim = self._sim(state.eval_feats, cand_feats)          # (ne, nc)
     inc = jnp.maximum(sim - state.cov[:, None], 0.0)
     return (state.eval_mask @ inc) / denom
@@ -131,6 +144,11 @@ class FacilityLocation:
   # a psum over shards reproduces the global objective exactly.
   def partial_stats(self, state: FLState, cand_feats: Array) -> tuple[Array, Array]:
     """Returns (sum-of-gains (nc,), live-count ()) -- psum-able."""
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve("facility_gain", self.backend)
+      part = fn(state.eval_feats, cand_feats, state.cov, state.eval_mask,
+                kernel=self.kernel, h=_kernel_h(self.kernel_kwargs))
+      return part, jnp.sum(state.eval_mask)
     sim = self._sim(state.eval_feats, cand_feats)
     inc = jnp.maximum(sim - state.cov[:, None], 0.0)
     return state.eval_mask @ inc, jnp.sum(state.eval_mask)
@@ -204,17 +222,37 @@ class IGState(NamedTuple):
   value: Array       # scalar f(S) = 0.5 logdet(I + sigma^-2 K_SS)
 
 
+def _masked_linv(chol: Array, count: Array) -> Array:
+  """inv(L) with the columns of not-yet-selected rows zeroed.
+
+  linv @ k(S, cand) then equals L^-1 applied to the live-row-masked cross
+  kernel, which is what the fused info-gain oracle consumes (the identity
+  padding of ``chol`` keeps the inverse well defined for any count).
+  """
+  k_max = chol.shape[0]
+  linv = jax.scipy.linalg.solve_triangular(
+      chol, jnp.eye(k_max, dtype=chol.dtype), lower=True)
+  live = (jnp.arange(k_max) < count)[None, :]
+  return jnp.where(live, linv, 0.0)
+
+
 @dataclasses.dataclass(frozen=True)
 class InformationGain:
   """f(S) = 0.5 logdet(I + sigma^-2 K_SS); monotone submodular (Krause+Guestrin).
 
   Incremental Cholesky of M = K_SS + sigma^2 I in a fixed (k_max, k_max)
   buffer.  Marginal gain of v:  0.5 log( (k_vv + s2 - ||L^-1 k_Sv||^2) / s2 ).
+
+  ``backend`` routes the candidate sweep through the fused info-gain
+  cross-term kernel (kernels/info_gain.py): the (k_max, nc) cross-kernel
+  matrix and its back-substitution stay in VMEM; only (nc,) conditional
+  variances are written out.
   """
   k_max: int
   kernel: str = "rbf"
   kernel_kwargs: tuple = (("h", 0.75),)
   sigma: float = 1.0
+  backend: str = "auto"
 
   def _k(self, x: Array, y: Array) -> Array:
     return KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
@@ -238,10 +276,15 @@ class InformationGain:
 
   def gains(self, state: IGState, cand_feats: Array) -> Array:
     s2 = self.sigma ** 2
-    c = self._cross(state, cand_feats)                     # (k_max, nc)
-    k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
-    cond = k_vv + s2 - jnp.sum(c * c, axis=0)
-    cond = jnp.maximum(cond, 1e-12)
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve("info_gain_cond", self.backend)
+      cond = fn(state.sel_feats, _masked_linv(state.chol, state.count),
+                cand_feats, kernel=self.kernel,
+                h=_kernel_h(self.kernel_kwargs), ridge=s2)
+    else:
+      c = self._cross(state, cand_feats)                   # (k_max, nc)
+      k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
+      cond = jnp.maximum(k_vv + s2 - jnp.sum(c * c, axis=0), 1e-12)
     return 0.5 * jnp.log(cond / s2)
 
   def update(self, state: IGState, feat: Array) -> IGState:
@@ -272,12 +315,14 @@ class InformationGain:
 class LogDetDPP:
   """f(S) = logdet(K_S) via the same incremental Cholesky, no noise floor.
 
-  Non-monotone once marginal conditional variances drop below 1.
+  Non-monotone once marginal conditional variances drop below 1.  Shares the
+  fused info-gain cross-term oracle with InformationGain (ridge = jitter).
   """
   k_max: int
   kernel: str = "rbf"
   kernel_kwargs: tuple = (("h", 0.75),)
   jitter: float = 1e-6
+  backend: str = "auto"
 
   def _k(self, x, y):
     k = KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs))
@@ -298,9 +343,15 @@ class LogDetDPP:
     return jax.scipy.linalg.solve_triangular(state.chol, k_sc, lower=True)
 
   def gains(self, state, cand_feats):
-    c = self._cross(state, cand_feats)
-    k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
-    cond = jnp.maximum(k_vv + self.jitter - jnp.sum(c * c, axis=0), 1e-12)
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve("info_gain_cond", self.backend)
+      cond = fn(state.sel_feats, _masked_linv(state.chol, state.count),
+                cand_feats, kernel=self.kernel,
+                h=_kernel_h(self.kernel_kwargs), ridge=self.jitter)
+    else:
+      c = self._cross(state, cand_feats)
+      k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
+      cond = jnp.maximum(k_vv + self.jitter - jnp.sum(c * c, axis=0), 1e-12)
     return jnp.log(cond)
 
   def update(self, state, feat):
@@ -321,6 +372,7 @@ class LogDetDPP:
 
 class SatCovState(NamedTuple):
   cover: Array        # (n_eval,) accumulated similarity mass per eval point
+  cap: Array          # (n_eval,) saturation level alpha * C_i(V), fixed at init
   eval_feats: Array
   eval_mask: Array
   value: Array
@@ -334,12 +386,18 @@ class SaturatedCoverage:
 
   Monotone submodular; the saturation alpha*C_i(V) rewards covering every
   document a little instead of a few documents a lot.  ``total`` (C_i(V))
-  is supplied at init so the objective stays decomposable/local (Sec. 4.5):
-  each machine can use the saturation levels of its own partition.
+  may be supplied at init so the objective stays decomposable/local
+  (Sec. 4.5): each machine can use the saturation levels of its own
+  partition; otherwise it is computed once from the eval set and carried in
+  the state (it only depends on V, not on S).
+
+  ``backend`` routes the gain sweep through the fused saturated-coverage
+  kernel (kernels/coverage_gain.py).
   """
   kernel: str = "linear"
   kernel_kwargs: tuple = ()
   alpha: float = 0.25
+  backend: str = "auto"
 
   def _sim(self, x, y):
     return jnp.maximum(KERNELS[self.kernel](x, y, **dict(self.kernel_kwargs)),
@@ -350,30 +408,33 @@ class SaturatedCoverage:
     n = eval_feats.shape[0]
     if eval_mask is None:
       eval_mask = jnp.ones((n,), eval_feats.dtype)
+    if total is None:
+      total = jnp.sum(self._sim(eval_feats, eval_feats)
+                      * eval_mask[None, :].astype(jnp.float32), axis=1)
     cover = jnp.zeros((n,), jnp.float32)
-    return SatCovState(cover, eval_feats, eval_mask, jnp.zeros(()))
-
-  def _cap(self, state: SatCovState) -> Array:
-    total = jnp.sum(self._sim(state.eval_feats, state.eval_feats)
-                    * state.eval_mask[None, :], axis=1)
-    return self.alpha * total
+    return SatCovState(cover, self.alpha * total.astype(jnp.float32),
+                       eval_feats, eval_mask, jnp.zeros(()))
 
   def gains(self, state: SatCovState, cand_feats: Array) -> Array:
-    sim = self._sim(state.eval_feats, cand_feats)          # (ne, nc)
-    cap = self._cap(state)
-    new = jnp.minimum(state.cover[:, None] + sim, cap[:, None])
-    inc = new - jnp.minimum(state.cover, cap)[:, None]
     denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve("coverage_gain", self.backend)
+      return fn(state.eval_feats, cand_feats, state.cover, state.cap,
+                state.eval_mask, kernel=self.kernel,
+                h=_kernel_h(self.kernel_kwargs)) / denom
+    sim = self._sim(state.eval_feats, cand_feats)          # (ne, nc)
+    new = jnp.minimum(state.cover[:, None] + sim, state.cap[:, None])
+    inc = new - jnp.minimum(state.cover, state.cap)[:, None]
     return (state.eval_mask @ inc) / denom
 
   def update(self, state: SatCovState, feat: Array) -> SatCovState:
     sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
-    cap = self._cap(state)
+    cap = state.cap
     new_cover = state.cover + sim
     denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
     gain = jnp.sum((jnp.minimum(new_cover, cap) -
                     jnp.minimum(state.cover, cap)) * state.eval_mask) / denom
-    return SatCovState(new_cover, state.eval_feats, state.eval_mask,
+    return SatCovState(new_cover, cap, state.eval_feats, state.eval_mask,
                        state.value + gain)
 
   def value(self, state: SatCovState) -> Array:
@@ -400,7 +461,11 @@ class GraphCut:
   "feature" of node v is e_v, and gains/update recover the index by argmax.
   The paper evaluates this on a 1,899-node social graph, so a dense,
   replicated W is the intended regime.
+
+  ``backend`` routes the per-node gain sweep deg - 2 Wx == W (1 - 2x) through
+  the fused single-pass kernel (kernels/graph_cut_gain.py).
   """
+  backend: str = "auto"
 
   def init_w(self, w: Array) -> CutState:
     n = w.shape[0]
@@ -410,9 +475,8 @@ class GraphCut:
 
   def gains(self, state: CutState, cand_feats: Array) -> Array:
     # cand_feats: (nc, n) one-hot. gain(v) = deg_v - 2 * (W x)_v  for v not in S
-    wx = state.w @ state.in_s                  # (n,)
-    deg = jnp.sum(state.w, axis=1)
-    node_gain = deg - 2.0 * wx
+    fn = dispatch.resolve("graph_cut_gain", self.backend)
+    node_gain = fn(state.w, state.in_s)
     return cand_feats @ node_gain
 
   def update(self, state: CutState, feat: Array) -> CutState:

@@ -1,8 +1,11 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), validated against
-the pure-jnp oracles in ref.py via ops.py's dispatching wrappers.
+the pure-jnp oracles in ref.py via ops.py's padded/jit'd wrappers.  The
+objective-facing entry point is dispatch.py: each gain oracle is registered
+there with a fused Pallas and a reference backend, and objectives resolve
+their ``backend`` field ("pallas" | "ref" | "auto") through the registry.
 """
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 
-__all__ = ["ops", "ref"]
+__all__ = ["dispatch", "ops", "ref"]

@@ -1,0 +1,79 @@
+"""Kernel-dispatch registry: objective gain oracles -> backend implementations.
+
+Every objective's hot-loop oracle (the marginal-gain evaluation of Eq. 2) is
+registered here under a stable name with two implementations:
+
+  * ``pallas`` -- the fused Pallas kernel (compiled to Mosaic on TPU; runs in
+    interpret mode on CPU, where the kernel body executes as traced jnp ops
+    with TPU-identical semantics);
+  * ``ref``    -- the pure-jnp oracle from kernels/ref.py (the XLA path, also
+    the ground truth for the parity tests in tests/test_kernels.py).
+
+Objectives carry a ``backend`` field ("pallas" | "ref" | "auto") instead of
+ad-hoc boolean flags; ``resolve`` maps it to a callable.  "auto" picks the
+fused kernel on TPU and the XLA oracle elsewhere (interpret mode is for
+correctness, not speed).  The similarity kernels the fused oracles understand
+are listed in ``FUSED_SIMS``; objectives fall back to their generic jnp path
+for anything else (e.g. ``neg_sq_dist``).
+
+Adding a fused oracle for a new objective (see docs/kernels.md):
+
+  1. write the Pallas kernel in kernels/<name>.py and its oracle in ref.py;
+  2. add a padded/jit'd wrapper pair in ops.py;
+  3. ``register("<name>", pallas=..., ref=...)`` next to the wrapper;
+  4. route the objective's ``gains()`` through ``resolve("<name>", backend)``
+     and add a parity sweep to tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+
+BACKENDS = ("pallas", "ref", "auto")
+
+# similarity kernels the fused oracles implement in-kernel
+FUSED_SIMS = ("linear", "rbf")
+
+
+class Oracle(NamedTuple):
+  name: str
+  pallas: Callable
+  ref: Callable
+
+
+_REGISTRY: dict[str, Oracle] = {}
+
+
+def register(name: str, *, pallas: Callable, ref: Callable) -> None:
+  """Register (or replace) an oracle's backend implementations."""
+  _REGISTRY[name] = Oracle(name, pallas, ref)
+
+
+def _ensure_registered() -> None:
+  # ops.py registers its wrappers at import time; import lazily so the
+  # registry is populated on first use without an import cycle.
+  if not _REGISTRY:
+    from repro.kernels import ops  # noqa: F401
+
+
+def names() -> tuple[str, ...]:
+  _ensure_registered()
+  return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> Oracle:
+  _ensure_registered()
+  if name not in _REGISTRY:
+    raise KeyError(f"no oracle {name!r}; registered: {sorted(_REGISTRY)}")
+  return _REGISTRY[name]
+
+
+def resolve(name: str, backend: str = "auto") -> Callable:
+  """Map (oracle name, backend) to the implementation to call."""
+  if backend not in BACKENDS:
+    raise ValueError(f"backend {backend!r} not in {BACKENDS}")
+  oracle = get(name)
+  if backend == "auto":
+    backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+  return oracle.pallas if backend == "pallas" else oracle.ref

@@ -13,9 +13,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
+from repro.kernels.coverage_gain import coverage_gain_pallas
 from repro.kernels.facility_gain import facility_gain_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.graph_cut_gain import graph_cut_gain_pallas
+from repro.kernels.info_gain import info_gain_cond_pallas
 from repro.kernels.pairwise import pairwise_pallas
 
 Array = jax.Array
@@ -53,6 +56,66 @@ def facility_gain(eval_feats: Array, cand_feats: Array, cov: Array,
   out = facility_gain_pallas(ev, cd, cv, mk, kernel=kernel, h=h, block_m=bm,
                              block_n=bn, interpret=_interpret())
   return out[:nc]
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "ridge",
+                                             "block_n", "force_xla"))
+def info_gain_cond(sel_feats: Array, linv: Array, cand_feats: Array, *,
+                   kernel: str = "rbf", h: float = 0.75, ridge: float = 1.0,
+                   block_n: int = 256, force_xla: bool = False) -> Array:
+  """Posterior conditional variances (nc,) -- see info_gain.py."""
+  if force_xla:
+    return ref.info_gain_cond_ref(sel_feats, linv, cand_feats, kernel=kernel,
+                                  h=h, ridge=ridge)
+  k, nc = sel_feats.shape[0], cand_feats.shape[0]
+  bn = min(block_n, _ceil_mult(nc))
+  kpad = (-k) % 8  # sublane-align the resident selection block
+  sl = _pad_rows(sel_feats, 8)
+  lv = jnp.pad(linv, ((0, kpad), (0, kpad))) if kpad else linv
+  cd = _pad_rows(cand_feats, bn)
+  out = info_gain_cond_pallas(sl, lv, cd, kernel=kernel, h=h, ridge=ridge,
+                              block_n=bn, interpret=_interpret())
+  return out[:nc]
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
+                                             "block_n", "force_xla"))
+def coverage_gain(eval_feats: Array, cand_feats: Array, cover: Array,
+                  cap: Array, eval_mask: Array, *, kernel: str = "linear",
+                  h: float = 0.75, block_m: int = 256, block_n: int = 256,
+                  force_xla: bool = False) -> Array:
+  """Unnormalized saturated-coverage gains (nc,) -- see coverage_gain.py."""
+  if force_xla:
+    return ref.coverage_gain_ref(eval_feats, cand_feats, cover, cap,
+                                 eval_mask, kernel=kernel, h=h)
+  ne, nc = eval_feats.shape[0], cand_feats.shape[0]
+  bm, bn = min(block_m, _ceil_mult(ne)), min(block_n, _ceil_mult(nc))
+  ev = _pad_rows(eval_feats, bm)
+  cd = _pad_rows(cand_feats, bn)
+  cv = _pad_rows(cover, bm)
+  cp = _pad_rows(cap, bm)      # cap 0 + mask 0 => padded rows gain 0
+  mk = _pad_rows(eval_mask, bm, value=0.0)
+  out = coverage_gain_pallas(ev, cd, cv, cp, mk, kernel=kernel, h=h,
+                             block_m=bm, block_n=bn, interpret=_interpret())
+  return out[:nc]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "force_xla"))
+def graph_cut_gain(w: Array, in_s: Array, *, block_m: int = 256,
+                   block_n: int = 256, force_xla: bool = False) -> Array:
+  """Per-node cut gains (n,) -- see graph_cut_gain.py."""
+  if force_xla:
+    return ref.graph_cut_gain_ref(w, in_s)
+  n = w.shape[0]
+  bm, bn = min(block_m, _ceil_mult(n)), min(block_n, _ceil_mult(n))
+  b = max(bm, bn)
+  pad = (-n) % b
+  wp = jnp.pad(w, ((0, pad), (0, pad))) if pad else w
+  xp = _pad_rows(in_s, b)
+  out = graph_cut_gain_pallas(wp, xp, block_m=bm, block_n=bn,
+                              interpret=_interpret())
+  return out[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("kernel", "h", "block_x",
@@ -102,3 +165,17 @@ def _ceil_mult(n: int) -> int:
     if n >= b:
       return b
   return 8
+
+
+# ---------------------------------------------------------------------------
+# registry: one gain oracle per objective, fused + reference backends
+# ---------------------------------------------------------------------------
+
+dispatch.register("facility_gain", pallas=facility_gain,
+                  ref=functools.partial(facility_gain, force_xla=True))
+dispatch.register("info_gain_cond", pallas=info_gain_cond,
+                  ref=functools.partial(info_gain_cond, force_xla=True))
+dispatch.register("coverage_gain", pallas=coverage_gain,
+                  ref=functools.partial(coverage_gain, force_xla=True))
+dispatch.register("graph_cut_gain", pallas=graph_cut_gain,
+                  ref=functools.partial(graph_cut_gain, force_xla=True))

@@ -41,6 +41,54 @@ def pairwise_ref(x: Array, y: Array, *, kernel: str = "rbf",
   return _sim(x.astype(jnp.float32), y.astype(jnp.float32), kernel, h)
 
 
+def info_gain_cond_ref(sel_feats: Array, linv: Array, cand_feats: Array, *,
+                       kernel: str = "rbf", h: float = 0.75,
+                       ridge: float = 1.0) -> Array:
+  """Posterior conditional variance of each candidate given the selected set.
+
+  cond[j] = k(v_j, v_j) + ridge - || linv @ k(S, v_j) ||^2, clamped at 1e-12.
+
+  ``linv`` is inv(L) for L = chol(K_SS + ridge I) with columns past the live
+  selection count zeroed, so padded selection rows contribute nothing.  The
+  information-gain objective maps this to 0.5 log(cond / sigma^2); the DPP
+  log-det maps it to log(cond).
+  """
+  sel = sel_feats.astype(jnp.float32)
+  cd = cand_feats.astype(jnp.float32)
+  k_sc = _sim(sel, cd, kernel, h)                       # (k, nc)
+  c = linv.astype(jnp.float32) @ k_sc                   # (k, nc)
+  if kernel == "rbf":
+    k_vv = jnp.ones((cd.shape[0],), jnp.float32)
+  else:
+    k_vv = jnp.sum(cd * cd, axis=-1)
+  cond = k_vv + ridge - jnp.sum(c * c, axis=0)
+  return jnp.maximum(cond, 1e-12)
+
+
+def coverage_gain_ref(eval_feats: Array, cand_feats: Array, cover: Array,
+                      cap: Array, eval_mask: Array, *, kernel: str = "linear",
+                      h: float = 0.75) -> Array:
+  """Unnormalized saturated-coverage gains (Lin & Bilmes): (nc,) float32.
+
+  gain[j] = sum_i mask_i * [ min(cover_i + s_ij, cap_i) - min(cover_i, cap_i) ]
+  with s_ij = max(sim(e_i, c_j), 0).
+  """
+  sim = jnp.maximum(
+      _sim(eval_feats.astype(jnp.float32), cand_feats.astype(jnp.float32),
+           kernel, h), 0.0)
+  cover = cover.astype(jnp.float32)
+  cap = cap.astype(jnp.float32)
+  new = jnp.minimum(cover[:, None] + sim, cap[:, None])
+  inc = new - jnp.minimum(cover, cap)[:, None]
+  return eval_mask.astype(jnp.float32) @ inc
+
+
+def graph_cut_gain_ref(w: Array, in_s: Array) -> Array:
+  """Per-node cut gains deg_v - 2 (W x)_v == W @ (1 - 2x): (n,) float32."""
+  wf = w.astype(jnp.float32)
+  return wf @ (1.0 - 2.0 * in_s.astype(jnp.float32))
+
+
 def mha_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
             scale: float | None = None) -> Array:
   """Reference GQA attention. q: (B, H, Lq, dh); k, v: (B, Hkv, Lk, dh)."""

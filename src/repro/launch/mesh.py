@@ -12,18 +12,18 @@ from __future__ import annotations
 
 import jax
 
+from repro.util import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
   shape = (2, 16, 16) if multi_pod else (16, 16)
   axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-  return jax.make_mesh(shape, axes,
-                       axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+  return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(4, 2), axes=("data", "model")):
   """Small mesh over forced host devices (tests / examples)."""
-  return jax.make_mesh(shape, axes,
-                       axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+  return make_mesh(shape, axes)
 
 
 def dp_axes_of(mesh) -> tuple:

@@ -43,8 +43,8 @@ def main() -> None:
   t0 = time.time()
   if args.mesh:
     from repro.core.greedi import greedi_sharded_fast
-    mesh = jax.make_mesh((args.mesh,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.util import make_mesh  # jax imported post-env-setup
+    mesh = make_mesh((args.mesh,), ("data",))
     r = greedi_sharded_fast(feats, mesh=mesh, kappa=kappa, k_final=args.k)
     print(f"[select] sharded GreeDi (m={args.mesh}) f={float(r.value):.4f} "
           f"merged={float(r.value_merged):.4f} "

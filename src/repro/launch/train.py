@@ -82,8 +82,8 @@ def main() -> None:
   if args.mesh:
     dims = tuple(int(s) for s in args.mesh.split("x"))
     axes = ("data", "model")[: len(dims)]
-    mesh = jax.make_mesh(dims, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(dims))
+    from repro.util import make_mesh  # jax imported post-env-setup
+    mesh = make_mesh(dims, axes)
     par = Parallelism(dp_axes=("data",), dp_size=dims[0])
 
   # ---- data (+ the paper's technique: GreeDi coreset selection) ----------

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.util import shard_map as _shard_map
+
 Array = jax.Array
 BLOCK = 256  # quantization block (per-block scales)
 
@@ -94,6 +96,6 @@ def make_compressed_allreduce(mesh, axis_names: tuple[str, ...], grad_specs):
   def fn(grads, error, rng):
     return compressed_psum(grads, error, rng, axis_names)
 
-  return jax.shard_map(fn, mesh=mesh,
-                       in_specs=(grad_specs, especs, P()),
-                       out_specs=(grad_specs, especs), check_vma=False)
+  return _shard_map(fn, mesh=mesh,
+                    in_specs=(grad_specs, especs, P()),
+                    out_specs=(grad_specs, especs))

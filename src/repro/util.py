@@ -50,3 +50,32 @@ def fori(lo: int, hi: int, body: Callable, init):
       c = body(t, c)
     return c
   return jax.lax.fori_loop(lo, hi, body, init)
+
+
+# ---------------------------------------------------------------------------
+# jax version compatibility (mesh construction + shard_map)
+# ---------------------------------------------------------------------------
+
+
+def make_mesh(axis_shapes, axis_names):
+  """jax.make_mesh with Auto axis types where the installed jax supports
+  them (jax.sharding.AxisType landed after 0.4.x), plain mesh otherwise."""
+  axis_type = getattr(jax.sharding, "AxisType", None)
+  if axis_type is not None:
+    try:
+      return jax.make_mesh(axis_shapes, axis_names,
+                           axis_types=(axis_type.Auto,) * len(axis_names))
+    except TypeError:
+      pass
+  return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+  """shard_map with replication/VMA checking off, across jax versions
+  (jax.shard_map + check_vma new-style; jax.experimental + check_rep old)."""
+  if hasattr(jax, "shard_map"):
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+  from jax.experimental.shard_map import shard_map as _shard_map
+  return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False)

@@ -13,10 +13,10 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, reduced
 from repro.models.registry import build_model, Parallelism
 from repro.train.optimizer import OptConfig, init_opt_state
+from repro.util import make_mesh
 from repro.train.train_step import make_train_step
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = dataclasses.replace(reduced(get_config("{arch}")), vocab=1024)
 model = build_model(cfg, remat="full")
 par = Parallelism(dp_axes=("data",), dp_size=4, model_size=2, fsdp=True,
@@ -48,9 +48,9 @@ import jax, jax.numpy as jnp, dataclasses
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, reduced
 from repro.models.registry import build_model, Parallelism
+from repro.util import make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((4, 2), ("data", "model"))
 cfg = reduced(get_config("qwen3-8b"))
 model = build_model(cfg, remat=None)
 par = Parallelism(dp_axes=("data",), dp_size=4, model_size=2)

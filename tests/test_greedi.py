@@ -9,6 +9,7 @@ import pytest
 from repro.core import bounds, objectives as O
 from repro.core.greedi import (baselines, centralized_greedy,
                                greedi_reference, greedi_sharded)
+from repro.util import make_mesh
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -34,6 +35,28 @@ def test_greedi_beats_thm4_and_thm11(m, k):
   # worst-case Thm 4 must always hold; Thm 11 holds in expectation
   assert min(ratios) >= bounds.thm4_bound(m, k) - 1e-6
   assert np.mean(ratios) >= bounds.thm11_bound() - 1e-6
+
+
+@pytest.mark.parametrize("name", ["coverage", "information_gain"])
+def test_greedi_thm4_other_objectives(name):
+  """greedi_reference respects the Thm 4 floor for the non-FL monotone
+  objectives too (coverage and the GP active-set information gain)."""
+  k, m = 6, 4
+  if name == "coverage":
+    feats = jnp.abs(_feats(11, n=96, d=8))
+    obj = O.SaturatedCoverage(kernel="linear", alpha=0.3)
+    init = lambda ef, em: obj.init(ef, em)
+  else:
+    feats = _feats(12, n=96, d=8)
+    obj = O.InformationGain(k_max=k, kernel="rbf",
+                            kernel_kwargs=(("h", 0.75),), sigma=0.7)
+    init = lambda ef, em: obj.init_d(8)
+  _, v_c = centralized_greedy(feats, k, objective=obj, init_for=init)
+  floor = bounds.thm4_bound(m, k)
+  for s in range(3):
+    r = greedi_reference(jax.random.PRNGKey(s), feats, m=m, kappa=k,
+                         k_final=k, objective=obj, init_for=init)
+    assert float(r.value) >= floor * float(v_c) - 1e-6, (name, s)
 
 
 def test_greedi_close_to_centralized_on_clustered_data():
@@ -95,8 +118,7 @@ def test_greedi_modular_is_exact():
 def test_greedi_sharded_single_device_mesh():
   """shard_map path on a trivial 1-device mesh matches expectations."""
   feats = _feats(7, n=64)
-  mesh = jax.make_mesh((1,), ("data",),
-                       axis_types=(jax.sharding.AxisType.Auto,))
+  mesh = make_mesh((1,), ("data",))
   r = greedi_sharded(feats, mesh=mesh, kappa=8, k_final=8, objective=OBJ)
   _, v_c = centralized_greedy(feats, 8, objective=OBJ, init_for=INIT)
   # m=1: round 1 IS centralized greedy
@@ -108,10 +130,11 @@ def test_greedi_sharded_straggler_tolerance(subrun):
 import jax, jax.numpy as jnp
 from repro.core import objectives as O
 from repro.core.greedi import greedi_sharded, centralized_greedy
+from repro.util import make_mesh
 f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
 f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
 obj = O.FacilityLocation(kernel="linear")
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 full = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj)
 keep = jnp.array([True]*6 + [False]*2)   # 2 machines failed/straggled
 part = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
@@ -132,11 +155,11 @@ def test_greedi_hierarchical_multipod(subrun):
 import jax, jax.numpy as jnp
 from repro.core import objectives as O
 from repro.core.greedi import greedi_hierarchical, centralized_greedy
+from repro.util import make_mesh
 f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
 f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
 obj = O.FacilityLocation(kernel="linear")
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 r = greedi_hierarchical(f, mesh=mesh, kappa=8, k_final=8, objective=obj)
 _, v_c = centralized_greedy(f, 8, objective=obj,
                             init_for=lambda ef, em: obj.init(ef, em))
@@ -168,9 +191,10 @@ def test_greedi_sharded_fast_matches_reference(subrun):
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import objectives as O
 from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
 f = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
 f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",))
 obj = O.FacilityLocation(kernel="linear")
 a = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj)
 b = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8)

@@ -44,6 +44,29 @@ def test_greedy_nemhauser_bound(seed):
   assert float(obj.value(r.state)) >= bounds.greedy_bound(k, k) * opt - 1e-6
 
 
+@pytest.mark.parametrize("name", ["facility_location", "information_gain",
+                                  "coverage"])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_greedy_nemhauser_bound_all_monotone_objectives(name, backend):
+  """Every monotone objective achieves >= (1 - 1/e) OPT_k on brute-forceable
+  instances, through both gain-oracle backends."""
+  n, d, k = 12, 5, 3
+  feats = jnp.abs(_feats(7, n=n, d=d))
+  if name == "facility_location":
+    obj = O.FacilityLocation(kernel="rbf", kernel_kwargs=(("h", 1.0),))
+    st0 = obj.init(feats)
+  elif name == "information_gain":
+    obj = O.InformationGain(k_max=k, kernel="rbf",
+                            kernel_kwargs=(("h", 0.75),), sigma=0.7)
+    st0 = obj.init_d(d)
+  else:
+    obj = O.SaturatedCoverage(kernel="linear", alpha=0.3)
+    st0 = obj.init(feats)
+  r = greedy(obj, st0, feats, k, backend=backend)
+  opt = _brute_force_opt(obj, st0, feats, k)
+  assert float(obj.value(r.state)) >= bounds.greedy_bound(k, k) * opt - 1e-5
+
+
 def test_greedy_no_duplicates_and_valid_indices():
   feats = _feats(3, n=20)
   obj = O.FacilityLocation(kernel="linear")

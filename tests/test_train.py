@@ -10,6 +10,7 @@ import pytest
 from repro.configs import get_config, reduced
 from repro.models import Parallelism, build_model
 from repro.train.checkpoint import CheckpointManager
+from repro.util import make_mesh
 from repro.train.optimizer import (OptConfig, adamw_update, init_opt_state,
                                    schedule)
 from repro.train.train_step import make_train_step
@@ -155,13 +156,14 @@ def test_elastic_reshard_on_restore(subrun):
 import jax, jax.numpy as jnp, numpy as np, tempfile, os
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train.checkpoint import CheckpointManager
+from repro.util import make_mesh
 d = tempfile.mkdtemp()
-mesh2 = jax.make_mesh((2,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh2 = make_mesh((2,), ("data",))
 tree = {"w": jax.device_put(jnp.arange(16.0).reshape(4, 4),
                             NamedSharding(mesh2, P("data", None)))}
 ck = CheckpointManager(d)
 ck.save(5, tree)
-mesh4 = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh4 = make_mesh((4,), ("data",))
 sh4 = {"w": NamedSharding(mesh4, P("data", None))}
 restored, meta = ck.restore({"w": jnp.zeros((4, 4))}, shardings=sh4)
 assert restored["w"].sharding == sh4["w"]
@@ -179,7 +181,8 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.train.compression import compressed_psum
-mesh = jax.make_mesh((4,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.util import make_mesh, shard_map
+mesh = make_mesh((4,), ("data",))
 
 def run_steps(n_steps):
     grads = jax.random.normal(jax.random.PRNGKey(0), (4, 1024))
@@ -188,8 +191,8 @@ def run_steps(n_steps):
     exact = jnp.zeros((1024,))
     for t in range(n_steps):
         g_t = grads * (1.0 + 0.1 * t)
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data"), P()),
-                 out_specs=(P("data"), P("data")), check_vma=False)
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"), P("data"), P()),
+                 out_specs=(P("data"), P("data")))
         def f(g, e, key):
             avg, new_e = compressed_psum({"g": g[0]}, {"g": e[0]},
                                          jax.random.fold_in(key, jax.lax.axis_index("data")),
