@@ -1,0 +1,66 @@
+"""Sharded-selection benchmark: the generic objective engine vs the
+cached-similarity fast engine of core/greedi.py, per similarity kernel.
+
+Quantifies perf hillclimb #3 end to end on the production shard_map path:
+the fast engine computes each round's similarity block ONCE (through the
+``pairwise`` oracle), so its per-step cost is a relu-reduce, while the
+generic engine re-contracts (n/m x n_cand x d) every step.  Run standalone
+(it forces host devices BEFORE importing jax, like launch/select.py):
+
+    PYTHONPATH=src:. python benchmarks/sharded_select.py [--mesh 4] [--quick]
+
+Timings on this CPU container are XLA-reference-path numbers; the relative
+generic/fast ratio is the portable signal (the absolute win grows with
+kappa, the number of re-contractions avoided).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--mesh", type=int, default=4)
+  ap.add_argument("--n", type=int, default=8192)
+  ap.add_argument("--d", type=int, default=64)
+  ap.add_argument("--k", type=int, default=64)
+  ap.add_argument("--quick", action="store_true")
+  args = ap.parse_args()
+  # safe pre-jax: launch.select's module level imports only stdlib
+  from repro.launch.select import _force_host_devices
+  _force_host_devices(args.mesh)
+
+  import jax
+  import numpy as np
+
+  from benchmarks.common import emit, timeit, tiny_images_like
+  from repro.core import objectives as O
+  from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+  from repro.util import make_mesh
+
+  n = 2048 if args.quick else args.n
+  k = 32 if args.quick else args.k
+  mesh = make_mesh((args.mesh,), ("data",))
+  feats = tiny_images_like(n, d=args.d)
+
+  for kernel, kw in (("linear", ()), ("rbf", (("h", 0.9),))):
+    obj = O.FacilityLocation(kernel=kernel, kernel_kwargs=kw)
+    # the two engines must agree -- a benchmark that drifts is a bug report.
+    # This pair also serves as the compile warmup for the timed runs below.
+    a = greedi_sharded(feats, mesh=mesh, kappa=k, k_final=k, objective=obj)
+    b = greedi_sharded_fast(feats, mesh=mesh, kappa=k, k_final=k,
+                            kernel=kernel, kernel_kwargs=kw)
+    np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-4)
+    t_gen = timeit(lambda: greedi_sharded(
+        feats, mesh=mesh, kappa=k, k_final=k, objective=obj),
+        repeats=2, warmup=0)
+    t_fast = timeit(lambda: greedi_sharded_fast(
+        feats, mesh=mesh, kappa=k, k_final=k, kernel=kernel,
+        kernel_kwargs=kw), repeats=2, warmup=0)
+    emit(f"sharded_select_{kernel}_n{n}_k{k}_m{args.mesh}", t_gen * 1e6,
+         f"generic={t_gen*1e3:.0f}ms fast={t_fast*1e3:.0f}ms "
+         f"speedup={t_gen/t_fast:.2f}x f={float(b.value):.4f}")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,6 +1,7 @@
 """GreeDi: the paper's two-round distributed protocol (Alg. 2 / Alg. 3).
 
-Three implementations share the greedy machinery from core/greedy.py:
+Three implementations share the greedy machinery from core/greedy.py and ONE
+distributed-greedy core (``_dist_greedy_core``) for every merge round:
 
   * ``greedi_reference``   -- single-process, vmap-over-partitions. Used by the
     paper-figure benchmarks (Figs. 4, 6, 9, 10) and the theory tests; supports
@@ -12,27 +13,43 @@ Three implementations share the greedy machinery from core/greedy.py:
     communication model); round 2 is a *distributed* greedy whose per-step
     marginal gains are psum-reduced partial sums, so the full ground set is
     used for evaluation without ever moving it.
+  * ``greedi_sharded_fast``-- same protocol specialized to facility location
+    over any fused similarity kernel (dispatch.FUSED_SIMS): similarities are
+    precomputed once per round through the ``pairwise`` oracle, so each greedy
+    step is a masked relu-reduce instead of a fresh MXU contraction.
   * ``greedi_hierarchical``-- multi-pod: device -> pod (ICI all_gather) ->
     global (DCI all_gather) three-level merge, generalizing the paper's
     "multiple rounds" remark. Bounds compose (core/bounds.py).
 
-Fault tolerance: ``straggler_keep`` masks partitions out of the merge; the
+Index tracking: every path threads *global ground-set indices* alongside
+feature rows through round 1, the all_gather merge, and round 2, and returns
+them as ``GreediResult.sel_gids`` -- the coreset as positions into the ground
+set, which is what downstream consumers (data/selection.py, the training
+loop) actually need.  The sharded paths accept an optional ``gids`` array so
+a caller that pre-permuted the ground set (random partitioning) can map the
+selection back to original document ids.
+
+Fault tolerance: ``straggler_keep`` masks partitions out of the merge AND out
+of the evaluation weight: a dead machine contributes neither candidates nor
+psum mass to round-2 gains, ``value_merged``, or ``stage1_values``, so the
 protocol and Thm 4's proof degrade gracefully to the surviving machines (the
-merged B simply misses some A_i).  Elasticity: the number of logical
-partitions is decoupled from physical shards via core/partition.py.
+merged B simply misses some A_i, and f is evaluated over the alive data).
+Elasticity: the number of logical partitions is decoupled from physical
+shards via core/partition.py.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, NamedTuple
+import inspect
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import constraints as C
-from repro.core.greedy import GreedyResult, greedy, with_backend
+from repro.core.greedy import NEG, GreedyResult, greedy, with_backend
+from repro.core.objectives import _kernel_h
 from repro.core.partition import random_partition
+from repro.kernels import dispatch
 from repro.util import fori as _ufori
 from repro.util import shard_map as _shard_map
 
@@ -57,6 +74,63 @@ def set_value_feats(objective, state0, sel_feats: Array, valid: Array):
   return state
 
 
+def _init_arity(init_for) -> int:
+  """Positional arity of a user ``init_for`` (3 when it takes the candidate
+  block for a precompute path, else 2).
+
+  Signature inspection instead of try/except TypeError: the latter silently
+  swallowed TypeErrors raised *inside* the user function and re-ran it with
+  fewer arguments.  A ``*args`` callable is taken at its word and receives
+  the candidate block (wrap a 2-arg init in an explicit 2-arg signature if
+  that is not wanted) -- the old probe-and-retry could only tell the two
+  apart by swallowing exceptions.
+  """
+  try:
+    sig = inspect.signature(init_for)
+  except (TypeError, ValueError):  # builtins without inspectable signatures
+    return 2
+  n = 0
+  for p in sig.parameters.values():
+    if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+      n += 1
+    elif p.kind is p.VAR_POSITIONAL:
+      return 3
+  return n
+
+
+def _call_init(init_for, eval_feats: Array, eval_mask: Array,
+               cand_feats: Array):
+  if _init_arity(init_for) >= 3:
+    return init_for(eval_feats, eval_mask, cand_feats)
+  return init_for(eval_feats, eval_mask)
+
+
+def _take_k(x: Array, k: int, fill) -> Array:
+  """First k rows of a machine's kappa-row block, padded when kappa < k.
+
+  The A_max alt arm must match round 2's (k_final, ...) shapes: for
+  kappa > k_final the greedy prefix IS A_max^gc[k_final]; for kappa < k_final
+  the machine simply proposed fewer items, so the tail is explicit padding
+  (0 rows / False / -1 ids) rather than an opaque broadcast error.
+  """
+  if x.shape[0] >= k:
+    return x[:k]
+  pad = k - x.shape[0]
+  return jnp.concatenate(
+      [x, jnp.full((pad, *x.shape[1:]), fill, x.dtype)], axis=0)
+
+
+def greedi_keys(rng: Array) -> tuple[Array, Array, Array, Array]:
+  """The protocol's independent keys: (partition, round-1, round-2, U-subset).
+
+  Exposed so callers that run partitioning *outside* the protocol (the
+  sharded index-selection path in data/selection.py) derive the exact same
+  partition as ``greedi_reference`` under the same seed.
+  """
+  keys = jax.random.split(rng, 4)
+  return keys[0], keys[1], keys[2], keys[3]
+
+
 class GreediResult(NamedTuple):
   sel_feats: Array      # (k_final, d) the returned solution A_gd
   sel_valid: Array      # (k_final,) bool
@@ -64,6 +138,95 @@ class GreediResult(NamedTuple):
   value_merged: Array   # f(A_B^gc)   (round-2 solution)
   value_best_single: Array  # f(A_max^gc) (best single-machine solution)
   stage1_values: Array  # (m,) f(A_i) under final evaluation
+  sel_gids: Array       # (k_final,) int32 global ground-set ids, -1 = no-op
+
+
+def _replicated_result_specs():
+  return jax.tree.map(
+      lambda _: P(), GreediResult(*([0] * len(GreediResult._fields))))
+
+
+# ---------------------------------------------------------------------------
+# THE distributed-greedy core (round 2 / merge levels of every sharded path)
+# ---------------------------------------------------------------------------
+
+
+class _Engine(NamedTuple):
+  """What a sharded variant plugs into the shared distributed-greedy loop.
+
+  The candidate block rides inside the engine (``cands``/``cmask``/``cgids``)
+  so the gains basis and the returned features/gids cannot desynchronize.
+  Gain/value quantities are *local, unnormalized* contributions; the core
+  psum-reduces them over the given mesh axes, weighted by the shard's
+  evaluation weight.
+  """
+  state0: Any
+  # state -> (nc,) local partial marginal gains for every candidate
+  partial_gains: Callable[[Any], Array]
+  # (state, chosen column j, chosen feature row, take?) -> new state
+  apply_update: Callable[[Any, Array, Array, Array], Any]
+  # state -> () local partial objective value
+  partial_value: Callable[[Any], Array]
+  cands: Array   # (nc, d) replicated candidate block
+  cmask: Array   # (nc,) bool selectable
+  cgids: Array   # (nc,) int32 global ids of the candidates
+
+
+def _objective_engine(objective, local_feats: Array, cands: Array,
+                      cmask: Array, cgids: Array) -> _Engine:
+  """Engine over a generic objective exposing partial_stats/update/value."""
+  n_local = local_feats.shape[0]
+
+  def partial_gains(state):
+    return objective.partial_stats(state, cands)[0]
+
+  def apply_update(state, j, feat, take):
+    del j
+    new = objective.update(state, feat)
+    return jax.tree.map(lambda a, b: jnp.where(take, a, b), new, state)
+
+  def partial_value(state):
+    return objective.value(state) * n_local
+
+  return _Engine(objective.init(local_feats), partial_gains, apply_update,
+                 partial_value, cands, cmask, cgids)
+
+
+def _dist_greedy_core(engine: _Engine, steps: int, axes, weight: Array,
+                      denom: Array, feat_dtype):
+  """Distributed greedy over the engine's replicated candidate block.
+
+  Per step: psum the weighted local partial gains over ``axes``, pick the
+  feasible argmax, and replicate the update on every shard.  ``weight`` is
+  the shard's evaluation weight (0 for dead/straggling machines and for
+  shards outside the Thm-10 U-subset); ``denom`` the psum of weighted eval
+  counts.  Returns (sel_feats (steps, d), sel_valid (steps,),
+  sel_gids (steps,) int32, value ()) -- all replicated.
+  """
+  cands, cmask, cgids = engine.cands, engine.cmask, engine.cgids
+  nc, d = cands.shape
+
+  def body(t, c):
+    state, selmask, outf, outv, outg = c
+    gains = jax.lax.psum(engine.partial_gains(state) * weight, axes) / denom
+    feasible = cmask & (~selmask)
+    masked = jnp.where(feasible, gains, NEG)
+    chosen = jnp.argmax(masked)
+    take = jnp.any(feasible)
+    feat = cands[chosen]
+    state = engine.apply_update(state, chosen, feat, take)
+    selmask = selmask.at[chosen].set(jnp.where(take, True, selmask[chosen]))
+    outf = outf.at[t].set(jnp.where(take, feat, 0.0))
+    outv = outv.at[t].set(take)
+    outg = outg.at[t].set(jnp.where(take, cgids[chosen], -1))
+    return (state, selmask, outf, outv, outg)
+
+  c0 = (engine.state0, jnp.zeros((nc,), bool),
+        jnp.zeros((steps, d), feat_dtype), jnp.zeros((steps,), bool),
+        jnp.full((steps,), -1, jnp.int32))
+  state, _, f, v, g = _ufori(0, steps, body, c0)
+  val = jax.lax.psum(engine.partial_value(state) * weight, axes) / denom
+  return f, v, g, val
 
 
 # ---------------------------------------------------------------------------
@@ -83,6 +246,8 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   Args:
     init_for: callable (eval_feats, eval_mask) -> objective state. For
       set-only objectives (information gain, DPP) it may ignore its inputs.
+      A 3-argument callable additionally receives the candidate block (the
+      precompute path of e.g. FacilityLocationPre).
     local_eval: round-1 machines evaluate f on their local partition only
       (the decomposable mode of Sec. 4.5 / Fig. 4b).
     final_subset: if given, round 2 and the final comparison evaluate f on a
@@ -92,22 +257,17 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   """
   objective = with_backend(objective, backend)
   n, d = feats.shape
-  r_part, r_sel, r_u = jax.random.split(rng, 3)
-  parts, pmask, _ = random_partition(r_part, feats, m)
+  # round 2 gets its own key: r_sel is consumed by the round-1 split, and
+  # reusing it would correlate stochastic/random-mode sampling across rounds
+  r_part, r_sel, r_r2, r_u = greedi_keys(rng)
+  parts, pmask, perm = random_partition(r_part, feats, m)
 
   # ---- round 1: independent greedy per machine --------------------------
-  def _init(ef, em, cand):
-    # objectives with a precompute path accept the candidate block too
-    try:
-      return init_for(ef, em, cand)
-    except TypeError:
-      return init_for(ef, em)
-
   def run_one(part, mask_row, key):
     if local_eval:
-      st0 = _init(part, mask_row.astype(part.dtype), part)
+      st0 = _call_init(init_for, part, mask_row.astype(part.dtype), part)
     else:
-      st0 = _init(feats, jnp.ones((n,), part.dtype), part)
+      st0 = _call_init(init_for, feats, jnp.ones((n,), part.dtype), part)
     return greedy(objective, st0, part, kappa, cand_mask=mask_row,
                   rng=key, mode=mode, sample_frac=sample_frac,
                   stop_nonpositive=stop_nonpositive)
@@ -115,6 +275,10 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   keys = jax.random.split(r_sel, m)
   r1 = jax.vmap(run_one)(parts, pmask, keys)      # feats: (m, kappa, d)
   valid1 = r1.idx >= 0
+
+  # global doc ids of every round-1 candidate: perm[machine, local_idx]
+  gid1 = jnp.take_along_axis(perm, jnp.maximum(r1.idx, 0), axis=1)
+  gid1 = jnp.where(valid1, gid1, -1).astype(jnp.int32)      # (m, kappa)
 
   # ---- final evaluation objective ---------------------------------------
   if final_subset is not None:
@@ -124,8 +288,8 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   else:
     eval_feats = feats
     eval_mask = jnp.ones((n,), feats.dtype)
-  st_final0 = _init(eval_feats, eval_mask,
-                    r1.feats.reshape(m * kappa, d))
+  st_final0 = _call_init(init_for, eval_feats, eval_mask,
+                         r1.feats.reshape(m * kappa, d))
 
   # ---- A_max: best single-machine solution under final evaluation -------
   stage1_vals = jax.vmap(
@@ -136,22 +300,26 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   # ---- round 2: greedy over the merged candidates ------------------------
   B = r1.feats.reshape(m * kappa, d)
   bmask = valid1.reshape(m * kappa)
+  bgids = gid1.reshape(m * kappa)
   r2 = greedy(objective, st_final0, B, k_final, cand_mask=bmask,
-              rng=r_sel, mode=mode, sample_frac=sample_frac,
+              rng=r_r2, mode=mode, sample_frac=sample_frac,
               stop_nonpositive=stop_nonpositive)
+  r2_gids = jnp.where(r2.idx >= 0, bgids[jnp.maximum(r2.idx, 0)], -1)
   v_merged = objective.value(r2.state)
   v_best_single = stage1_vals[best_i]
 
   use_merged = v_merged >= v_best_single
   # A_max may have kappa > k_final items; truncate to the first k_final (they
   # are the greedy prefix, which is exactly A_max^gc[k_final]).
-  alt_feats = r1.feats[best_i][:k_final]
-  alt_valid = valid1[best_i][:k_final]
+  alt_feats = _take_k(r1.feats[best_i], k_final, 0.0)
+  alt_valid = _take_k(valid1[best_i], k_final, False)
+  alt_gids = _take_k(gid1[best_i], k_final, -1)
   sel_feats = jnp.where(use_merged, r2.feats, alt_feats)
   sel_valid = jnp.where(use_merged, r2.idx >= 0, alt_valid)
+  sel_gids = jnp.where(use_merged, r2_gids, alt_gids)
   value = jnp.maximum(v_merged, v_best_single)
   return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                      stage1_vals)
+                      stage1_vals, sel_gids)
 
 
 def centralized_greedy(feats: Array, k: int, *, objective, init_for,
@@ -161,10 +329,7 @@ def centralized_greedy(feats: Array, k: int, *, objective, init_for,
                        backend: str | None = None) -> tuple[GreedyResult, Array]:
   objective = with_backend(objective, backend)
   n = feats.shape[0]
-  try:
-    st0 = init_for(feats, jnp.ones((n,), feats.dtype), feats)
-  except TypeError:
-    st0 = init_for(feats, jnp.ones((n,), feats.dtype))
+  st0 = _call_init(init_for, feats, jnp.ones((n,), feats.dtype), feats)
   r = greedy(objective, st0, feats, k, rng=rng, mode=mode,
              sample_frac=sample_frac, stop_nonpositive=stop_nonpositive)
   return r, objective.value(r.state)
@@ -235,10 +400,12 @@ def baselines(rng: Array, feats: Array, *, m: int, k: int, objective,
 # ---------------------------------------------------------------------------
 
 
-def _combined_index(axis_names: tuple[str, ...]) -> Array:
+def _combined_index(axis_names: tuple[str, ...], mesh) -> Array:
+  """Row-major shard index over ``axis_names`` (static sizes from the mesh;
+  jax 0.4.x has no jax.lax.axis_size)."""
   idx = jax.lax.axis_index(axis_names[0])
   for a in axis_names[1:]:
-    idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
   return idx
 
 
@@ -246,12 +413,27 @@ def _psum(x, axis_names):
   return jax.lax.psum(x, axis_names)
 
 
+def _mesh_size(mesh, axis_names) -> int:
+  m = 1
+  for a in axis_names:
+    m *= mesh.shape[a]
+  return m
+
+
+def _prep_gids(gids: Array | None, n: int) -> Array:
+  if gids is None:
+    return jnp.arange(n, dtype=jnp.int32)
+  assert gids.shape == (n,), (gids.shape, n)
+  return gids.astype(jnp.int32)
+
+
 def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    objective, axis_names: tuple[str, ...] = ("data",),
                    straggler_keep: Array | None = None,
                    u_subset_eval: bool = False,
                    rng: Array | None = None,
-                   backend: str | None = None):
+                   backend: str | None = None,
+                   gids: Array | None = None):
   """GreeDi over a device mesh; round-2 gains are psum-reduced partial sums.
 
   Args:
@@ -259,33 +441,34 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     objective: must expose init/gains/update/value and partial_stats (the
       facility-location family -- the paper's decomposable flagship).
     straggler_keep: optional (m,) bool; False partitions are dropped at the
-      merge (failed/straggling machines).  The Thm 4 bound then holds with
-      m_alive = sum(straggler_keep).
+      merge (failed/straggling machines) AND excluded from the evaluation
+      weight, so dead machines' data moves neither round-2 gains nor the
+      reported values.  The Thm 4 bound then holds with
+      m_alive = sum(straggler_keep) over the alive ground set.
     u_subset_eval: Thm 10 mode -- evaluate round 2 on machine 0's partition
       (a uniformly random n/m subset) instead of psum over the full set.
     backend: optional gain-oracle backend override (kernels/dispatch.py);
       applies to round-1 gains and the psum-reduced round-2 partial stats.
+    gids: optional (n,) global ids of the rows of ``feats`` (defaults to
+      arange); the selection is reported as ``sel_gids`` through these.
 
   Returns a GreediResult (replicated on every shard).
   """
   objective = with_backend(objective, backend)
-  m = 1
-  for a in axis_names:
-    m *= mesh.shape[a]
+  m = _mesh_size(mesh, axis_names)
   n, d = feats.shape
   assert n % m == 0, (n, m)
   if straggler_keep is None:
     straggler_keep = jnp.ones((m,), bool)
   if rng is None:
     rng = jax.random.PRNGKey(0)
+  gids = _prep_gids(gids, n)
 
-  in_specs = (P(axis_names), P(), P())
-  out_specs = jax.tree.map(lambda _: P(), GreediResult(
-      sel_feats=0, sel_valid=0, value=0, value_merged=0,
-      value_best_single=0, stage1_values=0))
+  in_specs = (P(axis_names), P(axis_names), P(), P())
+  out_specs = _replicated_result_specs()
 
-  def fn(local_feats, keep, key):
-    me = _combined_index(axis_names)
+  def fn(local_feats, local_gids, keep, key):
+    me = _combined_index(axis_names, mesh)
     n_local = local_feats.shape[0]
     my_keep = keep[me]
 
@@ -294,15 +477,22 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     r1 = greedy(objective, st0, local_feats, kappa, rng=key)
     sel = r1.feats                                   # (kappa, d)
     valid = (r1.idx >= 0) & my_keep
+    gsel = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
 
     # ---- merge: one all_gather of the candidate blocks -------------------
     B = jax.lax.all_gather(sel, axis_names)          # (m, kappa, d)
     Bvalid = jax.lax.all_gather(valid, axis_names)   # (m, kappa)
+    Bgids = jax.lax.all_gather(gsel, axis_names)     # (m, kappa)
     Bflat = B.reshape(m * kappa, d)
     Bmask = Bvalid.reshape(m * kappa)
+    Bgflat = Bgids.reshape(m * kappa)
 
-    # evaluation weight of this shard: full-set eval or U = partition 0
+    # evaluation weight of this shard: full-set eval or U = partition 0,
+    # and zero for dead machines -- their data carries no evaluation mass
     w = jnp.where(u_subset_eval, (me == 0).astype(jnp.float32), 1.0)
+    w = w * my_keep.astype(jnp.float32)
+    denom = _psum(jnp.asarray(n_local, jnp.float32) * w, axis_names)
+    denom = jnp.maximum(denom, 1.0)
 
     # ---- A_max: value of each machine's solution under final eval --------
     def value_of(sel_i, valid_i):
@@ -311,92 +501,96 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
       # local mean * local count -> psum-able sum
       return objective.value(st) * n_local * w
     part_vals = jax.vmap(value_of)(B, Bvalid)        # (m,)
-    denom = _psum(jnp.asarray(n_local, jnp.float32) * w, axis_names)
     stage1_vals = _psum(part_vals, axis_names) / denom
     stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
     best_i = jnp.argmax(stage1_vals)
 
     # ---- round 2: distributed greedy over B ------------------------------
-    def body(t, c):
-      state, selmask, outf, outv = c
-      psum_part, cnt = objective.partial_stats(state, Bflat)   # (m*kappa,),()
-      gains = _psum(psum_part * w, axis_names) / denom
-      feasible = Bmask & (~selmask)
-      masked = jnp.where(feasible, gains, -1e30)
-      chosen = jnp.argmax(masked)
-      take = jnp.any(feasible)
-      feat = Bflat[chosen]
-      new_state = objective.update(state, feat)
-      state = jax.tree.map(lambda a, b: jnp.where(take, a, b), new_state,
-                           state)
-      selmask = selmask.at[chosen].set(jnp.where(take, True, selmask[chosen]))
-      outf = outf.at[t].set(jnp.where(take, feat, 0.0))
-      outv = outv.at[t].set(take)
-      return (state, selmask, outf, outv)
-
-    st2 = objective.init(local_feats)
-    c0 = (st2, jnp.zeros((m * kappa,), bool),
-          jnp.zeros((k_final, d), feats.dtype), jnp.zeros((k_final,), bool))
-    st2, _, merged_feats, merged_valid = _ufori(0, k_final, body, c0)
-    v_merged = _psum(objective.value(st2) * n_local * w, axis_names) / denom
+    engine = _objective_engine(objective, local_feats, Bflat, Bmask, Bgflat)
+    merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
+        engine, k_final, axis_names, w, denom, feats.dtype)
 
     # ---- pick the better of A_B and A_max --------------------------------
     v_best_single = stage1_vals[best_i]
     use_merged = v_merged >= v_best_single
-    alt_feats = B[best_i][:k_final]
-    alt_valid = Bvalid[best_i][:k_final]
-    sel_feats = jnp.where(use_merged, merged_feats, alt_feats)
-    sel_valid = jnp.where(use_merged, merged_valid, alt_valid)
+    sel_feats = jnp.where(use_merged, merged_feats,
+                          _take_k(B[best_i], k_final, 0.0))
+    sel_valid = jnp.where(use_merged, merged_valid,
+                          _take_k(Bvalid[best_i], k_final, False))
+    sel_gids = jnp.where(use_merged, merged_gids,
+                         _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals)
+                        stage1_vals, sel_gids)
 
   shmapped = _shard_map(fn, mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs)
-  return shmapped(feats, straggler_keep, rng)
+  return shmapped(feats, gids, straggler_keep, rng)
 
 
 def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
                         axis_names: tuple[str, ...] = ("data",),
-                        rng: Array | None = None):
-  """Perf-optimized sharded GreeDi for the linear-kernel facility-location
-  objective (the production data-selection path).
+                        kernel: str = "linear",
+                        kernel_kwargs: tuple = (),
+                        straggler_keep: Array | None = None,
+                        rng: Array | None = None,
+                        backend: str | None = None,
+                        gids: Array | None = None):
+  """Perf-optimized sharded GreeDi for the facility-location objective over
+  any fused similarity kernel (the production data-selection path).
 
   vs ``greedi_sharded`` (perf hillclimb #3, see EXPERIMENTS.md Sec Perf):
     * round 1 precomputes the local (n/m x n/m) similarity matrix ONCE; each
       greedy step is then a masked relu-reduce instead of a fresh
-      (n/m x n/m x d) MXU contraction  -> kappa-fold FLOP cut;
-    * round 2 precomputes S2 = sim(local eval, merged B) once; per-step
-      gains are relu(S2 - cov) column sums + one psum;
+      (n/m x n/m x d) contraction  -> kappa-fold FLOP cut;
+    * round 2 precomputes S2 = sim(local eval, merged B) once and feeds the
+      cached columns to the shared distributed-greedy core;
     * A_max needs NO replay: f(A_i) = mean_e max over machine i's columns
       of S2 (a reshape + max + psum).
 
-  Marginal-gain math is identical, so the returned solution matches
-  ``greedi_sharded`` exactly (tests assert this).
+  Similarities route through the ``pairwise`` oracle in kernels/dispatch.py,
+  so ``kernel`` may be any of ``dispatch.FUSED_SIMS`` (linear / rbf with
+  bandwidth ``kernel_kwargs=(("h", ...),)``) and ``backend`` picks the fused
+  Pallas kernel vs the XLA reference, exactly like the generic objectives.
+  Equivalent to ``greedi_sharded`` with
+  ``FacilityLocation(kernel=kernel, kernel_kwargs=kernel_kwargs)`` (baseline
+  0): the marginal-gain math is identical, so the returned solution matches
+  exactly (tests assert this), including under ``straggler_keep``.
   """
-  m = 1
-  for a in axis_names:
-    m *= mesh.shape[a]
+  if kernel not in dispatch.FUSED_SIMS:
+    raise ValueError(
+        f"greedi_sharded_fast caches similarities through the 'pairwise' "
+        f"oracle and supports kernels {dispatch.FUSED_SIMS}, got {kernel!r}; "
+        "use greedi_sharded with a generic objective instead")
+  sim = dispatch.resolve("pairwise", backend or "auto")
+  h = _kernel_h(kernel_kwargs)  # same default resolution as the objectives
+  m = _mesh_size(mesh, axis_names)
   n, d = feats.shape
   assert n % m == 0, (n, m)
+  if straggler_keep is None:
+    straggler_keep = jnp.ones((m,), bool)
   if rng is None:
     rng = jax.random.PRNGKey(0)
+  gids = _prep_gids(gids, n)
 
-  out_specs = jax.tree.map(lambda _: P(), GreediResult(
-      sel_feats=0, sel_valid=0, value=0, value_merged=0,
-      value_best_single=0, stage1_values=0))
+  out_specs = _replicated_result_specs()
 
-  def fn(local_feats, key):
+  def fn(local_feats, local_gids, keep, key):
+    del key  # round 1 is deterministic standard greedy
+    me = _combined_index(axis_names, mesh)
     n_local = local_feats.shape[0]
-    denom = jnp.asarray(n, jnp.float32)
+    my_keep = keep[me]
+    w = my_keep.astype(jnp.float32)
+    denom = _psum(jnp.asarray(n_local, jnp.float32) * w, axis_names)
+    denom = jnp.maximum(denom, 1.0)
 
-    # ---- round 1: local greedy over the precomputed local Gram matrix ----
-    s11 = (local_feats @ local_feats.T).astype(jnp.float32)  # (nl, nl)
+    # ---- round 1: local greedy over the precomputed local sim matrix ----
+    s11 = sim(local_feats, local_feats, kernel=kernel, h=h)  # (nl, nl) f32
 
     def r1_body(t, c):
       cov, selmask, sel_idx = c
       gains = jnp.sum(jnp.maximum(s11 - cov[:, None], 0.0), axis=0)
-      gains = jnp.where(selmask, -1e30, gains)
+      gains = jnp.where(selmask, NEG, gains)
       j = jnp.argmax(gains)
       cov = jnp.maximum(cov, s11[:, j])
       return (cov, selmask.at[j].set(True), sel_idx.at[t].set(j))
@@ -407,56 +601,69 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
         (cov0, jnp.zeros((n_local,), bool),
          jnp.zeros((kappa,), jnp.int32)))
     sel = local_feats[sel_idx]                                # (kappa, d)
+    # steps past n_local re-pick exhausted rows; invalidate them exactly like
+    # the generic path's greedy (idx = -1 once nothing is feasible), so
+    # kappa > n/m cannot leak duplicate candidates/gids into the merge
+    step_ok = jnp.arange(kappa) < n_local
+    gsel = jnp.where(step_ok, local_gids[sel_idx], -1)
+    valid = my_keep & step_ok
 
     # ---- merge + ONE cross-similarity matmul ------------------------------
     B = jax.lax.all_gather(sel, axis_names)                   # (m, kappa, d)
+    Bvalid = jax.lax.all_gather(valid, axis_names)            # (m, kappa)
+    Bgids = jax.lax.all_gather(gsel, axis_names)              # (m, kappa)
     Bflat = B.reshape(m * kappa, d)
-    s2 = (local_feats @ Bflat.T).astype(jnp.float32)          # (nl, m*kappa)
+    Bmask = Bvalid.reshape(m * kappa)
+    Bgflat = Bgids.reshape(m * kappa)
+    s2 = sim(local_feats, Bflat, kernel=kernel, h=h)          # (nl, m*kappa)
 
     # ---- A_max: no replay needed ------------------------------------------
     per_machine = jnp.max(jnp.maximum(
         s2.reshape(n_local, m, kappa), 0.0), axis=2)          # (nl, m)
-    stage1_vals = _psum(jnp.sum(per_machine, axis=0), axis_names) / denom
+    stage1_vals = _psum(jnp.sum(per_machine, axis=0) * w, axis_names) / denom
+    stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
     best_i = jnp.argmax(stage1_vals)
 
-    # ---- round 2: distributed greedy over cached columns -------------------
-    def r2_body(t, c):
-      cov, selmask, outf, outv = c
-      part = jnp.sum(jnp.maximum(s2 - cov[:, None], 0.0), axis=0)
-      gains = _psum(part, axis_names)
-      gains = jnp.where(selmask, -1e30, gains)
-      j = jnp.argmax(gains)
-      cov = jnp.maximum(cov, s2[:, j])
-      return (cov, selmask.at[j].set(True),
-              outf.at[t].set(Bflat[j]), outv.at[t].set(True))
-
-    cov, _, merged_feats, merged_valid = _ufori(
-        0, k_final, r2_body,
-        (jnp.zeros((n_local,), jnp.float32),
-         jnp.zeros((m * kappa,), bool),
-         jnp.zeros((k_final, d), feats.dtype),
-         jnp.zeros((k_final,), bool)))
-    v_merged = _psum(jnp.sum(cov), axis_names) / denom
+    # ---- round 2: the shared core over cached similarity columns ----------
+    # s2's columns are Bflat's rows by construction, so the cached-gain
+    # closures and the candidate block stay in lockstep inside the engine
+    engine = _Engine(
+        state0=jnp.zeros((n_local,), jnp.float32),
+        partial_gains=lambda cov: jnp.sum(
+            jnp.maximum(s2 - cov[:, None], 0.0), axis=0),
+        apply_update=lambda cov, j, feat, take: jnp.where(
+            take, jnp.maximum(cov, s2[:, j]), cov),
+        partial_value=jnp.sum,
+        cands=Bflat, cmask=Bmask, cgids=Bgflat,
+    )
+    merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
+        engine, k_final, axis_names, w, denom, feats.dtype)
 
     v_best_single = stage1_vals[best_i]
     use_merged = v_merged >= v_best_single
-    sel_feats = jnp.where(use_merged, merged_feats, B[best_i][:k_final])
+    sel_feats = jnp.where(use_merged, merged_feats,
+                          _take_k(B[best_i], k_final, 0.0))
     sel_valid = jnp.where(use_merged, merged_valid,
-                          jnp.ones((k_final,), bool))
+                          _take_k(Bvalid[best_i], k_final, False))
+    sel_gids = jnp.where(use_merged, merged_gids,
+                         _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals)
+                        stage1_vals, sel_gids)
 
-  shmapped = _shard_map(fn, mesh=mesh, in_specs=(P(axis_names), P()),
-                        out_specs=out_specs)
-  return shmapped(feats, rng)
+  shmapped = _shard_map(
+      fn, mesh=mesh, in_specs=(P(axis_names), P(axis_names), P(), P()),
+      out_specs=out_specs)
+  return shmapped(feats, gids, straggler_keep, rng)
 
 
 def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
                         objective,
                         pod_axis: str = "pod", data_axis: str = "data",
+                        straggler_keep: Array | None = None,
                         rng: Array | None = None,
-                        backend: str | None = None):
+                        backend: str | None = None,
+                        gids: Array | None = None):
   """Three-level GreeDi for multi-pod meshes: device -> pod -> global.
 
   Level 1: each device greedily selects kappa from its local partition.
@@ -466,7 +673,14 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
            expensive inter-pod links carry only (pods * kappa * d) bytes);
            a distributed greedy over the full mesh picks k_final.
 
-  The returned value also tracks the best lower-level solution so the final
+  Both merge levels run through the same ``_dist_greedy_core`` as the flat
+  sharded path, with per-level psum axes and denominators.  Global indices
+  thread through every level, and ``straggler_keep`` ((mp*md,) bool, indexed
+  pod-major like the shard layout) masks dead devices out of the candidates
+  AND the evaluation weight at every level, so a dead device's data never
+  moves gains or values.
+
+  The returned value also tracks the best pod-level solution so the final
   answer is max over levels, mirroring Alg. 2's max(A_max, A_B).
   """
   objective = with_backend(objective, backend)
@@ -474,81 +688,70 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
   m = mp * md
   n, d = feats.shape
   assert n % m == 0, (n, m)
+  if straggler_keep is None:
+    straggler_keep = jnp.ones((m,), bool)
   if rng is None:
     rng = jax.random.PRNGKey(0)
+  gids = _prep_gids(gids, n)
   both = (pod_axis, data_axis)
 
-  def fn(local_feats, key):
+  def fn(local_feats, local_gids, keep, key):
+    me = _combined_index(both, mesh)
     n_local = local_feats.shape[0]
-    denom_all = jnp.asarray(n, jnp.float32)
+    my_keep = keep[me]
+    w = my_keep.astype(jnp.float32)
+    nl_w = jnp.asarray(n_local, jnp.float32) * w
+    denom_pod = jnp.maximum(_psum(nl_w, (data_axis,)), 1.0)
+    denom_all = jnp.maximum(_psum(nl_w, both), 1.0)
 
     # ---- level 1: device-local greedy ------------------------------------
     st0 = objective.init(local_feats)
     r1 = greedy(objective, st0, local_feats, kappa, rng=key)
-    valid1 = r1.idx >= 0
-
-    def dist_greedy(cands, cmask, steps, axes, denom):
-      """Distributed greedy over a replicated candidate block; evaluation is
-      psum-reduced over ``axes`` (gains use every shard's local data)."""
-      def body(t, c):
-        state, selmask, outf, outv = c
-        part, _ = objective.partial_stats(state, cands)
-        gains = _psum(part, axes) / denom
-        feasible = cmask & (~selmask)
-        masked = jnp.where(feasible, gains, -1e30)
-        chosen = jnp.argmax(masked)
-        take = jnp.any(feasible)
-        feat = cands[chosen]
-        new_state = objective.update(state, feat)
-        state = jax.tree.map(lambda a, b: jnp.where(take, a, b), new_state,
-                             state)
-        selmask = selmask.at[chosen].set(
-            jnp.where(take, True, selmask[chosen]))
-        outf = outf.at[t].set(jnp.where(take, feat, 0.0))
-        outv = outv.at[t].set(take)
-        return (state, selmask, outf, outv)
-
-      nc = cands.shape[0]
-      c0 = (objective.init(local_feats), jnp.zeros((nc,), bool),
-            jnp.zeros((steps, d), feats.dtype), jnp.zeros((steps,), bool))
-      state, _, f, v = _ufori(0, steps, body, c0)
-      val = _psum(objective.value(state) * n_local, axes) / denom
-      return f, v, val
+    valid1 = (r1.idx >= 0) & my_keep
+    g1 = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
 
     # ---- level 2: intra-pod merge + distributed greedy (ICI) --------------
     Bp = jax.lax.all_gather(r1.feats, data_axis).reshape(md * kappa, d)
     Bp_mask = jax.lax.all_gather(valid1, data_axis).reshape(md * kappa)
-    denom_pod = jnp.asarray(n_local * md, jnp.float32)
-    pod_f, pod_v, pod_val = dist_greedy(Bp, Bp_mask, kappa, (data_axis,),
-                                        denom_pod)
+    Bp_gids = jax.lax.all_gather(g1, data_axis).reshape(md * kappa)
+    pod_f, pod_v, pod_g, _ = _dist_greedy_core(
+        _objective_engine(objective, local_feats, Bp, Bp_mask, Bp_gids),
+        kappa, (data_axis,), w, denom_pod, feats.dtype)
 
     # ---- level 3: inter-pod merge + distributed greedy (DCI) --------------
     Bg = jax.lax.all_gather(pod_f, pod_axis).reshape(mp * kappa, d)
     Bg_mask = jax.lax.all_gather(pod_v, pod_axis).reshape(mp * kappa)
-    glob_f, glob_v, glob_val = dist_greedy(Bg, Bg_mask, k_final, both,
-                                           denom_all)
+    Bg_gids = jax.lax.all_gather(pod_g, pod_axis).reshape(mp * kappa)
+    glob_f, glob_v, glob_g, glob_val = _dist_greedy_core(
+        _objective_engine(objective, local_feats, Bg, Bg_mask, Bg_gids),
+        k_final, both, w, denom_all, feats.dtype)
 
-    # best pod-level solution, evaluated globally
+    # best pod-level solution, evaluated globally over the alive data
     def pod_value(sel_i, valid_i):
       st = set_value_feats(objective, objective.init(local_feats), sel_i,
                            valid_i)
-      return objective.value(st) * n_local
+      return objective.value(st) * n_local * w
     pods_f = jax.lax.all_gather(pod_f, pod_axis)        # (mp, kappa, d)
     pods_v = jax.lax.all_gather(pod_v, pod_axis)
+    pods_g = jax.lax.all_gather(pod_g, pod_axis)
     pod_vals = _psum(jax.vmap(pod_value)(pods_f, pods_v), both) / denom_all
+    pod_vals = jnp.where(jnp.any(pods_v, axis=1), pod_vals, -jnp.inf)
     best_p = jnp.argmax(pod_vals)
     v_best_pod = pod_vals[best_p]
 
     use_glob = glob_val >= v_best_pod
-    sel_feats = jnp.where(use_glob, glob_f, pods_f[best_p][:k_final])
-    sel_valid = jnp.where(use_glob, glob_v, pods_v[best_p][:k_final])
+    sel_feats = jnp.where(use_glob, glob_f,
+                          _take_k(pods_f[best_p], k_final, 0.0))
+    sel_valid = jnp.where(use_glob, glob_v,
+                          _take_k(pods_v[best_p], k_final, False))
+    sel_gids = jnp.where(use_glob, glob_g,
+                         _take_k(pods_g[best_p], k_final, -1))
     value = jnp.maximum(glob_val, v_best_pod)
     return GreediResult(sel_feats, sel_valid, value, glob_val, v_best_pod,
-                        pod_vals)
+                        pod_vals, sel_gids)
 
-  out_specs = jax.tree.map(lambda _: P(), GreediResult(
-      sel_feats=0, sel_valid=0, value=0, value_merged=0,
-      value_best_single=0, stage1_values=0))
-  shmapped = _shard_map(fn, mesh=mesh, in_specs=(P(both), P()),
-                        out_specs=out_specs)
-  return shmapped(feats, rng)
+  out_specs = _replicated_result_specs()
+  shmapped = _shard_map(
+      fn, mesh=mesh, in_specs=(P(both), P(both), P(), P()),
+      out_specs=out_specs)
+  return shmapped(feats, gids, straggler_keep, rng)

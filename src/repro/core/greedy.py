@@ -170,11 +170,14 @@ def best_of_knapsack(objective, state0, cand_feats, k_steps, *, meta,
   """max(plain greedy, cost-benefit greedy) under a knapsack: the
   (1 - 1/sqrt(e))-approximation of Krause & Guestrin (2005b) (Sec. 5.2)."""
   kn = C.Knapsack(budget)
+  # each arm draws from its own key: feeding one key to both would correlate
+  # their stochastic sampling (same hygiene as greedi_reference's rounds)
+  r_a, r_b = (None, None) if rng is None else jax.random.split(rng)
   a = greedy(objective, state0, cand_feats, k_steps, cand_mask=cand_mask,
-             constraint=kn, meta=meta, rng=rng, mode="standard",
+             constraint=kn, meta=meta, rng=r_a, mode="standard",
              backend=backend)
   b = greedy(objective, state0, cand_feats, k_steps, cand_mask=cand_mask,
-             constraint=kn, meta=meta, rng=rng, mode="cost_benefit",
+             constraint=kn, meta=meta, rng=r_b, mode="cost_benefit",
              backend=backend)
   va = objective.value(a.state)
   vb = objective.value(b.state)

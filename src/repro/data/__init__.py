@@ -1,5 +1,7 @@
 from repro.data.pipeline import EmbeddedCorpus, SyntheticLM, batches_from_indices
-from repro.data.selection import coverage_ratio, greedi_select_indices
+from repro.data.selection import (coverage_ratio, greedi_select_indices,
+                                  greedi_select_indices_sharded)
 
 __all__ = ["SyntheticLM", "EmbeddedCorpus", "batches_from_indices",
-           "greedi_select_indices", "coverage_ratio"]
+           "greedi_select_indices", "greedi_select_indices_sharded",
+           "coverage_ratio"]

@@ -1,10 +1,16 @@
 """GreeDi training-data coreset selection -- the paper's technique as a
 first-class feature of the training pipeline (see DESIGN.md §4).
 
-``greedi_select_indices`` runs the two-round protocol and maps the selected
-feature rows back to *global document indices* (machine, slot) -> doc id, so
-the training loop can consume the coreset.  On a mesh,
-``greedi_select_indices_sharded`` uses the shard_map production path.
+``greedi_select_indices`` runs the two-round protocol and returns the
+selected coreset as *global document indices*; it is a thin wrapper over
+``greedi_reference``, which tracks (machine, slot) -> doc id through both
+rounds and reports it as ``GreediResult.sel_gids``.  On a mesh,
+``greedi_select_indices_sharded`` does the same through the shard_map
+production paths: the ground set is randomly partitioned (the uniformity
+Theorems 8-11 assume), laid out shard-contiguously, and the permutation is
+threaded through the protocol as the ``gids`` side input, so the returned
+ids refer to the *original* document order.  Under the same seed both paths
+select the same coreset (tests assert set equality).
 """
 from __future__ import annotations
 
@@ -14,7 +20,6 @@ import numpy as np
 
 from repro.core import greedi as GD
 from repro.core import objectives as O
-from repro.core.greedy import greedy
 from repro.core.partition import random_partition
 
 Array = jax.Array
@@ -22,52 +27,73 @@ Array = jax.Array
 
 def greedi_select_indices(rng: Array, feats: Array, *, m: int, kappa: int,
                           k_final: int, kernel: str = "linear",
+                          kernel_kwargs: tuple = (),
                           local_eval: bool = True,
                           mode: str = "standard",
-                          sample_frac: float | None = None) -> np.ndarray:
+                          sample_frac: float | None = None,
+                          backend: str | None = None) -> np.ndarray:
   """GreeDi (Alg. 2) returning global indices of the selected coreset."""
+  obj = O.FacilityLocation(kernel=kernel, kernel_kwargs=kernel_kwargs)
+  r = GD.greedi_reference(rng, feats, m=m, kappa=kappa, k_final=k_final,
+                          objective=obj,
+                          init_for=lambda ef, em: obj.init(ef, em),
+                          local_eval=local_eval, mode=mode,
+                          sample_frac=sample_frac, backend=backend)
+  sel = np.asarray(r.sel_gids)
+  return sel[sel >= 0]
+
+
+def greedi_select_indices_sharded(rng: Array, feats: Array, *, mesh,
+                                  kappa: int, k_final: int,
+                                  kernel: str = "linear",
+                                  kernel_kwargs: tuple = (),
+                                  axis_names: tuple[str, ...] = ("data",),
+                                  fast: bool = True,
+                                  straggler_keep: Array | None = None,
+                                  backend: str | None = None) -> np.ndarray:
+  """GreeDi over a device mesh returning global indices of the coreset.
+
+  The ground set is randomly partitioned with the same key schedule as
+  ``greedi_reference`` (``greedi_keys``), each shard receives one partition
+  laid out contiguously, and the partition permutation rides along as the
+  ``gids`` input, so ``sel_gids`` maps straight back to document ids.
+
+  Args:
+    fast: route through ``greedi_sharded_fast`` (cached similarities; linear
+      / rbf via the pairwise oracle) instead of the generic objective path.
+    straggler_keep: optional (m,) bool mask of alive machines.
+    backend: gain-oracle / pairwise backend override (kernels/dispatch.py).
+  """
   n, d = feats.shape
-  obj = O.FacilityLocation(kernel=kernel)
-  r_part, r_sel = jax.random.split(rng)
-  parts, pmask, perm = random_partition(r_part, feats, m)
+  m = GD._mesh_size(mesh, axis_names)
+  if n % m != 0:
+    raise ValueError(f"sharded selection needs n % mesh == 0, got {n} % {m}"
+                     " (pad the corpus or use greedi_select_indices)")
+  r_part, r_sel, _, _ = GD.greedi_keys(rng)
+  parts, _, perm = random_partition(r_part, feats, m)   # npp == n // m
+  feats_sh = parts.reshape(n, d)
+  gids = perm.reshape(n).astype(jnp.int32)
 
-  def run_one(part, mask_row, key):
-    ef, em = (part, mask_row.astype(part.dtype)) if local_eval \
-        else (feats, jnp.ones((n,), part.dtype))
-    st0 = obj.init(ef, em)
-    return greedy(obj, st0, part, kappa, cand_mask=mask_row, rng=key,
-                  mode=mode, sample_frac=sample_frac)
-
-  keys = jax.random.split(r_sel, m)
-  r1 = jax.vmap(run_one)(parts, pmask, keys)
-  valid1 = r1.idx >= 0
-
-  # global doc ids of every round-1 candidate: perm[machine, local_idx]
-  gid = jnp.take_along_axis(perm, jnp.maximum(r1.idx, 0), axis=1)
-  gid = jnp.where(valid1, gid, -1)                      # (m, kappa)
-
-  st_full0 = obj.init(feats, jnp.ones((n,), feats.dtype))
-  B = r1.feats.reshape(m * kappa, d)
-  bmask = valid1.reshape(m * kappa)
-  r2 = greedy(obj, st_full0, B, k_final, cand_mask=bmask)
-  v_merged = obj.value(r2.state)
-
-  vals = jax.vmap(lambda sf, v: obj.value(
-      GD.set_value_feats(obj, st_full0, sf, v)))(r1.feats, valid1)
-  best_i = jnp.argmax(vals)
-
-  if float(v_merged) >= float(vals[best_i]):
-    sel = np.asarray(gid.reshape(m * kappa)[np.asarray(r2.idx)])
-    sel = sel[np.asarray(r2.idx) >= 0]
+  if fast:
+    r = GD.greedi_sharded_fast(
+        feats_sh, mesh=mesh, kappa=kappa, k_final=k_final,
+        axis_names=axis_names, kernel=kernel, kernel_kwargs=kernel_kwargs,
+        straggler_keep=straggler_keep, rng=r_sel, backend=backend, gids=gids)
   else:
-    sel = np.asarray(gid[best_i][:k_final])
+    obj = O.FacilityLocation(kernel=kernel, kernel_kwargs=kernel_kwargs)
+    r = GD.greedi_sharded(
+        feats_sh, mesh=mesh, kappa=kappa, k_final=k_final, objective=obj,
+        axis_names=axis_names, straggler_keep=straggler_keep, rng=r_sel,
+        backend=backend, gids=gids)
+  sel = np.asarray(r.sel_gids)
   return sel[sel >= 0]
 
 
 def coverage_ratio(feats: Array, selected: np.ndarray, k: int,
-                   kernel: str = "linear") -> float:
+                   kernel: str = "linear",
+                   kernel_kwargs: tuple = ()) -> float:
   """f(coreset) / f(centralized greedy), the paper's headline metric."""
-  obj = O.FacilityLocation(kernel=kernel)
+  obj = O.FacilityLocation(kernel=kernel, kernel_kwargs=kernel_kwargs)
   n = feats.shape[0]
   st0 = obj.init(feats, jnp.ones((n,), feats.dtype))
   sel_feats = feats[jnp.asarray(selected)]

@@ -14,7 +14,10 @@ ad-hoc boolean flags; ``resolve`` maps it to a callable.  "auto" picks the
 fused kernel on TPU and the XLA oracle elsewhere (interpret mode is for
 correctness, not speed).  The similarity kernels the fused oracles understand
 are listed in ``FUSED_SIMS``; objectives fall back to their generic jnp path
-for anything else (e.g. ``neg_sq_dist``).
+for anything else (e.g. ``neg_sq_dist``).  Besides the per-objective gain
+oracles, the registry carries ``pairwise`` (materialized similarity blocks)
+for paths that legitimately cache the matrix, e.g. the sharded GreeDi fast
+engine in core/greedi.py.
 
 Adding a fused oracle for a new objective (see docs/kernels.md):
 

@@ -179,3 +179,7 @@ dispatch.register("coverage_gain", pallas=coverage_gain,
                   ref=functools.partial(coverage_gain, force_xla=True))
 dispatch.register("graph_cut_gain", pallas=graph_cut_gain,
                   ref=functools.partial(graph_cut_gain, force_xla=True))
+# materialized similarity blocks: the cached-similarity GreeDi fast path
+# (core/greedi.py greedi_sharded_fast) and the GP cross-term benchmarks
+dispatch.register("pairwise", pallas=pairwise,
+                  ref=functools.partial(pairwise, force_xla=True))

@@ -3,14 +3,27 @@
     PYTHONPATH=src python -m repro.launch.select --n 100000 --k 128 --mesh 8
 
 With --mesh N the ground set is sharded over N forced host devices and the
-production shard_map path (greedi_sharded_fast) runs; without it the
-reference implementation is used.
+production shard_map path runs (greedi_sharded_fast, or the generic
+greedi_sharded with --no-fast); without it the reference implementation is
+used.  Both paths return *global document indices*, honor --out (npy), and
+report coverage vs the centralized greedy when n is small enough for the
+O(k n^2) baseline to be cheap (force with --coverage, skip with
+--no-coverage).
 """
 from __future__ import annotations
 
 import argparse
 import os
 import time
+
+
+def _force_host_devices(n: int) -> None:
+  """Append the forced-device-count flag to XLA_FLAGS (setdefault would
+  silently drop it when XLA_FLAGS is already set for other reasons)."""
+  flag = f"--xla_force_host_platform_device_count={n}"
+  existing = os.environ.get("XLA_FLAGS", "")
+  if "--xla_force_host_platform_device_count" not in existing:
+    os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
 
 
 def main() -> None:
@@ -23,18 +36,29 @@ def main() -> None:
                   "(reference path)")
   ap.add_argument("--mesh", type=int, default=0, help="forced host devices "
                   "for the sharded path")
+  ap.add_argument("--kernel", default="linear", choices=["linear", "rbf"])
+  ap.add_argument("--backend", default=None,
+                  choices=["pallas", "ref", "auto"],
+                  help="gain-oracle backend override (kernels/dispatch.py)")
+  ap.add_argument("--no-fast", action="store_true",
+                  help="sharded path: use the generic objective engine "
+                  "instead of the cached-similarity fast engine")
+  ap.add_argument("--coverage", action="store_true",
+                  help="force the centralized-greedy coverage baseline")
+  ap.add_argument("--no-coverage", action="store_true",
+                  help="skip the centralized-greedy coverage baseline")
   ap.add_argument("--out", default=None, help="write selected indices (npy)")
   args = ap.parse_args()
 
   if args.mesh:
-    os.environ.setdefault(
-        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.mesh}")
+    _force_host_devices(args.mesh)
 
   import jax
   import numpy as np
 
   from repro.data.pipeline import EmbeddedCorpus
-  from repro.data.selection import coverage_ratio, greedi_select_indices
+  from repro.data.selection import (coverage_ratio, greedi_select_indices,
+                                    greedi_select_indices_sharded)
 
   kappa = args.kappa or args.k
   corpus = EmbeddedCorpus(n_docs=args.n, feat_dim=args.d, vocab=1024,
@@ -42,23 +66,36 @@ def main() -> None:
   feats = corpus.features()
   t0 = time.time()
   if args.mesh:
-    from repro.core.greedi import greedi_sharded_fast
     from repro.util import make_mesh  # jax imported post-env-setup
     mesh = make_mesh((args.mesh,), ("data",))
-    r = greedi_sharded_fast(feats, mesh=mesh, kappa=kappa, k_final=args.k)
-    print(f"[select] sharded GreeDi (m={args.mesh}) f={float(r.value):.4f} "
-          f"merged={float(r.value_merged):.4f} "
-          f"best_single={float(r.value_best_single):.4f} "
-          f"({time.time()-t0:.1f}s)")
+    sel = greedi_select_indices_sharded(
+        jax.random.PRNGKey(0), feats, mesh=mesh, kappa=kappa,
+        k_final=args.k, kernel=args.kernel, fast=not args.no_fast,
+        backend=args.backend)
+    label = f"sharded GreeDi (m={args.mesh}, " \
+            f"{'generic' if args.no_fast else 'fast'})"
   else:
     sel = greedi_select_indices(jax.random.PRNGKey(0), feats, m=args.m,
-                                kappa=kappa, k_final=args.k)
-    cov = coverage_ratio(feats, sel, args.k)
-    print(f"[select] reference GreeDi (m={args.m}) selected {len(sel)} docs; "
-          f"coverage={cov:.4f} of centralized ({time.time()-t0:.1f}s)")
-    if args.out:
-      np.save(args.out, sel)
-      print(f"[select] wrote {args.out}")
+                                kappa=kappa, k_final=args.k,
+                                kernel=args.kernel, backend=args.backend)
+    label = f"reference GreeDi (m={args.m})"
+  t_sel = time.time() - t0
+
+  # persist the coreset BEFORE the (expensive) coverage baseline so a
+  # baseline OOM/timeout can't discard an already-computed selection
+  if args.out:
+    np.save(args.out, sel)
+    print(f"[select] wrote {args.out}")
+  msg = f"[select] {label} selected {len(sel)} docs"
+  # the baseline is O(k * n^2) on the full ground set -- default it on only
+  # at sizes where that is cheap, and let --coverage / --no-coverage override
+  want_cov = args.coverage or (not args.no_coverage and args.n <= 16384)
+  if want_cov:
+    cov = coverage_ratio(feats, sel, args.k, kernel=args.kernel)
+    msg += f"; coverage={cov:.4f} of centralized"
+  elif not args.no_coverage:
+    msg += "; coverage skipped at this n (force with --coverage)"
+  print(f"{msg} ({t_sel:.1f}s)")
 
 
 if __name__ == "__main__":

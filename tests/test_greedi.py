@@ -126,8 +126,11 @@ def test_greedi_sharded_single_device_mesh():
 
 
 def test_greedi_sharded_straggler_tolerance(subrun):
+  """Dead machines contribute neither candidates nor evaluation mass: the
+  reported value is f over the ALIVE data (Thm 4 with m_alive machines), so
+  it compares against a centralized greedy on the alive subset."""
   out = subrun("""
-import jax, jax.numpy as jnp
+import jax, jax.numpy as jnp, numpy as np
 from repro.core import objectives as O
 from repro.core.greedi import greedi_sharded, centralized_greedy
 from repro.util import make_mesh
@@ -141,11 +144,19 @@ part = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
                       straggler_keep=keep)
 _, v_c = centralized_greedy(f, 8, objective=obj,
                             init_for=lambda ef, em: obj.init(ef, em))
+# centralized on the surviving 6/8 of the ground set: the apples-to-apples
+# baseline for the straggler run's alive-data evaluation
+_, v_c_alive = centralized_greedy(f[:192], 8, objective=obj,
+                                  init_for=lambda ef, em: obj.init(ef, em))
 print("FULL", float(full.value / v_c))
-print("PART", float(part.value / v_c))
+print("PART", float(part.value / v_c_alive))
 assert float(part.value) > 0
-assert float(part.value / v_c) > 0.8      # degrades gracefully
-assert float(full.value) >= float(part.value) - 1e-5
+# GreeDi may legitimately beat single-pass greedy (both are approximations),
+# but never by more than greedy's (1 - 1/e) slack vs OPT: ratio in a band
+ratio = float(part.value / v_c_alive)
+assert 0.8 < ratio < 1.0 / (1.0 - 1.0 / 2.718281828) + 1e-3, ratio
+# dead machines are excluded from the A_max comparison entirely
+assert np.isneginf(np.asarray(part.stage1_values)[6:]).all()
 """, n_devices=8)
   assert "FULL" in out
 

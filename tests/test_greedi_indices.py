@@ -1,0 +1,357 @@
+"""Index tracking through every GreeDi path, the straggler-evaluation
+regression, the generalized fast engine (rbf / pallas backend), and the
+init-arity exception-transparency contract.
+
+Covers the ISSUE-2 acceptance criteria: sharded selection returns the same
+global-index set as the reference under the same seed, the fast engine
+matches the generic engine exactly for linear and rbf (also with a straggler
+masked out), and a dead shard's data moves nothing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as O
+from repro.core.greedi import centralized_greedy, greedi_reference
+from repro.data.selection import greedi_select_indices
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _feats(seed, n=192, d=12):
+  f = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+  return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+
+OBJ = O.FacilityLocation(kernel="linear")
+INIT = lambda ef, em: OBJ.init(ef, em)
+
+
+# ---------------------------------------------------------------------------
+# reference path: sel_gids maps back to ground-set rows
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("local_eval", [False, True])
+def test_reference_sel_gids_map_to_rows(local_eval):
+  feats = _feats(0)
+  r = greedi_reference(jax.random.PRNGKey(1), feats, m=4, kappa=8, k_final=8,
+                       objective=OBJ, init_for=INIT, local_eval=local_eval)
+  gids = np.asarray(r.sel_gids)
+  valid = np.asarray(r.sel_valid)
+  assert gids.dtype == np.int32
+  assert (gids[valid] >= 0).all() and (gids[valid] < feats.shape[0]).all()
+  assert len(set(gids[valid].tolist())) == valid.sum()
+  np.testing.assert_allclose(np.asarray(feats)[gids[valid]],
+                             np.asarray(r.sel_feats)[valid], atol=1e-6)
+
+
+def test_select_indices_wrapper_matches_reference_gids():
+  feats = _feats(1)
+  rng = jax.random.PRNGKey(7)
+  sel = greedi_select_indices(rng, feats, m=4, kappa=8, k_final=8)
+  r = greedi_reference(rng, feats, m=4, kappa=8, k_final=8, objective=OBJ,
+                       init_for=INIT, local_eval=True)
+  want = np.asarray(r.sel_gids)
+  np.testing.assert_array_equal(sel, want[want >= 0])
+
+
+# ---------------------------------------------------------------------------
+# sharded paths (forced host devices via subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_index_parity_with_reference(subrun):
+  """Acceptance: greedi_select_indices_sharded == greedi_select_indices as a
+  set under the same partition rng, for both the fast and generic engines;
+  gids map to identical feature rows."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data.selection import (greedi_select_indices,
+                                  greedi_select_indices_sharded)
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+mesh = make_mesh((8,), ("data",))
+for seed in (0, 3):
+  rng = jax.random.PRNGKey(seed)
+  s_ref = greedi_select_indices(rng, f, m=8, kappa=8, k_final=8)
+  s_fast = greedi_select_indices_sharded(rng, f, mesh=mesh, kappa=8,
+                                         k_final=8)
+  s_gen = greedi_select_indices_sharded(rng, f, mesh=mesh, kappa=8,
+                                        k_final=8, fast=False)
+  assert set(s_ref.tolist()) == set(s_fast.tolist()) == set(s_gen.tolist()), \\
+      (seed, sorted(s_ref.tolist()), sorted(s_fast.tolist()))
+print("INDEX_PARITY")
+""", n_devices=8)
+  assert "INDEX_PARITY" in out
+
+
+def test_sharded_gids_map_to_rows(subrun):
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_hierarchical
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+obj = O.FacilityLocation(kernel="linear")
+for r in (greedi_sharded(f, mesh=make_mesh((8,), ("data",)), kappa=8,
+                         k_final=8, objective=obj),
+          greedi_hierarchical(f, mesh=make_mesh((2, 4), ("pod", "data")),
+                              kappa=8, k_final=8, objective=obj)):
+  gids = np.asarray(r.sel_gids); valid = np.asarray(r.sel_valid)
+  assert (gids[valid] >= 0).all() and (gids[valid] < 256).all()
+  np.testing.assert_allclose(np.asarray(f)[gids[valid]],
+                             np.asarray(r.sel_feats)[valid], atol=1e-6)
+print("GIDS_MAP")
+""", n_devices=8)
+  assert "GIDS_MAP" in out
+
+
+def test_straggler_dead_shard_data_is_immaterial(subrun):
+  """Regression for the evaluation-mass bug: dead shards were dropped from
+  the merge but their rows still psum'd into round-2 gains, v_merged, and
+  stage1_vals.  Scrambling a dead shard's data must change NOTHING."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+obj = O.FacilityLocation(kernel="linear")
+mesh = make_mesh((8,), ("data",))
+keep = jnp.array([True]*6 + [False]*2)
+f_bad = f.at[192:].set(f[192:] * 37.0 + 5.0)   # scramble shards 6, 7
+for fn in (lambda x: greedi_sharded(x, mesh=mesh, kappa=8, k_final=8,
+                                    objective=obj, straggler_keep=keep),
+           lambda x: greedi_sharded_fast(x, mesh=mesh, kappa=8, k_final=8,
+                                         straggler_keep=keep)):
+  a, b = fn(f), fn(f_bad)
+  np.testing.assert_allclose(float(a.value_merged), float(b.value_merged),
+                             rtol=1e-6)
+  np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-6)
+  np.testing.assert_array_equal(np.asarray(a.sel_gids),
+                                np.asarray(b.sel_gids))
+  s1a, s1b = np.asarray(a.stage1_values), np.asarray(b.stage1_values)
+  np.testing.assert_allclose(s1a[:6], s1b[:6], rtol=1e-6)
+  assert np.isneginf(s1a[6:]).all()   # dead machines excluded from A_max
+# and the reported v_merged really is f over the ALIVE data only
+r = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                   straggler_keep=keep)
+from repro.core.greedi import set_value_feats
+st0 = obj.init(f[:192], jnp.ones((192,), f.dtype))
+want = obj.value(set_value_feats(obj, st0, r.sel_feats, r.sel_valid))
+np.testing.assert_allclose(float(r.value), float(want), rtol=1e-5)
+print("STRAGGLER_EVAL_OK")
+""", n_devices=8)
+  assert "STRAGGLER_EVAL_OK" in out
+
+
+def test_fast_engine_parity_rbf_and_pallas(subrun):
+  """Acceptance: the generalized fast engine matches greedi_sharded exactly
+  for linear AND rbf, under backend="pallas" (interpret mode), and with a
+  straggler masked out."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+mesh = make_mesh((8,), ("data",))
+keep = jnp.array([True]*7 + [False])
+# ("rbf", ()) exercises the DEFAULT bandwidth: the fast engine must resolve
+# h exactly like FacilityLocation does (objectives._kernel_h), not hardcode it
+for kernel, kw in (("linear", ()), ("rbf", (("h", 0.9),)), ("rbf", ())):
+  obj = O.FacilityLocation(kernel=kernel, kernel_kwargs=kw)
+  for sk in (None, keep):
+    a = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                       straggler_keep=sk)
+    b = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8, kernel=kernel,
+                            kernel_kwargs=kw, straggler_keep=sk)
+    np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.sel_feats),
+                               np.asarray(b.sel_feats), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.sel_gids),
+                                  np.asarray(b.sel_gids))
+  p = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8, kernel=kernel,
+                          kernel_kwargs=kw, backend="pallas")
+  x = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8, kernel=kernel,
+                          kernel_kwargs=kw, backend="ref")
+  np.testing.assert_allclose(float(p.value), float(x.value), rtol=1e-5)
+  np.testing.assert_array_equal(np.asarray(p.sel_gids),
+                                np.asarray(x.sel_gids))
+print("FAST_PARITY")
+""", n_devices=8)
+  assert "FAST_PARITY" in out
+
+
+def test_fast_engine_kappa_exceeding_partition(subrun):
+  """kappa > n/m: round-1 steps past the exhausted local partition must be
+  invalidated (like the generic path's idx=-1), not leak duplicate
+  candidates/gids into the merge."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+mesh = make_mesh((4,), ("data",))   # n_local = 4 < kappa = 8
+obj = O.FacilityLocation(kernel="linear")
+a = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj)
+b = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8)
+np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-5)
+np.testing.assert_array_equal(np.asarray(a.sel_gids), np.asarray(b.sel_gids))
+gids = np.asarray(b.sel_gids)[np.asarray(b.sel_valid)]
+assert len(set(gids.tolist())) == len(gids), gids   # no duplicate ids
+print("KAPPA_OVERFLOW_OK")
+""", n_devices=4)
+  assert "KAPPA_OVERFLOW_OK" in out
+
+
+def test_fast_engine_rejects_unfused_kernel():
+  from repro.core.greedi import greedi_sharded_fast
+  from repro.util import make_mesh
+  mesh = make_mesh((1,), ("data",))
+  with pytest.raises(ValueError, match="pairwise"):
+    greedi_sharded_fast(_feats(0, n=64), mesh=mesh, kappa=4, k_final=4,
+                        kernel="neg_sq_dist")
+
+
+def test_kappa_below_k_final_works(subrun):
+  """kappa < k_final is a legitimate regime (launch/train.py selects 1024
+  docs from 8 machines proposing 256 each): the merged arm draws k_final
+  from the m*kappa pool, and the A_max alt arm pads its shorter block.
+  Regression for the broadcast crash the alt-arm slice used to hit."""
+  feats = _feats(0, n=96)
+  r = greedi_reference(jax.random.PRNGKey(0), feats, m=4, kappa=4, k_final=8,
+                       objective=OBJ, init_for=INIT)
+  gids = np.asarray(r.sel_gids)[np.asarray(r.sel_valid)]
+  assert len(gids) == 8 and len(set(gids.tolist())) == 8
+  np.testing.assert_allclose(
+      np.asarray(feats)[gids], np.asarray(r.sel_feats)[np.asarray(r.sel_valid)],
+      atol=1e-6)
+  sel = greedi_select_indices(jax.random.PRNGKey(0), feats, m=4, kappa=4,
+                              k_final=8)
+  assert len(sel) == 8
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (96, 8))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+mesh = make_mesh((4,), ("data",))
+obj = O.FacilityLocation(kernel="linear")
+a = greedi_sharded(f, mesh=mesh, kappa=4, k_final=8, objective=obj)
+b = greedi_sharded_fast(f, mesh=mesh, kappa=4, k_final=8)
+np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-5)
+np.testing.assert_array_equal(np.asarray(a.sel_gids), np.asarray(b.sel_gids))
+print("KAPPA_UNDER_OK")
+""", n_devices=4)
+  assert "KAPPA_UNDER_OK" in out
+
+
+def test_hierarchical_straggler_masking(subrun):
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_hierarchical, centralized_greedy
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+obj = O.FacilityLocation(kernel="linear")
+mesh = make_mesh((2, 4), ("pod", "data"))
+keep = jnp.array([True, False, True, True, True, True, False, False])
+r = greedi_hierarchical(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                        straggler_keep=keep)
+_, v_c = centralized_greedy(f, 8, objective=obj,
+                            init_for=lambda ef, em: obj.init(ef, em))
+assert float(r.value / v_c) > 0.8   # degrades gracefully
+f_bad = f.at[32:64].set(9.0).at[192:].set(-7.0)   # dead devices 1, 6, 7
+r2 = greedi_hierarchical(f_bad, mesh=mesh, kappa=8, k_final=8,
+                         objective=obj, straggler_keep=keep)
+np.testing.assert_allclose(float(r.value), float(r2.value), rtol=1e-6)
+np.testing.assert_array_equal(np.asarray(r.sel_gids), np.asarray(r2.sel_gids))
+print("HIER_STRAGGLER_OK")
+""", n_devices=8)
+  assert "HIER_STRAGGLER_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# init_for dispatch: arity inspection, exception transparency
+# ---------------------------------------------------------------------------
+
+
+def test_throwing_init_for_propagates():
+  """Regression: the old try/except TypeError dispatch swallowed TypeErrors
+  raised INSIDE a user init_for and silently re-ran it with 2 args."""
+  feats = _feats(2, n=64)
+
+  def bad_init(ef, em):
+    raise TypeError("boom inside user init")
+
+  with pytest.raises(TypeError, match="boom inside user init"):
+    centralized_greedy(feats, 4, objective=OBJ, init_for=bad_init)
+  with pytest.raises(TypeError, match="boom inside user init"):
+    greedi_reference(jax.random.PRNGKey(0), feats, m=4, kappa=4, k_final=4,
+                     objective=OBJ, init_for=bad_init)
+
+  def bad_init3(ef, em, cand):
+    raise TypeError("boom in precompute init")
+
+  with pytest.raises(TypeError, match="boom in precompute init"):
+    centralized_greedy(feats, 4, objective=OBJ, init_for=bad_init3)
+
+
+def test_init_arity_dispatch():
+  """2-arg and 3-arg (precompute) init_for both work; results agree for
+  facility location, whose precompute variant is mathematically identical."""
+  feats = _feats(3, n=96)
+  _, v2 = centralized_greedy(feats, 6, objective=OBJ, init_for=INIT)
+  pre = O.FacilityLocationPre(kernel="linear")
+  _, v3 = centralized_greedy(
+      feats, 6, objective=pre,
+      init_for=lambda ef, em, cand: pre.init(ef, em, cand))
+  np.testing.assert_allclose(float(v2), float(v3), rtol=1e-5)
+
+  # *args callables count as 3-arg (they can accept the candidate block)
+  pre_star = lambda *a: pre.init(*a)
+  _, v4 = centralized_greedy(feats, 6, objective=pre, init_for=pre_star)
+  np.testing.assert_allclose(float(v3), float(v4), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RNG hygiene: independent keys per round / per knapsack arm
+# ---------------------------------------------------------------------------
+
+
+def test_rng_modes_deterministic_and_seed_sensitive():
+  """Stochastic/random modes: same seed reproduces, and the round-2 key is
+  independent of round 1 (a fresh split, not the consumed r_sel)."""
+  feats = _feats(4, n=128)
+  kw = dict(m=4, kappa=6, k_final=6, objective=OBJ, init_for=INIT,
+            mode="stochastic", sample_frac=0.4)
+  a = greedi_reference(jax.random.PRNGKey(0), feats, **kw)
+  b = greedi_reference(jax.random.PRNGKey(0), feats, **kw)
+  np.testing.assert_array_equal(np.asarray(a.sel_gids), np.asarray(b.sel_gids))
+  sels = {tuple(np.asarray(
+      greedi_reference(jax.random.PRNGKey(s), feats, **kw).sel_gids).tolist())
+      for s in range(4)}
+  assert len(sels) > 1   # seeds actually move the sampling
+
+
+def test_best_of_knapsack_arms_get_independent_keys():
+  from repro.core import constraints as C
+  from repro.core.greedy import best_of_knapsack
+  feats = jnp.abs(_feats(5, n=64, d=8))
+  meta = C.default_meta(64)
+  meta["cost"] = jnp.linspace(0.2, 1.0, 64)
+  st0 = OBJ.init(feats, jnp.ones((64,), feats.dtype))
+  r = best_of_knapsack(OBJ, st0, feats, 10, meta=meta, budget=2.0,
+                       rng=jax.random.PRNGKey(0))
+  assert float(OBJ.value(r.state)) > 0
