@@ -1,0 +1,82 @@
+"""CI regression gate for the select-step benchmark trajectory.
+
+Compares a fresh ``run.py --json`` output against a committed ``BENCH_*.json``
+baseline on the *speedup* entries (dimensionless legacy/variant ratios from
+benchmarks/select_step.py).  Ratios are compared instead of absolute
+us_per_call because CI runners and the baseline machine differ in raw speed;
+the fused-select and lazy-mode advantages are relative and must not erode.
+
+Exit status 1 if any ratio present in BOTH files drops below
+(1 - tol) * baseline, if the fresh run recorded suite failures, or if the
+files share no comparable entries (a silently-empty gate is a broken gate).
+
+Usage:
+    python benchmarks/check_regression.py \
+        --baseline BENCH_3.json --new /tmp/bench.json [--tol 0.25]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _ratios(payload: dict) -> dict[str, float]:
+  return {r["name"]: float(r["us_per_call"])
+          for r in payload.get("results", [])
+          if "speedup" in r["name"]}
+
+
+def main() -> int:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--baseline", required=True)
+  ap.add_argument("--new", required=True)
+  ap.add_argument("--tol", type=float, default=0.25,
+                  help="allowed fractional drop vs baseline (default 0.25)")
+  ap.add_argument("--allow-missing", action="store_true",
+                  help="tolerate baseline speedup entries absent from the "
+                       "fresh run (partial/quick sweeps); default is to fail "
+                       "so a shrunken sweep cannot silently un-gate entries")
+  args = ap.parse_args()
+
+  with open(args.baseline) as f:
+    base = json.load(f)
+  with open(args.new) as f:
+    new = json.load(f)
+
+  if new.get("failures"):
+    print(f"FAIL: fresh run recorded suite failures: {new['failures']}")
+    return 1
+
+  base_r, new_r = _ratios(base), _ratios(new)
+  shared = sorted(set(base_r) & set(new_r))
+  if not shared:
+    print(f"FAIL: no shared speedup entries between {args.baseline} "
+          f"({sorted(base_r)}) and {args.new} ({sorted(new_r)})")
+    return 1
+  missing = sorted(set(base_r) - set(new_r))
+  if missing:
+    print(f"{'note' if args.allow_missing else 'FAIL'}: baseline entries "
+          f"absent from the fresh run (ungated): {missing}")
+    if not args.allow_missing:
+      return 1
+
+  bad = []
+  for name in shared:
+    floor = (1.0 - args.tol) * base_r[name]
+    status = "ok" if new_r[name] >= floor else "REGRESSED"
+    print(f"{name}: baseline {base_r[name]:.2f}x  new {new_r[name]:.2f}x  "
+          f"floor {floor:.2f}x  {status}")
+    if new_r[name] < floor:
+      bad.append(name)
+
+  if bad:
+    print(f"FAIL: {len(bad)} speedup entr{'y' if len(bad) == 1 else 'ies'} "
+          f"regressed >{args.tol:.0%}: {bad}")
+    return 1
+  print(f"OK: {len(shared)} speedup entries within {args.tol:.0%} of baseline")
+  return 0
+
+
+if __name__ == "__main__":
+  sys.exit(main())

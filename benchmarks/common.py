@@ -11,11 +11,34 @@ points with synthetic data of matched statistics (DESIGN.md §8, point 4):
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# machine-readable result collection (run.py --json): None = print-only
+_COLLECT: list[dict] | None = None
+
+
+def start_collection() -> None:
+  global _COLLECT
+  _COLLECT = []
+
+
+def collected() -> list[dict]:
+  return list(_COLLECT or [])
+
+
+def write_json(path: str, **meta) -> None:
+  payload = dict(meta)
+  payload["backend"] = jax.default_backend()
+  payload["results"] = collected()
+  with open(path, "w") as f:
+    json.dump(payload, f, indent=2, sort_keys=True)
+    f.write("\n")
+  print(f"# wrote {len(payload['results'])} results to {path}")
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
@@ -29,8 +52,12 @@ def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
   return min(ts)
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "",
+         shapes: dict | None = None) -> None:
   print(f"{name},{us_per_call:.1f},{derived}")
+  if _COLLECT is not None:
+    _COLLECT.append({"name": name, "us_per_call": float(us_per_call),
+                     "derived": str(derived), "shapes": shapes})
 
 
 def tiny_images_like(n: int, d: int = 64, clusters: int = 50, seed: int = 0):
@@ -40,6 +67,30 @@ def tiny_images_like(n: int, d: int = 64, clusters: int = 50, seed: int = 0):
   centers = centers / jnp.linalg.norm(centers, axis=1, keepdims=True)
   assign = jax.random.randint(ka, (n,), 0, clusters)
   f = centers[assign] + 0.35 * jax.random.normal(kn, (n, d))
+  return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+
+def near_dup_corpus(n: int, d: int = 32, clusters: int | None = None,
+                    noise: float = 0.08, alpha: float = 1.2, seed: int = 0):
+  """Near-duplicate-heavy corpus: Zipf-sized tight clusters of unit vectors.
+
+  The operating point of production exemplar selection / dedup (web-scale
+  corpora are dominated by boilerplate near-duplicates with a long tail of
+  rare documents): cluster populations follow a Zipf(alpha) law and members
+  sit ``noise``-close to their center.  Marginal gains are therefore
+  heterogeneous -- covering a cluster collapses its members' gains and barely
+  moves the rest -- which is the regime where lazy-greedy bounds prune
+  (and where the uniform ``tiny_images_like`` mixture, whose gains decay in
+  lockstep, does not)."""
+  if clusters is None:
+    clusters = max(n // 64, 8)
+  kc, kn = jax.random.split(jax.random.PRNGKey(seed))
+  centers = jax.random.normal(kc, (clusters, d))
+  centers = centers / jnp.linalg.norm(centers, axis=1, keepdims=True)
+  p = np.arange(1, clusters + 1, dtype=np.float64) ** -alpha
+  p /= p.sum()
+  assign = np.random.default_rng(seed).choice(clusters, size=n, p=p)
+  f = centers[assign] + noise * jax.random.normal(kn, (n, d))
   return f / jnp.linalg.norm(f, axis=1, keepdims=True)
 
 

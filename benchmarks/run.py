@@ -1,7 +1,10 @@
 """Benchmark suite entry point: one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV lines (plus human-readable detail).
-``--quick`` shrinks sweeps; ``--only <name>`` runs a single benchmark.
+``--quick`` shrinks sweeps; ``--only <name>`` runs a single benchmark;
+``--json PATH`` additionally writes machine-readable results (name,
+us_per_call, derived, shapes, backend) -- the format the committed
+``BENCH_*.json`` baselines and benchmarks/check_regression.py consume.
 """
 from __future__ import annotations
 
@@ -13,11 +16,16 @@ def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--quick", action="store_true")
   ap.add_argument("--only", default=None)
+  ap.add_argument("--json", default=None, metavar="PATH",
+                  help="write machine-readable results to PATH")
   args = ap.parse_args()
 
-  from benchmarks import (fig4_exemplar, fig6_active_set, fig8_speedup,
-                          fig9_maxcut, fig10_coverage, kernels_bench,
-                          roofline)
+  from benchmarks import (common, fig4_exemplar, fig6_active_set,
+                          fig8_speedup, fig9_maxcut, fig10_coverage,
+                          kernels_bench, roofline, select_step)
+
+  if args.json:
+    common.start_collection()
 
   suites = {
       "fig4_exemplar": lambda: fig4_exemplar.run(quick=args.quick),
@@ -27,6 +35,7 @@ def main() -> None:
       "fig8_speedup": lambda: fig8_speedup.run(quick=args.quick),
       "kernels": lambda: kernels_bench.run(quick=args.quick),
       "roofline": lambda: roofline.run(quick=args.quick),
+      "select_step": lambda: select_step.run(quick=args.quick),
   }
   names = [args.only] if args.only else list(suites)
   failures = []
@@ -39,6 +48,8 @@ def main() -> None:
       failures.append(name)
       print(f"{name},FAILED,{e!r}", flush=True)
     print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+  if args.json:
+    common.write_json(args.json, quick=args.quick, failures=failures)
   if failures:
     raise SystemExit(f"benchmark failures: {failures}")
 

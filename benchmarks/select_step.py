@@ -1,0 +1,79 @@
+"""Greedy select-step microbenchmark: fused-select + tile-bound lazy greedy
+vs the legacy gains+argmax path (the BENCH_*.json trajectory of ISSUE 3).
+
+Three variants of the same facility-location selection, identical results
+(asserted), different step mechanics:
+
+  * ``legacy`` -- gains oracle materializes the (n,) vector, a second pass
+    argmaxes it (``greedy(use_select=False)``: the pre-select-oracle path);
+  * ``select`` -- one fused select pass per step through the dispatch-layer
+    top-1 oracle (on the XLA/ref backend the fusion happens inside one jit;
+    on TPU the (n,) vector never leaves the kernel);
+  * ``lazy``   -- ``mode="lazy"``: tile-bound Minoux rescanning, which prunes
+    most candidate tiles per step once the bounds tighten.
+
+Data is the near-duplicate-heavy corpus of ``common.near_dup_corpus`` (the
+production dedup regime, where gains are heterogeneous and lazy bounds
+actually prune -- see its docstring) and the eval set is the first ``ne``
+rows of the SAME ground set (the Thm-10 U-subset regime), so the sweep
+isolates the *candidate-axis* scaling n = 4k..64k that dominates the
+per-machine GreeDi cost.  Speedup entries are dimensionless (legacy /
+variant), which is what benchmarks/check_regression.py gates in CI --
+absolute us_per_call varies with the runner, ratios do not (much).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, near_dup_corpus, timeit
+from repro.core.greedy import greedy
+from repro.core.objectives import FacilityLocation
+
+NE, D, K = 1024, 32, 16  # shared by quick/full so result names stay comparable
+
+
+def _variant(obj, k, **kw):
+  def run(st0, feats):
+    r = greedy(obj, st0, feats, k, **kw)
+    return r.idx, r.gains
+  return jax.jit(run)
+
+
+def run(quick: bool = False) -> None:
+  ns = (4096,) if quick else (4096, 16384, 65536)
+  obj = FacilityLocation(kernel="linear")
+
+  runs = {
+      "legacy": _variant(obj, K, use_select=False),
+      "select": _variant(obj, K, use_select=True),
+      "lazy": _variant(obj, K, mode="lazy"),
+  }
+
+  for n in ns:
+    feats = near_dup_corpus(n, D, seed=0)
+    st0 = obj.init(feats[:NE])  # Thm-10 style U-subset of the ground set
+    shapes = {"n": n, "ne": NE, "d": D, "k": K}
+
+    # identical selections across all three paths: exact index equality
+    # (tie-breaks included), gains identical to f32 tolerance
+    ref_i = ref_g = None
+    for name, fn in runs.items():
+      i, g = (np.asarray(x) for x in fn(st0, feats))
+      if ref_i is None:
+        ref_i, ref_g = i, g
+      else:
+        assert i.tolist() == ref_i.tolist(), \
+            f"{name} selected {i.tolist()} vs legacy {ref_i.tolist()}"
+        np.testing.assert_allclose(g, ref_g, rtol=1e-5, atol=1e-6,
+                                   err_msg=f"{name} gains diverged")
+
+    us = {name: timeit(fn, st0, feats) / K * 1e6 for name, fn in runs.items()}
+    for name, t in us.items():
+      emit(f"select_step/{name}_n{n}", t, derived="us_per_step",
+           shapes=shapes)
+    emit(f"select_step/speedup_select_n{n}", us["legacy"] / us["select"],
+         derived="x_legacy_over_select", shapes=shapes)
+    emit(f"select_step/speedup_lazy_n{n}", us["legacy"] / us["lazy"],
+         derived="x_legacy_over_lazy", shapes=shapes)

@@ -29,6 +29,13 @@ loop) actually need.  The sharded paths accept an optional ``gids`` array so
 a caller that pre-permuted the ground set (random partitioning) can map the
 selection back to original document ids.
 
+Select-step routing: round 1 of every path is the ``greedy`` loop and so
+inherits the fused select oracles (one kernel pass per step, no (n,) gains
+round-trip; ``mode="lazy"`` adds tile-bound lazy rescanning -- see
+core/greedy.py and docs/perf.md).  The merge rounds run through
+``_dist_greedy_core``, where the per-step argmax is the same ``masked_top1``
+fold applied after the psum of partial gains.
+
 Fault tolerance: ``straggler_keep`` masks partitions out of the merge AND out
 of the evaluation weight: a dead machine contributes neither candidates nor
 psum mass to round-2 gains, ``value_merged``, or ``stage1_values``, so the
@@ -46,8 +53,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.greedy import NEG, GreedyResult, greedy, with_backend
-from repro.core.objectives import _kernel_h
+from repro.core.greedy import GreedyResult, greedy, with_backend
+from repro.core.objectives import NEG, _kernel_h, masked_top1
 from repro.core.partition import random_partition
 from repro.kernels import dispatch
 from repro.util import fori as _ufori
@@ -196,11 +203,15 @@ def _dist_greedy_core(engine: _Engine, steps: int, axes, weight: Array,
                       denom: Array, feat_dtype):
   """Distributed greedy over the engine's replicated candidate block.
 
-  Per step: psum the weighted local partial gains over ``axes``, pick the
-  feasible argmax, and replicate the update on every shard.  ``weight`` is
-  the shard's evaluation weight (0 for dead/straggling machines and for
-  shards outside the Thm-10 U-subset); ``denom`` the psum of weighted eval
-  counts.  Returns (sel_feats (steps, d), sel_valid (steps,),
+  Per step: psum the weighted local partial gains over ``axes``, then fold
+  gains, feasibility mask, and argmax into ONE top-1 reduction
+  (``masked_top1`` -- same tie-breaking as the fused select oracles of the
+  local rounds; the psum itself is irreducible, since every shard holds only
+  a *partial* sum, so the merged (nc,) vector -- nc = m*kappa, tiny by the
+  paper's communication model -- is materialized once and reduced once).
+  ``weight`` is the shard's evaluation weight (0 for dead/straggling machines
+  and for shards outside the Thm-10 U-subset); ``denom`` the psum of weighted
+  eval counts.  Returns (sel_feats (steps, d), sel_valid (steps,),
   sel_gids (steps,) int32, value ()) -- all replicated.
   """
   cands, cmask, cgids = engine.cands, engine.cmask, engine.cgids
@@ -210,8 +221,7 @@ def _dist_greedy_core(engine: _Engine, steps: int, axes, weight: Array,
     state, selmask, outf, outv, outg = c
     gains = jax.lax.psum(engine.partial_gains(state) * weight, axes) / denom
     feasible = cmask & (~selmask)
-    masked = jnp.where(feasible, gains, NEG)
-    chosen = jnp.argmax(masked)
+    _, chosen = masked_top1(gains, feasible)
     take = jnp.any(feasible)
     feat = cands[chosen]
     state = engine.apply_update(state, chosen, feat, take)
@@ -433,13 +443,19 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    u_subset_eval: bool = False,
                    rng: Array | None = None,
                    backend: str | None = None,
-                   gids: Array | None = None):
+                   gids: Array | None = None,
+                   mode: str = "standard"):
   """GreeDi over a device mesh; round-2 gains are psum-reduced partial sums.
 
   Args:
     feats: (n, d) ground set, n divisible by the product of axis sizes.
     objective: must expose init/gains/update/value and partial_stats (the
       facility-location family -- the paper's decomposable flagship).
+    mode: greedy mode for the *round-1* shard-local selection ("standard"
+      routes through the fused select oracles; "lazy" adds tile-bound lazy
+      rescanning -- both bit-identical selections, see core/greedy.py).
+      Round 2 always runs the distributed psum core, whose per-step argmax
+      is the same fused top-1 reduction over the merged candidate block.
     straggler_keep: optional (m,) bool; False partitions are dropped at the
       merge (failed/straggling machines) AND excluded from the evaluation
       weight, so dead machines' data moves neither round-2 gains nor the
@@ -474,7 +490,7 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
 
     # ---- round 1: local greedy on the shard's partition ------------------
     st0 = objective.init(local_feats)
-    r1 = greedy(objective, st0, local_feats, kappa, rng=key)
+    r1 = greedy(objective, st0, local_feats, kappa, rng=key, mode=mode)
     sel = r1.feats                                   # (kappa, d)
     valid = (r1.idx >= 0) & my_keep
     gsel = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
@@ -590,8 +606,7 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     def r1_body(t, c):
       cov, selmask, sel_idx = c
       gains = jnp.sum(jnp.maximum(s11 - cov[:, None], 0.0), axis=0)
-      gains = jnp.where(selmask, NEG, gains)
-      j = jnp.argmax(gains)
+      _, j = masked_top1(gains, ~selmask)
       cov = jnp.maximum(cov, s11[:, j])
       return (cov, selmask.at[j].set(True), sel_idx.at[t].set(j))
 
@@ -663,7 +678,8 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
                         straggler_keep: Array | None = None,
                         rng: Array | None = None,
                         backend: str | None = None,
-                        gids: Array | None = None):
+                        gids: Array | None = None,
+                        mode: str = "standard"):
   """Three-level GreeDi for multi-pod meshes: device -> pod -> global.
 
   Level 1: each device greedily selects kappa from its local partition.
@@ -706,7 +722,7 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
 
     # ---- level 1: device-local greedy ------------------------------------
     st0 = objective.init(local_feats)
-    r1 = greedy(objective, st0, local_feats, kappa, rng=key)
+    r1 = greedy(objective, st0, local_feats, kappa, rng=key, mode=mode)
     valid1 = (r1.idx >= 0) & my_keep
     g1 = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
 

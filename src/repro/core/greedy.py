@@ -5,7 +5,28 @@ Minoux's *lazy* greedy, whose priority queue saves oracle calls on CPUs.  On a
 systolic-array accelerator the oracle for a whole candidate block is one fused
 matmul-reduce, so the profitable variants are instead:
 
-  * ``standard``   -- recompute all marginal gains each step (one MXU pass);
+  * ``standard``   -- recompute all marginal gains each step.  Through the
+                      fused *select* oracles (kernels/select_top1.py) the
+                      whole step is ONE kernel pass: the per-tile top-1 is
+                      reduced in-kernel, so the (n,) gains vector never
+                      touches HBM and argmax disappears as a separate pass;
+  * ``lazy``       -- Minoux's lazy greedy lifted to tile granularity: stale
+                      per-item gains (valid upper bounds, since submodularity
+                      only ever shrinks marginal gains as S grows and
+                      hereditary constraints only shrink feasibility) are
+                      kept between steps, and each step rescans *bound-sorted
+                      tiles* of candidates -- gather the top-stale tile,
+                      refresh its gains in one fused pass, stop as soon as
+                      the next tile's head bound cannot beat the running
+                      best (``lax.while_loop``).  Fixed memory-contiguous
+                      tiles would not prune (every such tile of a shuffled
+                      corpus contains a near-best item); sorting the tile
+                      *membership* by bound each step is what makes the
+                      priority queue work at MXU granularity.  The result is
+                      exactly ``standard``'s -- enforced by tests.
+                      Guaranteed for monotone objectives; objectives
+                      declaring ``monotone = False`` (or
+                      ``supports_lazy = False``) silently fall back;
   * ``stochastic`` -- "lazier than lazy" (Mirzasoleiman et al. 2015a): each
                       step scores only a random ~(n/k) ln(1/eps) subset, which
                       shrinks the matmul itself; 1 - 1/e - eps in expectation;
@@ -16,7 +37,13 @@ matmul-reduce, so the profitable variants are instead:
 
 Every loop is a ``lax.fori_loop`` over a fixed number of steps with fully
 static shapes, so it jits, vmaps (over partitions) and shard_maps (over mesh
-shards) without retracing.
+shards) without retracing.  The lazy mode's inner rescan is a
+``lax.while_loop`` with data-dependent trip count but static shapes, which
+batches under vmap and lowers under shard_map like any other loop.
+
+The ``values`` trajectory is not evaluated per step: f(S_t) is exactly
+f(S_0) + cumsum(realized gains) (no-op steps record gain 0), computed once
+after the loop.
 """
 from __future__ import annotations
 
@@ -27,10 +54,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import constraints as C
+from repro.core.objectives import NEG, masked_top1
+from repro.kernels import autotune
 from repro.util import fori as _ufori
 
 Array = jax.Array
-NEG = -1e30
 
 
 def with_backend(objective, backend: str | None):
@@ -54,13 +82,23 @@ class GreedyResult(NamedTuple):
   values: Array  # (k,) f(S_t) trajectory
 
 
+def _pad_to(x: Array, n: int, value) -> Array:
+  pad = n - x.shape[0]
+  if pad == 0:
+    return x
+  return jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1),
+                 constant_values=value)
+
+
 def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
            cand_mask: Array | None = None,
            constraint=None, meta: dict[str, Array] | None = None,
            rng: Array | None = None, mode: str = "standard",
            sample_frac: float | None = None,
            stop_nonpositive: bool = False,
-           backend: str | None = None) -> GreedyResult:
+           backend: str | None = None,
+           use_select: bool = True,
+           lazy_tile: int | None = None) -> GreedyResult:
   """Select up to ``k_steps`` items from ``cand_feats`` maximizing ``objective``.
 
   Args:
@@ -73,15 +111,27 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
       beyond k_steps, i.e. plain cardinality).
     meta: per-item attribute arrays for the constraint.
     rng: PRNG key (required for stochastic/random modes).
-    mode: "standard" | "stochastic" | "random" | "cost_benefit".
+    mode: "standard" | "lazy" | "stochastic" | "random" | "cost_benefit".
+      "lazy" is the tile-bound lazy greedy (exact = "standard"; monotone
+      objectives only -- others fall back to "standard", see module doc).
     sample_frac: for stochastic mode, per-step inclusion probability; the
       canonical choice is (1/k) * ln(1/eps).
     stop_nonpositive: treat steps whose best gain <= 0 as no-ops (required
       for non-monotone objectives; harmless for monotone ones).
     backend: optional gain-oracle backend override ("pallas" | "ref" |
       "auto") applied to the objective for this run (see kernels/dispatch.py).
+    use_select: route standard-mode steps through the objective's fused
+      ``select`` oracle where available; False forces the legacy gains+argmax
+      two-pass path (benchmarks/tests).  Lazy-mode rescans always use the
+      gains oracle on the rescanned tile: the full (tile,) vector is needed
+      to refresh the stale bounds.
+    lazy_tile: rescore-tile size for mode="lazy" (default: the autotable in
+      kernels/autotune.py, keyed on (n, d, backend)).
   """
   objective = with_backend(objective, backend)
+  if mode == "lazy" and not (getattr(objective, "monotone", True)
+                             and getattr(objective, "supports_lazy", True)):
+    mode = "standard"  # lazy bounds are only guaranteed for monotone f
   n, d = cand_feats.shape
   if cand_mask is None:
     cand_mask = jnp.ones((n,), bool)
@@ -94,7 +144,15 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
   if mode in ("stochastic",) and sample_frac is None:
     raise ValueError("stochastic mode needs sample_frac")
 
+  if mode == "lazy":
+    return _greedy_lazy(objective, state0, cand_feats, k_steps,
+                        cand_mask=cand_mask, constraint=constraint, meta=meta,
+                        stop_nonpositive=stop_nonpositive,
+                        use_select=use_select, tile=lazy_tile)
+
   fdtype = jnp.float32
+  select_path = (mode == "standard" and use_select
+                 and hasattr(objective, "select"))
   carry0 = dict(
       state=state0,
       selected=jnp.zeros((n,), bool),
@@ -102,39 +160,43 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
       idx=jnp.full((k_steps,), -1, jnp.int32),
       feats=jnp.zeros((k_steps, d), cand_feats.dtype),
       gains=jnp.zeros((k_steps,), fdtype),
-      values=jnp.zeros((k_steps,), fdtype),
       rng=rng,
   )
 
   def body(t, c):
     rng, r_step = jax.random.split(c["rng"])
-    gains = objective.gains(c["state"], cand_feats).astype(fdtype)   # (n,)
     feasible = (~c["selected"]) & cand_mask & constraint.mask(c["cstate"], meta)
 
-    if mode == "cost_benefit":
-      score = gains / jnp.maximum(meta["cost"].astype(fdtype), 1e-12)
+    if select_path:
+      # one fused pass: in-kernel top-1, no (n,) gains round-trip
+      chosen_gain, chosen = objective.select(c["state"], cand_feats, feasible)
+      chosen_gain = chosen_gain.astype(fdtype)
     else:
-      score = gains
-    if mode == "stochastic":
-      keep = jax.random.bernoulli(r_step, sample_frac, (n,))
-      # never mask out *everything*: fall back to the full set if the sample
-      # is empty (prob ~ (1-p)^n, but be safe for tiny n in tests)
-      keep = jnp.where(jnp.any(keep & feasible), keep, True)
-      feasible = feasible & keep
-    masked = jnp.where(feasible, score, NEG)
+      gains = objective.gains(c["state"], cand_feats).astype(fdtype)   # (n,)
+      if mode == "cost_benefit":
+        score = gains / jnp.maximum(meta["cost"].astype(fdtype), 1e-12)
+      else:
+        score = gains
+      if mode == "stochastic":
+        keep = jax.random.bernoulli(r_step, sample_frac, (n,))
+        # never mask out *everything*: fall back to the full set if the sample
+        # is empty (prob ~ (1-p)^n, but be safe for tiny n in tests)
+        keep = jnp.where(jnp.any(keep & feasible), keep, True)
+        feasible = feasible & keep
+      masked = jnp.where(feasible, score, NEG)
 
-    if mode == "random":
-      kk = min(k_steps, n)
-      top_vals, top_idx = jax.lax.top_k(masked, kk)
-      # uniform among the top-k *feasible* entries (Buchbinder RandomGreedy)
-      valid = top_vals > NEG / 2
-      num_valid = jnp.maximum(jnp.sum(valid), 1)
-      j = jax.random.randint(r_step, (), 0, num_valid)
-      chosen = top_idx[j]
-    else:
-      chosen = jnp.argmax(masked)
+      if mode == "random":
+        kk = min(k_steps, n)
+        top_vals, top_idx = jax.lax.top_k(masked, kk)
+        # uniform among the top-k *feasible* entries (Buchbinder RandomGreedy)
+        valid = top_vals > NEG / 2
+        num_valid = jnp.maximum(jnp.sum(valid), 1)
+        j = jax.random.randint(r_step, (), 0, num_valid)
+        chosen = top_idx[j]
+      else:
+        chosen = jnp.argmax(masked)
+      chosen_gain = gains[chosen]
 
-    chosen_gain = gains[chosen]
     any_feasible = jnp.any(feasible)
     if stop_nonpositive:
       take = any_feasible & (chosen_gain > 0.0)
@@ -156,12 +218,129 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
         idx=c["idx"].at[t].set(jnp.where(take, chosen, -1)),
         feats=c["feats"].at[t].set(jnp.where(take, feat, 0.0)),
         gains=c["gains"].at[t].set(jnp.where(take, chosen_gain, 0.0)),
-        values=c["values"].at[t].set(objective.value(state).astype(fdtype)),
         rng=rng,
     )
 
   c = _ufori(0, k_steps, body, carry0)
-  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], c["values"])
+  values = objective.value(state0).astype(fdtype) + jnp.cumsum(c["gains"])
+  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values)
+
+
+def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
+                 cand_mask: Array, constraint, meta: dict[str, Array],
+                 stop_nonpositive: bool, use_select: bool,
+                 tile: int | None) -> GreedyResult:
+  """Tile-bound lazy greedy (mode="lazy"): exact, but rescans few tiles.
+
+  ``stale[i]`` holds the last gain computed for candidate i -- a valid upper
+  bound on its current gain by submodularity (and feasibility only shrinks
+  under hereditary constraints, so masking can only lower scores further).
+  Step 0 is one full vectorized gains pass (it both selects and initializes
+  ``stale`` exactly, at the same cost as a standard step).  Every later step
+  sorts candidates by masked stale bound, then rescans *tiles of that order*
+  front-to-back: gather the tile's rows, refresh their gains in one fused
+  pass (scatter back into ``stale``), and stop as soon as the next tile's
+  head bound -- the max stale in the remaining order -- cannot beat the
+  running best.  Rescanning while ``head >= best`` (not >) plus the
+  lowest-global-index preference on score ties reproduces ``jnp.argmax``
+  tie-breaking bit-for-bit.
+
+  Note the tiles are bound-sorted *membership* groups, not fixed memory
+  tiles: a fixed tiling of a shuffled corpus would put a near-best item in
+  every tile and never prune.
+  """
+  del use_select  # tile rescans need the full (tile,) gains to refresh stale
+  n, d = cand_feats.shape
+  fdtype = jnp.float32
+  if tile is None:
+    tile = autotune.lazy_tile(n, d)
+  tile = max(min(tile, autotune.floor_pow2(n, cap=tile)), 1)
+  npad = -(-n // tile) * tile
+  nt = npad // tile
+
+  cand_pad = _pad_to(cand_feats, npad, 0.0)
+  mask_pad = _pad_to(cand_mask, npad, False)
+  meta_pad = {k: _pad_to(v, npad, 0) for k, v in meta.items()}
+  int_max = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+  def apply_choice(c, t, chosen_gain, bidx, feasible, stale):
+    chosen = jnp.clip(bidx, 0, npad - 1)
+    any_feasible = jnp.any(feasible)
+    if stop_nonpositive:
+      take = any_feasible & (chosen_gain > 0.0)
+    else:
+      take = any_feasible
+    feat = cand_pad[chosen]
+    new_state = objective.update(c["state"], feat)
+    state = jax.tree.map(lambda a, b: jnp.where(take, a, b), new_state,
+                         c["state"])
+    new_cstate = constraint.update(c["cstate"],
+                                   C.slice_meta(meta_pad, chosen))
+    cstate = jax.tree.map(lambda a, b: jnp.where(take, a, b), new_cstate,
+                          c["cstate"])
+    return dict(
+        state=state,
+        selected=c["selected"].at[chosen].set(
+            jnp.where(take, True, c["selected"][chosen])),
+        cstate=cstate,
+        idx=c["idx"].at[t].set(jnp.where(take, chosen, -1)),
+        feats=c["feats"].at[t].set(jnp.where(take, feat, 0.0)),
+        gains=c["gains"].at[t].set(jnp.where(take, chosen_gain, 0.0)),
+        stale=stale,
+    )
+
+  carry0 = dict(
+      state=state0,
+      selected=jnp.zeros((npad,), bool),
+      cstate=constraint.init(),
+      idx=jnp.full((k_steps,), -1, jnp.int32),
+      feats=jnp.zeros((k_steps, d), cand_feats.dtype),
+      gains=jnp.zeros((k_steps,), fdtype),
+      stale=jnp.zeros((npad,), fdtype),
+  )
+  if k_steps == 0:
+    return GreedyResult(carry0["idx"], carry0["feats"], carry0["gains"],
+                        state0, jnp.zeros((0,), fdtype))
+
+  # ---- step 0: one full vectorized pass selects AND seeds the bounds ------
+  feasible0 = mask_pad & constraint.mask(carry0["cstate"], meta_pad)
+  g0 = objective.gains(state0, cand_pad).astype(fdtype)
+  best0, bidx0 = masked_top1(g0, feasible0)
+  c = apply_choice(carry0, 0, best0, bidx0, feasible0, g0)
+
+  # ---- steps 1..k: rescan bound-sorted tiles until the head bound loses ---
+  def body(t, c):
+    feasible = (~c["selected"]) & mask_pad & constraint.mask(c["cstate"],
+                                                             meta_pad)
+    pri = jnp.where(feasible, c["stale"], NEG)
+    order = jnp.argsort(-pri)   # stable: bound ties keep candidate order
+    sorted_pri = pri[order]     # tile p's head bound = sorted_pri[p * tile]
+
+    def cond(s):
+      p, best, _, _ = s
+      head = sorted_pri[jnp.minimum(p * tile, npad - 1)]
+      return (p < nt) & (head >= best)
+
+    def rescan_tile(s):
+      p, best, bidx, stale = s
+      ids = jax.lax.dynamic_slice(order, (p * tile,), (tile,))
+      g = objective.gains(c["state"], cand_pad[ids]).astype(fdtype)
+      stale = stale.at[ids].set(g)
+      gm = jnp.where(feasible[ids], g, NEG)
+      tb = jnp.max(gm)
+      gi = jnp.min(jnp.where(gm == tb, ids, int_max))  # lowest global index
+      better = (tb > best) | ((tb == best) & (gi < bidx))
+      best = jnp.where(better, tb, best)
+      bidx = jnp.where(better, gi, bidx)
+      return (p + 1, best, bidx, stale)
+
+    init = (jnp.int32(0), jnp.float32(-jnp.inf), int_max, c["stale"])
+    _, best, bidx, stale = jax.lax.while_loop(cond, rescan_tile, init)
+    return apply_choice(c, t, best, bidx, feasible, stale)
+
+  c = _ufori(1, k_steps, body, c)
+  values = objective.value(state0).astype(fdtype) + jnp.cumsum(c["gains"])
+  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values)
 
 
 def best_of_knapsack(objective, state0, cand_feats, k_steps, *, meta,

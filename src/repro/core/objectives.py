@@ -41,6 +41,11 @@ from repro.kernels import dispatch
 
 Array = jax.Array
 
+# The masked-gain floor and the lowest-index masked argmax are defined ONCE,
+# in kernels/ref.py (they are the ground-truth semantics every fused select
+# kernel must replicate); re-exported here as the core layer's select path.
+from repro.kernels.ref import NEG, masked_top1  # noqa: E402,F401
+
 
 def _kernel_h(kernel_kwargs: tuple) -> float:
   """Bandwidth for the fused oracles (ignored by the linear kernel)."""
@@ -102,8 +107,12 @@ class FacilityLocation:
 
   ``backend`` selects the gain oracle through kernels/dispatch.py: the fused
   Pallas kernel (kernels/facility_gain.py) streams eval/candidate tiles
-  through VMEM instead of materializing sim(eval, cand) in HBM.
+  through VMEM instead of materializing sim(eval, cand) in HBM.  ``select``
+  routes the whole greedy select step through the fused top-1 oracle
+  (kernels/select_top1.py): the gains vector never leaves the kernel.
   """
+  monotone = True  # marginal gains are >= 0 and diminishing (lazy-exact)
+
   kernel: str = "linear"
   kernel_kwargs: tuple = ()
   baseline: float = 0.0
@@ -128,6 +137,18 @@ class FacilityLocation:
     sim = self._sim(state.eval_feats, cand_feats)          # (ne, nc)
     inc = jnp.maximum(sim - state.cov[:, None], 0.0)
     return (state.eval_mask @ inc) / denom
+
+  def select(self, state: FLState, cand_feats: Array,
+             feasible: Array) -> tuple[Array, Array]:
+    """Fused select step: (best normalized gain, int32 candidate index)."""
+    if self.kernel in dispatch.FUSED_SIMS:
+      denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+      fn = dispatch.resolve_select("facility_gain", self.backend)
+      best, idx = fn(state.eval_feats, cand_feats, state.cov, state.eval_mask,
+                     feasible, kernel=self.kernel,
+                     h=_kernel_h(self.kernel_kwargs))
+      return best / denom, idx
+    return masked_top1(self.gains(state, cand_feats), feasible)
 
   def update(self, state: FLState, feat: Array) -> FLState:
     sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
@@ -172,7 +193,14 @@ class FacilityLocationPre:
   (n_e x n_c x d) contraction -- a k-fold FLOP reduction for the whole run.
   Memory trade: O(n_e * n_c) resident, so this is the small-n benchmark path
   (and the TPU path keeps the streaming Pallas kernel instead).
+
+  ``supports_lazy = False``: gains() answers for the *cached* candidate set
+  regardless of the slice it is handed, so the tile-sliced rescoring of
+  ``greedy(mode="lazy")`` cannot apply; greedy falls back to standard.
   """
+  monotone = True
+  supports_lazy = False
+
   kernel: str = "linear"
   kernel_kwargs: tuple = ()
   baseline: float = 0.0
@@ -197,6 +225,10 @@ class FacilityLocationPre:
     denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
     inc = jnp.maximum(state.sim - state.cov[:, None], 0.0)
     return (state.eval_mask @ inc) / denom
+
+  def select(self, state: FLPreState, cand_feats: Array,
+             feasible: Array) -> tuple[Array, Array]:
+    return masked_top1(self.gains(state, cand_feats), feasible)
 
   def update(self, state: FLPreState, feat: Array) -> FLPreState:
     sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
@@ -246,8 +278,12 @@ class InformationGain:
   ``backend`` routes the candidate sweep through the fused info-gain
   cross-term kernel (kernels/info_gain.py): the (k_max, nc) cross-kernel
   matrix and its back-substitution stay in VMEM; only (nc,) conditional
-  variances are written out.
+  variances are written out -- and through the fused select oracle, only the
+  winning (cond, index) pair is (the log being strictly increasing, the
+  cond-space argmax IS the gain argmax).
   """
+  monotone = True  # 0.5 log(cond/s2) >= 0 for s2-noised GPs, diminishing
+
   k_max: int
   kernel: str = "rbf"
   kernel_kwargs: tuple = (("h", 0.75),)
@@ -287,6 +323,17 @@ class InformationGain:
       cond = jnp.maximum(k_vv + s2 - jnp.sum(c * c, axis=0), 1e-12)
     return 0.5 * jnp.log(cond / s2)
 
+  def select(self, state: IGState, cand_feats: Array,
+             feasible: Array) -> tuple[Array, Array]:
+    s2 = self.sigma ** 2
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve_select("info_gain_cond", self.backend)
+      cond, idx = fn(state.sel_feats, _masked_linv(state.chol, state.count),
+                     cand_feats, feasible, kernel=self.kernel,
+                     h=_kernel_h(self.kernel_kwargs), ridge=s2)
+      return 0.5 * jnp.log(jnp.maximum(cond, 1e-12) / s2), idx
+    return masked_top1(self.gains(state, cand_feats), feasible)
+
   def update(self, state: IGState, feat: Array) -> IGState:
     s2 = self.sigma ** 2
     c = self._cross(state, feat[None, :])[:, 0]            # (k_max,)
@@ -318,6 +365,8 @@ class LogDetDPP:
   Non-monotone once marginal conditional variances drop below 1.  Shares the
   fused info-gain cross-term oracle with InformationGain (ridge = jitter).
   """
+  monotone = False  # gains go negative: greedy(mode="lazy") falls back
+
   k_max: int
   kernel: str = "rbf"
   kernel_kwargs: tuple = (("h", 0.75),)
@@ -353,6 +402,15 @@ class LogDetDPP:
       k_vv = jax.vmap(lambda x: self._k(x[None], x[None])[0, 0])(cand_feats)
       cond = jnp.maximum(k_vv + self.jitter - jnp.sum(c * c, axis=0), 1e-12)
     return jnp.log(cond)
+
+  def select(self, state, cand_feats, feasible):
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve_select("info_gain_cond", self.backend)
+      cond, idx = fn(state.sel_feats, _masked_linv(state.chol, state.count),
+                     cand_feats, feasible, kernel=self.kernel,
+                     h=_kernel_h(self.kernel_kwargs), ridge=self.jitter)
+      return jnp.log(jnp.maximum(cond, 1e-12)), idx
+    return masked_top1(self.gains(state, cand_feats), feasible)
 
   def update(self, state, feat):
     c = self._cross(state, feat[None, :])[:, 0]
@@ -392,8 +450,11 @@ class SaturatedCoverage:
   the state (it only depends on V, not on S).
 
   ``backend`` routes the gain sweep through the fused saturated-coverage
-  kernel (kernels/coverage_gain.py).
+  kernel (kernels/coverage_gain.py) and the select step through its fused
+  top-1 variant (kernels/select_top1.py).
   """
+  monotone = True
+
   kernel: str = "linear"
   kernel_kwargs: tuple = ()
   alpha: float = 0.25
@@ -426,6 +487,17 @@ class SaturatedCoverage:
     new = jnp.minimum(state.cover[:, None] + sim, state.cap[:, None])
     inc = new - jnp.minimum(state.cover, state.cap)[:, None]
     return (state.eval_mask @ inc) / denom
+
+  def select(self, state: SatCovState, cand_feats: Array,
+             feasible: Array) -> tuple[Array, Array]:
+    if self.kernel in dispatch.FUSED_SIMS:
+      denom = jnp.maximum(jnp.sum(state.eval_mask), 1.0)
+      fn = dispatch.resolve_select("coverage_gain", self.backend)
+      best, idx = fn(state.eval_feats, cand_feats, state.cover, state.cap,
+                     state.eval_mask, feasible, kernel=self.kernel,
+                     h=_kernel_h(self.kernel_kwargs))
+      return best / denom, idx
+    return masked_top1(self.gains(state, cand_feats), feasible)
 
   def update(self, state: SatCovState, feat: Array) -> SatCovState:
     sim = self._sim(state.eval_feats, feat[None, :])[:, 0]
@@ -464,8 +536,20 @@ class GraphCut:
 
   ``backend`` routes the per-node gain sweep deg - 2 Wx == W (1 - 2x) through
   the fused single-pass kernel (kernels/graph_cut_gain.py).
+
+  ``assume_node_order=True`` additionally routes the select step through the
+  fused node-space top-1 kernel (kernels/select_top1.py), mapping the winning
+  node back to its (lowest) feasible candidate row.  It is opt-in because
+  node-space tie-breaking only matches the candidate-space argmax when
+  candidates are laid out in node order (the ``jnp.eye(n)`` convention): for
+  permuted one-hot layouts and exactly-tied cut gains (realistic with
+  integer/binary weights) the two orders pick different rows.  The default
+  select path reduces in candidate space and is exact for any layout.
   """
+  monotone = False  # cut gains go negative: greedy(mode="lazy") falls back
+
   backend: str = "auto"
+  assume_node_order: bool = False
 
   def init_w(self, w: Array) -> CutState:
     n = w.shape[0]
@@ -478,6 +562,18 @@ class GraphCut:
     fn = dispatch.resolve("graph_cut_gain", self.backend)
     node_gain = fn(state.w, state.in_s)
     return cand_feats @ node_gain
+
+  def select(self, state: CutState, cand_feats: Array,
+             feasible: Array) -> tuple[Array, Array]:
+    if self.assume_node_order:
+      fn = dispatch.resolve_select("graph_cut_gain", self.backend)
+      # project candidate feasibility onto the universe (one-hot rows)
+      node_ok = (feasible.astype(jnp.float32) @ cand_feats) > 0
+      best, node = fn(state.w, state.in_s, node_ok)
+      # winning node -> its first feasible candidate row
+      hit = feasible & (cand_feats[:, node] > 0)
+      return best, jnp.argmax(hit).astype(jnp.int32)
+    return masked_top1(self.gains(state, cand_feats), feasible)
 
   def update(self, state: CutState, feat: Array) -> CutState:
     gain = self.gains(state, feat[None, :])[0]
@@ -501,12 +597,17 @@ class ModState(NamedTuple):
 @dataclasses.dataclass(frozen=True)
 class Modular:
   """f(S) = sum_{v in S} relu(w . x_v): modular => distributed == centralized."""
+  monotone = True
 
   def init_w(self, weights: Array) -> ModState:
     return ModState(weights, jnp.zeros((), weights.dtype))
 
   def gains(self, state: ModState, cand_feats: Array) -> Array:
     return jnp.maximum(cand_feats @ state.weights, 0.0)
+
+  def select(self, state: ModState, cand_feats: Array,
+             feasible: Array) -> tuple[Array, Array]:
+    return masked_top1(self.gains(state, cand_feats), feasible)
 
   def update(self, state: ModState, feat: Array) -> ModState:
     return ModState(state.weights,

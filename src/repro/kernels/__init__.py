@@ -3,9 +3,11 @@
 Layout per kernel: <name>.py (pl.pallas_call + BlockSpec), validated against
 the pure-jnp oracles in ref.py via ops.py's padded/jit'd wrappers.  The
 objective-facing entry point is dispatch.py: each gain oracle is registered
-there with a fused Pallas and a reference backend, and objectives resolve
-their ``backend`` field ("pallas" | "ref" | "auto") through the registry.
+there with a fused Pallas and a reference backend (plus a fused *select*
+top-1 variant from select_top1.py), and objectives resolve their ``backend``
+field ("pallas" | "ref" | "auto") through the registry.  Tile sizes come
+from the (n, d, backend) autotable in autotune.py.
 """
-from repro.kernels import dispatch, ops, ref
+from repro.kernels import autotune, dispatch, ops, ref
 
-__all__ = ["dispatch", "ops", "ref"]
+__all__ = ["autotune", "dispatch", "ops", "ref"]

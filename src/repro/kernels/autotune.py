@@ -1,0 +1,93 @@
+"""Block-size autotable for the fused kernels, keyed on (n, d, backend).
+
+Not a runtime autotuner: entries are a small, deterministic lookup table
+(measured offline, see docs/perf.md "Tuning knobs") that replaces the
+hardcoded 256x256 tiles the wrappers in ops.py used to bake in.  The table is
+consulted at *trace time* -- all inputs are static shapes plus the cached
+process backend -- so block choices never cause retraces and never read
+``jax.default_backend()`` from inside jitted code (see kernels/dispatch.py
+for the same contract on backend resolution).
+
+Three knobs live here:
+
+  * ``pick_block(n, d)``   -- tile size along an n-length kernel axis.  On
+    TPU larger candidate tiles amortize grid overhead while a (block, block)
+    f32 similarity tile stays well under VMEM (512^2 * 4 B = 1 MiB); on CPU
+    the kernels only run in interpret mode (parity, not speed), so the table
+    keeps the 256 tiles the parity suite has always exercised.
+  * ``lazy_tile(n, d)``    -- rescoring granularity of the tile-bound lazy
+    greedy in core/greedy.py.  Bigger tiles mean fewer bound entries and
+    better matmul shapes but coarser pruning; the XLA path prefers bigger
+    tiles than the TPU path (whose tiles must double-buffer through VMEM).
+  * ``floor_pow2(n, cap)`` -- the legacy fallback: largest power-of-two
+    <= cap that still divides into n without absurd padding (shared with
+    ops.py's explicit-override clamping).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+
+@functools.lru_cache(maxsize=None)
+def default_backend() -> str:
+  """Process-wide backend, read once (trace-time contract; see module doc)."""
+  return jax.default_backend()
+
+
+def floor_pow2(n: int, cap: int = 256, floor: int = 8) -> int:
+  """Largest power-of-two block <= cap that keeps padding overhead sane."""
+  b = cap
+  while b > floor and n < b:
+    b //= 2
+  return b
+
+
+def _bucket_n(n: int) -> str:
+  return "small" if n < 2048 else ("mid" if n < 32768 else "large")
+
+
+def _bucket_d(d: int) -> str:
+  return "narrow" if d <= 64 else "wide"
+
+
+# (backend, n-bucket, d-bucket) -> kernel block size along the n axis.
+_BLOCK_TABLE: dict[tuple[str, str, str], int] = {
+    ("tpu", "small", "narrow"): 256,
+    ("tpu", "small", "wide"): 256,
+    ("tpu", "mid", "narrow"): 512,
+    ("tpu", "mid", "wide"): 256,
+    ("tpu", "large", "narrow"): 512,
+    ("tpu", "large", "wide"): 512,
+    # cpu/gpu: interpret-mode parity only -- keep the historical 256 tiles
+}
+_DEFAULT_BLOCK = 256
+
+
+def pick_block(n: int, d: int, backend: str | None = None) -> int:
+  """Tile size along an n-length axis for (n, d) operands on ``backend``."""
+  if n < 256:
+    return floor_pow2(n)
+  backend = backend or default_backend()
+  return _BLOCK_TABLE.get((backend, _bucket_n(n), _bucket_d(d)),
+                          _DEFAULT_BLOCK)
+
+
+# (backend, d-bucket) -> lazy-greedy rescore tile (core/greedy.py mode="lazy").
+# The tile is the batch of bound-sorted candidates refreshed per rescan:
+# bigger tiles amortize the gather + oracle launch, smaller tiles waste less
+# rescoring past the stopping bound.
+_LAZY_TILE: dict[tuple[str, str], int] = {
+    ("tpu", "narrow"): 512,
+    ("tpu", "wide"): 256,
+    ("cpu", "narrow"): 512,
+    ("cpu", "wide"): 256,
+}
+
+
+def lazy_tile(n: int, d: int, backend: str | None = None) -> int:
+  """Rescore-tile size for the tile-bound lazy greedy over n candidates."""
+  backend = backend or default_backend()
+  key = (backend if backend == "tpu" else "cpu", _bucket_d(d))
+  return floor_pow2(n, cap=_LAZY_TILE.get(key, 512))

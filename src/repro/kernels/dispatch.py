@@ -14,21 +14,42 @@ ad-hoc boolean flags; ``resolve`` maps it to a callable.  "auto" picks the
 fused kernel on TPU and the XLA oracle elsewhere (interpret mode is for
 correctness, not speed).  The similarity kernels the fused oracles understand
 are listed in ``FUSED_SIMS``; objectives fall back to their generic jnp path
-for anything else (e.g. ``neg_sq_dist``).  Besides the per-objective gain
-oracles, the registry carries ``pairwise`` (materialized similarity blocks)
-for paths that legitimately cache the matrix, e.g. the sharded GreeDi fast
-engine in core/greedi.py.
+for anything else (e.g. ``neg_sq_dist``).
+
+Backend-resolution contract: ``resolve``/``resolve_select`` are called at
+*trace time* (inside ``objective.gains``/``.select`` while jit is tracing),
+and "auto" is resolved against ``jax.default_backend()`` exactly ONCE per
+process via the cached ``auto_backend()`` below -- never per call from inside
+jitted code.  The process backend is fixed before the first trace anyway
+(changing it later would not retrace already-compiled functions), so callers
+must not expect a mid-process platform switch to re-route oracles; pass an
+explicit ``backend="pallas"|"ref"`` to pin a path.
+
+Besides the per-objective *gain* oracles (full (nc,) gains vector), the
+registry carries two more families:
+
+  * ``pairwise`` -- materialized similarity blocks, for paths that
+    legitimately cache the matrix (the sharded GreeDi fast engine);
+  * ``select`` oracles (``register_select``/``resolve_select``) -- the fused
+    in-kernel top-1 reductions of select_top1.py returning (best_gain,
+    best_idx) directly, so the greedy select step is one kernel pass with no
+    (nc,) gains round-trip through HBM.  Registered under the same stable
+    names as their gain counterparts.
 
 Adding a fused oracle for a new objective (see docs/kernels.md):
 
-  1. write the Pallas kernel in kernels/<name>.py and its oracle in ref.py;
-  2. add a padded/jit'd wrapper pair in ops.py;
-  3. ``register("<name>", pallas=..., ref=...)`` next to the wrapper;
-  4. route the objective's ``gains()`` through ``resolve("<name>", backend)``
-     and add a parity sweep to tests/test_kernels.py.
+  1. write the Pallas kernel in kernels/<name>.py (and its select variant in
+     select_top1.py) and the oracles in ref.py;
+  2. add padded/jit'd wrapper pairs in ops.py;
+  3. ``register("<name>", pallas=..., ref=...)`` and
+     ``register_select("<name>", pallas=..., ref=...)`` next to the wrappers;
+  4. route the objective's ``gains()``/``select()`` through
+     ``resolve``/``resolve_select`` and add parity sweeps to
+     tests/test_kernels.py and tests/test_select_lazy.py.
 """
 from __future__ import annotations
 
+import functools
 from typing import Callable, NamedTuple
 
 import jax
@@ -46,11 +67,17 @@ class Oracle(NamedTuple):
 
 
 _REGISTRY: dict[str, Oracle] = {}
+_SELECT: dict[str, Oracle] = {}
 
 
 def register(name: str, *, pallas: Callable, ref: Callable) -> None:
-  """Register (or replace) an oracle's backend implementations."""
+  """Register (or replace) a gain oracle's backend implementations."""
   _REGISTRY[name] = Oracle(name, pallas, ref)
+
+
+def register_select(name: str, *, pallas: Callable, ref: Callable) -> None:
+  """Register (or replace) a fused top-1 select oracle."""
+  _SELECT[name] = Oracle(name, pallas, ref)
 
 
 def _ensure_registered() -> None:
@@ -65,6 +92,11 @@ def names() -> tuple[str, ...]:
   return tuple(sorted(_REGISTRY))
 
 
+def select_names() -> tuple[str, ...]:
+  _ensure_registered()
+  return tuple(sorted(_SELECT))
+
+
 def get(name: str) -> Oracle:
   _ensure_registered()
   if name not in _REGISTRY:
@@ -72,11 +104,32 @@ def get(name: str) -> Oracle:
   return _REGISTRY[name]
 
 
-def resolve(name: str, backend: str = "auto") -> Callable:
-  """Map (oracle name, backend) to the implementation to call."""
+def get_select(name: str) -> Oracle:
+  _ensure_registered()
+  if name not in _SELECT:
+    raise KeyError(f"no select oracle {name!r}; registered: {sorted(_SELECT)}")
+  return _SELECT[name]
+
+
+@functools.lru_cache(maxsize=None)
+def auto_backend() -> str:
+  """What "auto" resolves to, decided once per process (see module doc)."""
+  return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def _pick(oracle: Oracle, backend: str) -> Callable:
   if backend not in BACKENDS:
     raise ValueError(f"backend {backend!r} not in {BACKENDS}")
-  oracle = get(name)
   if backend == "auto":
-    backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    backend = auto_backend()
   return oracle.pallas if backend == "pallas" else oracle.ref
+
+
+def resolve(name: str, backend: str = "auto") -> Callable:
+  """Map (gain-oracle name, backend) to the implementation to call."""
+  return _pick(get(name), backend)
+
+
+def resolve_select(name: str, backend: str = "auto") -> Callable:
+  """Map (select-oracle name, backend) to the implementation to call."""
+  return _pick(get_select(name), backend)

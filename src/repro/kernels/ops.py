@@ -5,6 +5,10 @@ on the CPU container the kernels execute in interpret mode (the kernel body
 runs as traced jnp ops -- bit-accurate vs the TPU lowering semantics), on TPU
 they compile to Mosaic.  ``force_xla=True`` routes to the pure-jnp reference
 (used to A/B the kernels and by tiny shapes where tiling is overhead).
+
+Block sizes default to ``None`` = "consult the autotable" (kernels/autotune.py,
+keyed on (n, d, backend)); an explicit block argument still wins, clamped to
+a power of two that fits the operand.  Both are static, trace-time choices.
 """
 from __future__ import annotations
 
@@ -13,18 +17,24 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import dispatch, ref
+from repro.kernels import autotune, dispatch, ref
 from repro.kernels.coverage_gain import coverage_gain_pallas
 from repro.kernels.facility_gain import facility_gain_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.graph_cut_gain import graph_cut_gain_pallas
 from repro.kernels.info_gain import info_gain_cond_pallas
 from repro.kernels.pairwise import pairwise_pallas
+from repro.kernels.select_top1 import (coverage_select_pallas,
+                                       facility_select_pallas,
+                                       graph_cut_select_pallas,
+                                       info_select_pallas)
 
 Array = jax.Array
 
 
+@functools.lru_cache(maxsize=None)
 def _interpret() -> bool:
+  # cached: read the process backend once, at trace time (dispatch.py doc)
   return jax.default_backend() != "tpu"
 
 
@@ -37,18 +47,30 @@ def _pad_rows(x: Array, mult: int, value=0.0) -> Array:
                  constant_values=value)
 
 
+def _block(n: int, d: int, explicit: int | None) -> int:
+  """Resolve a tile size: explicit override (rounded down to a power of two,
+  then clamped to fit n) or the autotable.  The clamp caps at the override
+  itself, so any explicit power-of-two block (512, 1024, ...) is honored
+  whenever the operand is big enough."""
+  if explicit is not None:
+    cap = 1 << max(int(explicit).bit_length() - 1, 3)  # pow2 <= explicit
+    return autotune.floor_pow2(n, cap=cap)
+  return autotune.pick_block(n, d)
+
+
 @functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
                                              "block_n", "force_xla"))
 def facility_gain(eval_feats: Array, cand_feats: Array, cov: Array,
                   eval_mask: Array, *, kernel: str = "linear", h: float = 0.75,
-                  block_m: int = 256, block_n: int = 256,
+                  block_m: int | None = None, block_n: int | None = None,
                   force_xla: bool = False) -> Array:
   """Unnormalized facility-location gains (nc,) -- see facility_gain.py."""
   if force_xla:
     return ref.facility_gain_ref(eval_feats, cand_feats, cov, eval_mask,
                                  kernel=kernel, h=h)
-  ne, nc = eval_feats.shape[0], cand_feats.shape[0]
-  bm, bn = min(block_m, _ceil_mult(ne)), min(block_n, _ceil_mult(nc))
+  ne, d = eval_feats.shape
+  nc = cand_feats.shape[0]
+  bm, bn = _block(ne, d, block_m), _block(nc, d, block_n)
   ev = _pad_rows(eval_feats, bm)
   cd = _pad_rows(cand_feats, bn)
   cv = _pad_rows(cov, bm, value=jnp.inf)   # inf cover => padded rows gain 0
@@ -58,17 +80,42 @@ def facility_gain(eval_feats: Array, cand_feats: Array, cov: Array,
   return out[:nc]
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
+                                             "block_n", "force_xla"))
+def facility_select(eval_feats: Array, cand_feats: Array, cov: Array,
+                    eval_mask: Array, cand_ok: Array, *,
+                    kernel: str = "linear", h: float = 0.75,
+                    block_m: int | None = None, block_n: int | None = None,
+                    force_xla: bool = False):
+  """Fused top-1 facility gain -> ((), f32 best, (), int32 idx)."""
+  if force_xla:
+    return ref.facility_select_ref(eval_feats, cand_feats, cov, eval_mask,
+                                   cand_ok, kernel=kernel, h=h)
+  ne, d = eval_feats.shape
+  nc = cand_feats.shape[0]
+  bm, bn = _block(ne, d, block_m), _block(nc, d, block_n)
+  ev = _pad_rows(eval_feats, bm)
+  cd = _pad_rows(cand_feats, bn)
+  cv = _pad_rows(cov, bm, value=jnp.inf)
+  mk = _pad_rows(eval_mask, bm, value=0.0)
+  ok = _pad_rows(cand_ok.astype(jnp.float32), bn, value=0.0)
+  return facility_select_pallas(ev, cd, cv, mk, ok, kernel=kernel, h=h,
+                                block_m=bm, block_n=bn,
+                                interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("kernel", "h", "ridge",
                                              "block_n", "force_xla"))
 def info_gain_cond(sel_feats: Array, linv: Array, cand_feats: Array, *,
                    kernel: str = "rbf", h: float = 0.75, ridge: float = 1.0,
-                   block_n: int = 256, force_xla: bool = False) -> Array:
+                   block_n: int | None = None, force_xla: bool = False) -> Array:
   """Posterior conditional variances (nc,) -- see info_gain.py."""
   if force_xla:
     return ref.info_gain_cond_ref(sel_feats, linv, cand_feats, kernel=kernel,
                                   h=h, ridge=ridge)
-  k, nc = sel_feats.shape[0], cand_feats.shape[0]
-  bn = min(block_n, _ceil_mult(nc))
+  k, d = sel_feats.shape
+  nc = cand_feats.shape[0]
+  bn = _block(nc, d, block_n)
   kpad = (-k) % 8  # sublane-align the resident selection block
   sl = _pad_rows(sel_feats, 8)
   lv = jnp.pad(linv, ((0, kpad), (0, kpad))) if kpad else linv
@@ -78,18 +125,42 @@ def info_gain_cond(sel_feats: Array, linv: Array, cand_feats: Array, *,
   return out[:nc]
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "ridge",
+                                             "block_n", "force_xla"))
+def info_select(sel_feats: Array, linv: Array, cand_feats: Array,
+                cand_ok: Array, *, kernel: str = "rbf", h: float = 0.75,
+                ridge: float = 1.0, block_n: int | None = None,
+                force_xla: bool = False):
+  """Fused top-1 conditional variance -> ((), f32 best cond, (), int32 idx)."""
+  if force_xla:
+    return ref.info_select_ref(sel_feats, linv, cand_feats, cand_ok,
+                               kernel=kernel, h=h, ridge=ridge)
+  k, d = sel_feats.shape
+  nc = cand_feats.shape[0]
+  bn = _block(nc, d, block_n)
+  kpad = (-k) % 8
+  sl = _pad_rows(sel_feats, 8)
+  lv = jnp.pad(linv, ((0, kpad), (0, kpad))) if kpad else linv
+  cd = _pad_rows(cand_feats, bn)
+  ok = _pad_rows(cand_ok.astype(jnp.float32), bn, value=0.0)
+  return info_select_pallas(sl, lv, cd, ok, kernel=kernel, h=h, ridge=ridge,
+                            block_n=bn, interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
                                              "block_n", "force_xla"))
 def coverage_gain(eval_feats: Array, cand_feats: Array, cover: Array,
                   cap: Array, eval_mask: Array, *, kernel: str = "linear",
-                  h: float = 0.75, block_m: int = 256, block_n: int = 256,
+                  h: float = 0.75, block_m: int | None = None,
+                  block_n: int | None = None,
                   force_xla: bool = False) -> Array:
   """Unnormalized saturated-coverage gains (nc,) -- see coverage_gain.py."""
   if force_xla:
     return ref.coverage_gain_ref(eval_feats, cand_feats, cover, cap,
                                  eval_mask, kernel=kernel, h=h)
-  ne, nc = eval_feats.shape[0], cand_feats.shape[0]
-  bm, bn = min(block_m, _ceil_mult(ne)), min(block_n, _ceil_mult(nc))
+  ne, d = eval_feats.shape
+  nc = cand_feats.shape[0]
+  bm, bn = _block(ne, d, block_m), _block(nc, d, block_n)
   ev = _pad_rows(eval_feats, bm)
   cd = _pad_rows(cand_feats, bn)
   cv = _pad_rows(cover, bm)
@@ -100,15 +171,41 @@ def coverage_gain(eval_feats: Array, cand_feats: Array, cover: Array,
   return out[:nc]
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
+                                             "block_n", "force_xla"))
+def coverage_select(eval_feats: Array, cand_feats: Array, cover: Array,
+                    cap: Array, eval_mask: Array, cand_ok: Array, *,
+                    kernel: str = "linear", h: float = 0.75,
+                    block_m: int | None = None, block_n: int | None = None,
+                    force_xla: bool = False):
+  """Fused top-1 saturated-coverage gain -> ((), f32 best, (), int32 idx)."""
+  if force_xla:
+    return ref.coverage_select_ref(eval_feats, cand_feats, cover, cap,
+                                   eval_mask, cand_ok, kernel=kernel, h=h)
+  ne, d = eval_feats.shape
+  nc = cand_feats.shape[0]
+  bm, bn = _block(ne, d, block_m), _block(nc, d, block_n)
+  ev = _pad_rows(eval_feats, bm)
+  cd = _pad_rows(cand_feats, bn)
+  cv = _pad_rows(cover, bm)
+  cp = _pad_rows(cap, bm)
+  mk = _pad_rows(eval_mask, bm, value=0.0)
+  ok = _pad_rows(cand_ok.astype(jnp.float32), bn, value=0.0)
+  return coverage_select_pallas(ev, cd, cv, cp, mk, ok, kernel=kernel, h=h,
+                                block_m=bm, block_n=bn,
+                                interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n",
                                              "force_xla"))
-def graph_cut_gain(w: Array, in_s: Array, *, block_m: int = 256,
-                   block_n: int = 256, force_xla: bool = False) -> Array:
+def graph_cut_gain(w: Array, in_s: Array, *, block_m: int | None = None,
+                   block_n: int | None = None,
+                   force_xla: bool = False) -> Array:
   """Per-node cut gains (n,) -- see graph_cut_gain.py."""
   if force_xla:
     return ref.graph_cut_gain_ref(w, in_s)
   n = w.shape[0]
-  bm, bn = min(block_m, _ceil_mult(n)), min(block_n, _ceil_mult(n))
+  bm, bn = _block(n, n, block_m), _block(n, n, block_n)
   b = max(bm, bn)
   pad = (-n) % b
   wp = jnp.pad(w, ((0, pad), (0, pad))) if pad else w
@@ -118,16 +215,36 @@ def graph_cut_gain(w: Array, in_s: Array, *, block_m: int = 256,
   return out[:n]
 
 
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "force_xla"))
+def graph_cut_select(w: Array, in_s: Array, node_ok: Array, *,
+                     block_m: int | None = None, block_n: int | None = None,
+                     force_xla: bool = False):
+  """Fused top-1 node cut gain -> ((), f32 best, (), int32 node idx)."""
+  if force_xla:
+    return ref.graph_cut_select_ref(w, in_s, node_ok)
+  n = w.shape[0]
+  bm, bn = _block(n, n, block_m), _block(n, n, block_n)
+  b = max(bm, bn)
+  pad = (-n) % b
+  wp = jnp.pad(w, ((0, pad), (0, pad))) if pad else w
+  xp = _pad_rows(in_s, b)
+  ok = _pad_rows(node_ok.astype(jnp.float32), b, value=0.0)
+  return graph_cut_select_pallas(wp, xp, ok, block_m=bm, block_n=bn,
+                                 interpret=_interpret())
+
+
 @functools.partial(jax.jit, static_argnames=("kernel", "h", "block_x",
                                              "block_y", "force_xla"))
 def pairwise(x: Array, y: Array, *, kernel: str = "rbf", h: float = 0.75,
-             block_x: int = 256, block_y: int = 256,
+             block_x: int | None = None, block_y: int | None = None,
              force_xla: bool = False) -> Array:
   """Similarity matrix (nx, ny) float32 -- see pairwise.py."""
   if force_xla:
     return ref.pairwise_ref(x, y, kernel=kernel, h=h)
   nx, ny = x.shape[0], y.shape[0]
-  bx, by = min(block_x, _ceil_mult(nx)), min(block_y, _ceil_mult(ny))
+  d = x.shape[1]
+  bx, by = _block(nx, d, block_x), _block(ny, d, block_y)
   xp = _pad_rows(x, bx)
   yp = _pad_rows(y, by)
   out = pairwise_pallas(xp, yp, kernel=kernel, h=h, block_x=bx, block_y=by,
@@ -144,8 +261,8 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
   if force_xla:
     return ref.mha_ref(q, k, v, causal=causal, scale=scale)
   lq = q.shape[2]
-  bq = min(block_q, _ceil_mult(lq))
-  bk = min(block_k, _ceil_mult(lq))
+  bq = min(block_q, autotune.floor_pow2(lq))
+  bk = min(block_k, autotune.floor_pow2(lq))
   pad = (-lq) % max(bq, bk)
   if pad:
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -159,16 +276,8 @@ def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
   return out[:, :, :lq]
 
 
-def _ceil_mult(n: int) -> int:
-  """Largest power-of-two block <= 256 that keeps padding overhead sane."""
-  for b in (256, 128, 64, 32, 16, 8):
-    if n >= b:
-      return b
-  return 8
-
-
 # ---------------------------------------------------------------------------
-# registry: one gain oracle per objective, fused + reference backends
+# registry: one gain + one select oracle per objective, fused + reference
 # ---------------------------------------------------------------------------
 
 dispatch.register("facility_gain", pallas=facility_gain,
@@ -183,3 +292,16 @@ dispatch.register("graph_cut_gain", pallas=graph_cut_gain,
 # (core/greedi.py greedi_sharded_fast) and the GP cross-term benchmarks
 dispatch.register("pairwise", pallas=pairwise,
                   ref=functools.partial(pairwise, force_xla=True))
+
+# fused select-step oracles (in-kernel top-1; see select_top1.py)
+dispatch.register_select("facility_gain", pallas=facility_select,
+                         ref=functools.partial(facility_select,
+                                               force_xla=True))
+dispatch.register_select("info_gain_cond", pallas=info_select,
+                         ref=functools.partial(info_select, force_xla=True))
+dispatch.register_select("coverage_gain", pallas=coverage_select,
+                         ref=functools.partial(coverage_select,
+                                               force_xla=True))
+dispatch.register_select("graph_cut_gain", pallas=graph_cut_select,
+                         ref=functools.partial(graph_cut_select,
+                                               force_xla=True))

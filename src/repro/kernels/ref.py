@@ -10,6 +10,18 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+NEG = -1e30  # masked-gain floor shared with the select kernels / greedy loops
+
+
+def masked_top1(scores: Array, ok: Array, floor: float = NEG):
+  """Ground truth for every select oracle: lowest-index argmax of the masked
+  scores.  Returns ((), f32 best-masked-score, (), int32 index); with no
+  feasible entry the result is (floor, 0), matching ``jnp.argmax`` on an
+  all-floor vector."""
+  masked = jnp.where(ok, scores.astype(jnp.float32), floor)
+  i = jnp.argmax(masked).astype(jnp.int32)
+  return masked[i], i
+
 
 def _sim(ev: Array, cd: Array, kernel: str, h: float) -> Array:
   if kernel == "linear":
@@ -87,6 +99,43 @@ def graph_cut_gain_ref(w: Array, in_s: Array) -> Array:
   """Per-node cut gains deg_v - 2 (W x)_v == W @ (1 - 2x): (n,) float32."""
   wf = w.astype(jnp.float32)
   return wf @ (1.0 - 2.0 * in_s.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# select oracles: gains + lowest-index argmax in one call (ground truth for
+# the fused in-kernel top-1 reductions in select_top1.py)
+# ---------------------------------------------------------------------------
+
+
+def facility_select_ref(eval_feats: Array, cand_feats: Array, cov: Array,
+                        eval_mask: Array, cand_ok: Array, *,
+                        kernel: str = "linear", h: float = 0.75):
+  gains = facility_gain_ref(eval_feats, cand_feats, cov, eval_mask,
+                            kernel=kernel, h=h)
+  return masked_top1(gains, cand_ok)
+
+
+def coverage_select_ref(eval_feats: Array, cand_feats: Array, cover: Array,
+                        cap: Array, eval_mask: Array, cand_ok: Array, *,
+                        kernel: str = "linear", h: float = 0.75):
+  gains = coverage_gain_ref(eval_feats, cand_feats, cover, cap, eval_mask,
+                            kernel=kernel, h=h)
+  return masked_top1(gains, cand_ok)
+
+
+def info_select_ref(sel_feats: Array, linv: Array, cand_feats: Array,
+                    cand_ok: Array, *, kernel: str = "rbf", h: float = 0.75,
+                    ridge: float = 1.0):
+  """Top-1 over conditional variances (cond >= 1e-12, so the 0.0 floor keeps
+  any feasible candidate ahead of masked ones); the caller maps the winning
+  cond through its log, which is strictly increasing and so order-preserving."""
+  cond = info_gain_cond_ref(sel_feats, linv, cand_feats, kernel=kernel, h=h,
+                            ridge=ridge)
+  return masked_top1(cond, cand_ok, floor=0.0)
+
+
+def graph_cut_select_ref(w: Array, in_s: Array, node_ok: Array):
+  return masked_top1(graph_cut_gain_ref(w, in_s), node_ok)
 
 
 def mha_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
