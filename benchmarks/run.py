@@ -22,7 +22,8 @@ def main() -> None:
 
   from benchmarks import (common, fig4_exemplar, fig6_active_set,
                           fig8_speedup, fig9_maxcut, fig10_coverage,
-                          kernels_bench, roofline, select_step)
+                          kernels_bench, roofline, select_step,
+                          service_epochs)
 
   if args.json:
     common.start_collection()
@@ -36,6 +37,7 @@ def main() -> None:
       "kernels": lambda: kernels_bench.run(quick=args.quick),
       "roofline": lambda: roofline.run(quick=args.quick),
       "select_step": lambda: select_step.run(quick=args.quick),
+      "service_epochs": lambda: service_epochs.run(quick=args.quick),
   }
   names = [args.only] if args.only else list(suites)
   failures = []

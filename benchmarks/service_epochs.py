@@ -1,0 +1,71 @@
+"""Multi-epoch selection-service benchmark: cold vs warm-started epochs
+(the BENCH_4.json trajectory of ISSUE 4).
+
+Two services run the SAME per-epoch protocol (re-randomized partition +
+index-tracked sharded GreeDi, round 1 in tile-bound lazy mode); the only
+difference is the cross-epoch warm start:
+
+  * ``cold`` -- every epoch's round 1 pays the lazy step-0 full gains pass
+    (one O(n_local^2 d) sweep per shard) before tile pruning kicks in;
+  * ``warm`` -- the service carries sum-form singleton-gain bounds across
+    epochs (appended docs are folded in at append time), so step 0 rescans
+    bound-sorted tiles like every later step and the full pass disappears.
+
+Selections are identical (asserted -- warm bounds are *valid* upper
+bounds, so lazy stays exact); only the epoch latency moves.  The corpus is
+``common.near_dup_corpus`` -- the production dedup regime whose
+heterogeneous gains make tile pruning effective (see docs/perf.md).  The
+speedup entries are dimensionless (cold / warm) and machine-portable,
+which is what benchmarks/check_regression.py gates against BENCH_4.json.
+
+The run also asserts the service's compile contract: ZERO re-traces across
+epochs at fixed capacity (the jit cache-miss counter stays at its warm-up
+value of 1), which is what makes a long-lived service cheap to run at all.
+
+Runs on a single-device mesh so it works inside the in-process run.py
+driver; the multi-shard behavior (liveness, straggler re-election, 4-shard
+warm/cold parity and speedup) is covered by tests/test_service.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, near_dup_corpus
+
+D, KAPPA, K_FINAL, EPOCH_REPS = 32, 16, 16, 3
+
+
+def _epoch_time_s(svc) -> float:
+  ts = []
+  for _ in range(EPOCH_REPS):
+    ts.append(svc.epoch().stats.wall_s)
+  return min(ts)
+
+
+def run(quick: bool = False) -> None:
+  from repro.service import SelectionService
+  from repro.util import make_mesh
+
+  mesh = make_mesh((1,), ("data",))
+  ns = (4096,) if quick else (4096, 16384)
+  for n in ns:
+    feats = np.asarray(near_dup_corpus(n, D, seed=0))
+    shapes = {"n": n, "d": D, "kappa": KAPPA, "k_final": K_FINAL}
+    times, sels = {}, {}
+    for warm in (False, True):
+      svc = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
+                             capacity=n, seed=0, warm_start=warm)
+      svc.append(feats)
+      sels[warm] = svc.epoch().sel_gids.tolist()  # compiles + settles
+      times[warm] = _epoch_time_s(svc)
+      # the compile contract: zero re-traces across epochs at fixed capacity
+      assert svc.retrace_count == 1, \
+          f"epoch fn re-traced: {svc.retrace_count} traces at fixed capacity"
+    assert sels[True] == sels[False], \
+        f"warm selection diverged from cold at n={n}"
+    emit(f"service_epochs/cold_n{n}", times[False] * 1e6,
+         derived="us_per_epoch", shapes=shapes)
+    emit(f"service_epochs/warm_n{n}", times[True] * 1e6,
+         derived="us_per_epoch", shapes=shapes)
+    emit(f"service_epochs/speedup_warm_n{n}", times[False] / times[True],
+         derived="x_cold_over_warm", shapes=shapes)

@@ -41,8 +41,17 @@ of the evaluation weight: a dead machine contributes neither candidates nor
 psum mass to round-2 gains, ``value_merged``, or ``stage1_values``, so the
 protocol and Thm 4's proof degrade gracefully to the surviving machines (the
 merged B simply misses some A_i, and f is evaluated over the alive data).
+Straggler *detection* is a protocol output: pass per-machine heartbeat ages
+(``liveness_age``/``liveness_deadline``) and the sharded paths derive the
+mask themselves through a deadline-based liveness collective, returning it
+as ``GreediResult.alive``; the Thm-10 U-subset holder is re-elected among
+the alive shards instead of being pinned to machine 0.
 Elasticity: the number of logical partitions is decoupled from physical
-shards via core/partition.py.
+shards via core/partition.py.  Growing ground sets ride in pad-and-mask
+blocks: rows with ``gids = -1`` are holes -- never candidates, never
+evaluation mass -- so any n (including non-divisible) shards cleanly, and
+a long-lived selection service (src/repro/service/) can append documents
+between epochs without re-tracing.
 """
 from __future__ import annotations
 
@@ -146,6 +155,9 @@ class GreediResult(NamedTuple):
   value_best_single: Array  # f(A_max^gc) (best single-machine solution)
   stage1_values: Array  # (m,) f(A_i) under final evaluation
   sel_gids: Array       # (k_final,) int32 global ground-set ids, -1 = no-op
+  alive: Array          # (m,) bool: machines the protocol actually used
+                        # (straggler_keep AND the liveness collective) --
+                        # a protocol *output*, see docs/service.md
 
 
 def _replicated_result_specs():
@@ -180,9 +192,19 @@ class _Engine(NamedTuple):
 
 
 def _objective_engine(objective, local_feats: Array, cands: Array,
-                      cmask: Array, cgids: Array) -> _Engine:
-  """Engine over a generic objective exposing partial_stats/update/value."""
-  n_local = local_feats.shape[0]
+                      cmask: Array, cgids: Array,
+                      eval_mask: Array | None = None) -> _Engine:
+  """Engine over a generic objective exposing partial_stats/update/value.
+
+  ``eval_mask`` marks the shard's *live* evaluation rows (pad-and-mask holes
+  carry 0): the state binds the masked eval set and the psum-able partial
+  value is weighted by the live count, so hole rows move nothing.
+  """
+  if eval_mask is None:
+    eval_mask = jnp.ones((local_feats.shape[0],), local_feats.dtype)
+  # count in f32: a low-precision feature dtype (bf16 masks) would round
+  # live counts past 256 and skew the psum weights against the f32 denoms
+  n_live = jnp.sum(eval_mask.astype(jnp.float32))
 
   def partial_gains(state):
     return objective.partial_stats(state, cands)[0]
@@ -193,10 +215,10 @@ def _objective_engine(objective, local_feats: Array, cands: Array,
     return jax.tree.map(lambda a, b: jnp.where(take, a, b), new, state)
 
   def partial_value(state):
-    return objective.value(state) * n_local
+    return objective.value(state) * n_live
 
-  return _Engine(objective.init(local_feats), partial_gains, apply_update,
-                 partial_value, cands, cmask, cgids)
+  return _Engine(objective.init(local_feats, eval_mask), partial_gains,
+                 apply_update, partial_value, cands, cmask, cgids)
 
 
 def _dist_greedy_core(engine: _Engine, steps: int, axes, weight: Array,
@@ -329,7 +351,7 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   sel_gids = jnp.where(use_merged, r2_gids, alt_gids)
   value = jnp.maximum(v_merged, v_best_single)
   return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                      stage1_vals, sel_gids)
+                      stage1_vals, sel_gids, jnp.ones((m,), bool))
 
 
 def centralized_greedy(feats: Array, k: int, *, objective, init_for,
@@ -437,6 +459,37 @@ def _prep_gids(gids: Array | None, n: int) -> Array:
   return gids.astype(jnp.int32)
 
 
+def _prep_liveness(liveness_age, liveness_deadline, m: int):
+  """Normalize the liveness inputs to ((m,) f32 ages, () f32 deadline).
+
+  ``liveness_age=None`` means "no detection": ages 0 against an infinite
+  deadline, so every machine passes the collective and ``straggler_keep``
+  alone decides (the pre-detection behavior, bit-for-bit).
+  """
+  if liveness_age is None:
+    age = jnp.zeros((m,), jnp.float32)
+    deadline = jnp.asarray(jnp.inf, jnp.float32)
+  else:
+    age = jnp.asarray(liveness_age, jnp.float32)
+    assert age.shape == (m,), (age.shape, m)
+    deadline = jnp.asarray(
+        jnp.inf if liveness_deadline is None else liveness_deadline,
+        jnp.float32)
+  return age, deadline
+
+
+def _liveness_collective(my_bit: Array, me: Array, m: int, axis_names):
+  """The deadline-based liveness collective: every shard contributes one
+  heartbeat bit (did my last heartbeat land within the deadline?) and the
+  gathered (m,) vector IS the straggler mask -- a protocol output, not an
+  operator-supplied input.  Implemented as a psum of one-hot rows so the
+  result is indexed by the row-major combined shard index regardless of how
+  many mesh axes the protocol spans (an all_gather with explicit placement).
+  """
+  row = jnp.zeros((m,), jnp.float32).at[me].set(my_bit.astype(jnp.float32))
+  return jax.lax.psum(row, axis_names) > 0.0
+
+
 def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    objective, axis_names: tuple[str, ...] = ("data",),
                    straggler_keep: Array | None = None,
@@ -444,11 +497,16 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    rng: Array | None = None,
                    backend: str | None = None,
                    gids: Array | None = None,
-                   mode: str = "standard"):
+                   mode: str = "standard",
+                   warm_bounds: Array | None = None,
+                   liveness_age: Array | None = None,
+                   liveness_deadline: float | None = None):
   """GreeDi over a device mesh; round-2 gains are psum-reduced partial sums.
 
   Args:
-    feats: (n, d) ground set, n divisible by the product of axis sizes.
+    feats: (n, d) ground set, n divisible by the product of axis sizes (any
+      original size can be padded up with hole rows carrying ``gids = -1``,
+      which are masked out of candidates AND evaluation everywhere).
     objective: must expose init/gains/update/value and partial_stats (the
       facility-location family -- the paper's decomposable flagship).
     mode: greedy mode for the *round-1* shard-local selection ("standard"
@@ -461,12 +519,28 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
       weight, so dead machines' data moves neither round-2 gains nor the
       reported values.  The Thm 4 bound then holds with
       m_alive = sum(straggler_keep) over the alive ground set.
-    u_subset_eval: Thm 10 mode -- evaluate round 2 on machine 0's partition
-      (a uniformly random n/m subset) instead of psum over the full set.
+    u_subset_eval: Thm 10 mode -- evaluate round 2 on ONE machine's
+      partition (a uniformly random ~n/m subset) instead of psum over the
+      full set.  The U-holder is the first *alive* shard (re-elected via
+      the liveness/straggler mask), so a dead machine 0 no longer collapses
+      the evaluation weight to zero.
     backend: optional gain-oracle backend override (kernels/dispatch.py);
       applies to round-1 gains and the psum-reduced round-2 partial stats.
     gids: optional (n,) global ids of the rows of ``feats`` (defaults to
       arange); the selection is reported as ``sel_gids`` through these.
+      Negative ids mark *holes* (pad-and-mask rows of a growing ground set,
+      see docs/service.md): never candidates, never evaluation mass.
+    warm_bounds: optional (n,) upper bounds on each row's empty-set gain
+      under its shard's local evaluation, threaded to the round-1 lazy
+      greedy (mode="lazy" only) so step 0 skips its full pass -- the
+      epoch warm start of the selection service (docs/service.md).
+    liveness_age: optional (m,) seconds since each machine's last
+      heartbeat.  When given, the protocol itself derives the straggler
+      mask: each shard contributes the bit ``age <= liveness_deadline`` to
+      a liveness collective and the gathered mask (ANDed with any explicit
+      ``straggler_keep``) is used everywhere and returned as
+      ``GreediResult.alive``.
+    liveness_deadline: deadline in the same units as ``liveness_age``.
 
   Returns a GreediResult (replicated on every shard).
   """
@@ -479,18 +553,30 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
   if rng is None:
     rng = jax.random.PRNGKey(0)
   gids = _prep_gids(gids, n)
+  age, deadline = _prep_liveness(liveness_age, liveness_deadline, m)
+  use_warm = warm_bounds is not None
+  wb = (jnp.zeros((n,), jnp.float32) if warm_bounds is None
+        else jnp.asarray(warm_bounds, jnp.float32))
+  assert wb.shape == (n,), (wb.shape, n)
 
-  in_specs = (P(axis_names), P(axis_names), P(), P())
+  in_specs = (P(axis_names), P(axis_names), P(axis_names), P(), P(), P(), P())
   out_specs = _replicated_result_specs()
 
-  def fn(local_feats, local_gids, keep, key):
+  def fn(local_feats, local_gids, local_wb, keep, key, age, deadline):
     me = _combined_index(axis_names, mesh)
-    n_local = local_feats.shape[0]
+    # ---- liveness: the straggler mask is a protocol output ---------------
+    my_bit = age[me] <= deadline
+    keep = keep & _liveness_collective(my_bit, me, m, axis_names)
     my_keep = keep[me]
+    local_valid = local_gids >= 0                   # pad-and-mask holes
+    evalw = local_valid.astype(local_feats.dtype)
+    n_live = jnp.sum(evalw.astype(jnp.float32))
 
-    # ---- round 1: local greedy on the shard's partition ------------------
-    st0 = objective.init(local_feats)
-    r1 = greedy(objective, st0, local_feats, kappa, rng=key, mode=mode)
+    # ---- round 1: local greedy on the shard's live partition rows --------
+    st0 = objective.init(local_feats, evalw)
+    r1 = greedy(objective, st0, local_feats, kappa, cand_mask=local_valid,
+                rng=key, mode=mode,
+                warm_bounds=local_wb if use_warm else None)
     sel = r1.feats                                   # (kappa, d)
     valid = (r1.idx >= 0) & my_keep
     gsel = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
@@ -503,26 +589,29 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     Bmask = Bvalid.reshape(m * kappa)
     Bgflat = Bgids.reshape(m * kappa)
 
-    # evaluation weight of this shard: full-set eval or U = partition 0,
-    # and zero for dead machines -- their data carries no evaluation mass
-    w = jnp.where(u_subset_eval, (me == 0).astype(jnp.float32), 1.0)
+    # evaluation weight of this shard: full-set eval or the Thm-10 U subset
+    # held by the first ALIVE shard, and zero for dead machines -- their
+    # data carries no evaluation mass
+    u_holder = jnp.argmax(keep)                      # first alive shard
+    w = jnp.where(u_subset_eval, (me == u_holder).astype(jnp.float32), 1.0)
     w = w * my_keep.astype(jnp.float32)
-    denom = _psum(jnp.asarray(n_local, jnp.float32) * w, axis_names)
+    denom = _psum(n_live * w, axis_names)
     denom = jnp.maximum(denom, 1.0)
 
     # ---- A_max: value of each machine's solution under final eval --------
     def value_of(sel_i, valid_i):
-      st = set_value_feats(objective, objective.init(local_feats), sel_i,
-                           valid_i)
-      # local mean * local count -> psum-able sum
-      return objective.value(st) * n_local * w
+      st = set_value_feats(objective, objective.init(local_feats, evalw),
+                           sel_i, valid_i)
+      # local mean * local live count -> psum-able sum
+      return objective.value(st) * n_live * w
     part_vals = jax.vmap(value_of)(B, Bvalid)        # (m,)
     stage1_vals = _psum(part_vals, axis_names) / denom
     stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
     best_i = jnp.argmax(stage1_vals)
 
     # ---- round 2: distributed greedy over B ------------------------------
-    engine = _objective_engine(objective, local_feats, Bflat, Bmask, Bgflat)
+    engine = _objective_engine(objective, local_feats, Bflat, Bmask, Bgflat,
+                               eval_mask=evalw)
     merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
         engine, k_final, axis_names, w, denom, feats.dtype)
 
@@ -537,11 +626,11 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                          _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals, sel_gids)
+                        stage1_vals, sel_gids, keep)
 
   shmapped = _shard_map(fn, mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs)
-  return shmapped(feats, gids, straggler_keep, rng)
+  return shmapped(feats, gids, wb, straggler_keep, rng, age, deadline)
 
 
 def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
@@ -551,7 +640,9 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
                         straggler_keep: Array | None = None,
                         rng: Array | None = None,
                         backend: str | None = None,
-                        gids: Array | None = None):
+                        gids: Array | None = None,
+                        liveness_age: Array | None = None,
+                        liveness_deadline: float | None = None):
   """Perf-optimized sharded GreeDi for the facility-location objective over
   any fused similarity kernel (the production data-selection path).
 
@@ -571,7 +662,10 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
   Equivalent to ``greedi_sharded`` with
   ``FacilityLocation(kernel=kernel, kernel_kwargs=kernel_kwargs)`` (baseline
   0): the marginal-gain math is identical, so the returned solution matches
-  exactly (tests assert this), including under ``straggler_keep``.
+  exactly (tests assert this), including under ``straggler_keep``, hole rows
+  (``gids = -1``: excluded from candidates, evaluation mass, and A_max), and
+  the liveness collective (``liveness_age``/``liveness_deadline``, same
+  contract as ``greedi_sharded``).
   """
   if kernel not in dispatch.FUSED_SIMS:
     raise ValueError(
@@ -588,40 +682,52 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
   if rng is None:
     rng = jax.random.PRNGKey(0)
   gids = _prep_gids(gids, n)
+  age, deadline = _prep_liveness(liveness_age, liveness_deadline, m)
 
   out_specs = _replicated_result_specs()
 
-  def fn(local_feats, local_gids, keep, key):
+  def fn(local_feats, local_gids, keep, key, age, deadline):
     del key  # round 1 is deterministic standard greedy
     me = _combined_index(axis_names, mesh)
     n_local = local_feats.shape[0]
+    my_bit = age[me] <= deadline
+    keep = keep & _liveness_collective(my_bit, me, m, axis_names)
     my_keep = keep[me]
+    local_valid = local_gids >= 0                   # pad-and-mask holes
+    vrow = local_valid.astype(jnp.float32)
+    n_live = jnp.sum(vrow)
     w = my_keep.astype(jnp.float32)
-    denom = _psum(jnp.asarray(n_local, jnp.float32) * w, axis_names)
+    denom = _psum(n_live * w, axis_names)
     denom = jnp.maximum(denom, 1.0)
 
     # ---- round 1: local greedy over the precomputed local sim matrix ----
+    # hole EVAL rows are zeroed out of the similarity block so they carry no
+    # coverage mass (an rbf kernel gives a zero feature row sim > 0)
     s11 = sim(local_feats, local_feats, kernel=kernel, h=h)  # (nl, nl) f32
+    s11 = s11 * vrow[:, None]
 
     def r1_body(t, c):
-      cov, selmask, sel_idx = c
+      cov, selmask, sel_idx, took = c
       gains = jnp.sum(jnp.maximum(s11 - cov[:, None], 0.0), axis=0)
-      _, j = masked_top1(gains, ~selmask)
-      cov = jnp.maximum(cov, s11[:, j])
-      return (cov, selmask.at[j].set(True), sel_idx.at[t].set(j))
+      feasible = (~selmask) & local_valid
+      _, j = masked_top1(gains, feasible)
+      take = jnp.any(feasible)
+      cov = jnp.where(take, jnp.maximum(cov, s11[:, j]), cov)
+      selmask = selmask.at[j].set(jnp.where(take, True, selmask[j]))
+      return (cov, selmask, sel_idx.at[t].set(j), took.at[t].set(take))
 
     cov0 = jnp.zeros((n_local,), jnp.float32)
-    _, _, sel_idx = _ufori(
+    _, _, sel_idx, took = _ufori(
         0, kappa, r1_body,
         (cov0, jnp.zeros((n_local,), bool),
-         jnp.zeros((kappa,), jnp.int32)))
+         jnp.zeros((kappa,), jnp.int32), jnp.zeros((kappa,), bool)))
     sel = local_feats[sel_idx]                                # (kappa, d)
-    # steps past n_local re-pick exhausted rows; invalidate them exactly like
-    # the generic path's greedy (idx = -1 once nothing is feasible), so
-    # kappa > n/m cannot leak duplicate candidates/gids into the merge
-    step_ok = jnp.arange(kappa) < n_local
-    gsel = jnp.where(step_ok, local_gids[sel_idx], -1)
-    valid = my_keep & step_ok
+    # steps past the live local rows find nothing feasible; invalidate them
+    # exactly like the generic path's greedy (idx = -1 once nothing is
+    # feasible), so kappa > live rows cannot leak duplicate candidates/gids
+    # (or hole rows) into the merge
+    gsel = jnp.where(took, local_gids[sel_idx], -1)
+    valid = my_keep & took
 
     # ---- merge + ONE cross-similarity matmul ------------------------------
     B = jax.lax.all_gather(sel, axis_names)                   # (m, kappa, d)
@@ -631,10 +737,13 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     Bmask = Bvalid.reshape(m * kappa)
     Bgflat = Bgids.reshape(m * kappa)
     s2 = sim(local_feats, Bflat, kernel=kernel, h=h)          # (nl, m*kappa)
+    s2 = s2 * vrow[:, None]
 
     # ---- A_max: no replay needed ------------------------------------------
-    per_machine = jnp.max(jnp.maximum(
-        s2.reshape(n_local, m, kappa), 0.0), axis=2)          # (nl, m)
+    # invalid candidate columns (padding past a machine's live rows, or rows
+    # of a dead machine) carry no coverage in f(A_i)
+    s2_pos = jnp.maximum(s2, 0.0) * Bmask.astype(jnp.float32)[None, :]
+    per_machine = jnp.max(s2_pos.reshape(n_local, m, kappa), axis=2)  # (nl,m)
     stage1_vals = _psum(jnp.sum(per_machine, axis=0) * w, axis_names) / denom
     stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
     best_i = jnp.argmax(stage1_vals)
@@ -664,12 +773,13 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
                          _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals, sel_gids)
+                        stage1_vals, sel_gids, keep)
 
   shmapped = _shard_map(
-      fn, mesh=mesh, in_specs=(P(axis_names), P(axis_names), P(), P()),
+      fn, mesh=mesh,
+      in_specs=(P(axis_names), P(axis_names), P(), P(), P(), P()),
       out_specs=out_specs)
-  return shmapped(feats, gids, straggler_keep, rng)
+  return shmapped(feats, gids, straggler_keep, rng, age, deadline)
 
 
 def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
@@ -713,16 +823,19 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
 
   def fn(local_feats, local_gids, keep, key):
     me = _combined_index(both, mesh)
-    n_local = local_feats.shape[0]
     my_keep = keep[me]
+    local_valid = local_gids >= 0                   # pad-and-mask holes
+    evalw = local_valid.astype(local_feats.dtype)
+    n_live = jnp.sum(evalw.astype(jnp.float32))
     w = my_keep.astype(jnp.float32)
-    nl_w = jnp.asarray(n_local, jnp.float32) * w
+    nl_w = n_live * w
     denom_pod = jnp.maximum(_psum(nl_w, (data_axis,)), 1.0)
     denom_all = jnp.maximum(_psum(nl_w, both), 1.0)
 
     # ---- level 1: device-local greedy ------------------------------------
-    st0 = objective.init(local_feats)
-    r1 = greedy(objective, st0, local_feats, kappa, rng=key, mode=mode)
+    st0 = objective.init(local_feats, evalw)
+    r1 = greedy(objective, st0, local_feats, kappa, cand_mask=local_valid,
+                rng=key, mode=mode)
     valid1 = (r1.idx >= 0) & my_keep
     g1 = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
 
@@ -731,7 +844,8 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
     Bp_mask = jax.lax.all_gather(valid1, data_axis).reshape(md * kappa)
     Bp_gids = jax.lax.all_gather(g1, data_axis).reshape(md * kappa)
     pod_f, pod_v, pod_g, _ = _dist_greedy_core(
-        _objective_engine(objective, local_feats, Bp, Bp_mask, Bp_gids),
+        _objective_engine(objective, local_feats, Bp, Bp_mask, Bp_gids,
+                          eval_mask=evalw),
         kappa, (data_axis,), w, denom_pod, feats.dtype)
 
     # ---- level 3: inter-pod merge + distributed greedy (DCI) --------------
@@ -739,14 +853,15 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
     Bg_mask = jax.lax.all_gather(pod_v, pod_axis).reshape(mp * kappa)
     Bg_gids = jax.lax.all_gather(pod_g, pod_axis).reshape(mp * kappa)
     glob_f, glob_v, glob_g, glob_val = _dist_greedy_core(
-        _objective_engine(objective, local_feats, Bg, Bg_mask, Bg_gids),
+        _objective_engine(objective, local_feats, Bg, Bg_mask, Bg_gids,
+                          eval_mask=evalw),
         k_final, both, w, denom_all, feats.dtype)
 
     # best pod-level solution, evaluated globally over the alive data
     def pod_value(sel_i, valid_i):
-      st = set_value_feats(objective, objective.init(local_feats), sel_i,
-                           valid_i)
-      return objective.value(st) * n_local * w
+      st = set_value_feats(objective, objective.init(local_feats, evalw),
+                           sel_i, valid_i)
+      return objective.value(st) * n_live * w
     pods_f = jax.lax.all_gather(pod_f, pod_axis)        # (mp, kappa, d)
     pods_v = jax.lax.all_gather(pod_v, pod_axis)
     pods_g = jax.lax.all_gather(pod_g, pod_axis)
@@ -764,7 +879,7 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
                          _take_k(pods_g[best_p], k_final, -1))
     value = jnp.maximum(glob_val, v_best_pod)
     return GreediResult(sel_feats, sel_valid, value, glob_val, v_best_pod,
-                        pod_vals, sel_gids)
+                        pod_vals, sel_gids, keep)
 
   out_specs = _replicated_result_specs()
   shmapped = _shard_map(

@@ -90,6 +90,54 @@ def _pad_to(x: Array, n: int, value) -> Array:
                  constant_values=value)
 
 
+def _argsort_desc(pri: Array) -> tuple[Array, Array]:
+  """Descending argsort returning (sorted keys, order), ties to lower index.
+
+  NOT ``jnp.argsort``: that lowers to XLA's variadic sort, and on the CPU
+  backend that sort is not safe inside loop bodies under multi-device
+  ``shard_map`` -- a device can observe a concurrently-executing device's
+  sort output (observed on jax 0.4.x: the tile-bound lazy rescan picked
+  another *shard's* bound-argmax, deterministically; regression-tested in
+  tests/test_select_lazy.py / tests/test_service.py).  On TPU the native
+  sort is kept.  Elsewhere this explicit bitonic compare-exchange network
+  uses only elementwise ops and gathers, which have no shared sort scratch.
+  The index rides as a secondary key, so the order is a total order:
+  deterministic, and equal keys keep candidate order like a stable sort.
+
+  The hazard needs concurrently-executing devices, so the native sort (one
+  fused op, faster at small n) is kept on TPU and in single-device
+  processes; only multi-device non-TPU processes pay for the network.
+  """
+  from repro.kernels.autotune import default_backend
+  if default_backend() == "tpu" or jax.device_count() == 1:
+    order = jnp.argsort(-pri)
+    return pri[order], order
+  n = pri.shape[0]
+  n2 = max(1 << (n - 1).bit_length(), 1)
+  key = _pad_to(pri.astype(jnp.float32), n2, -jnp.inf)
+  idx = _pad_to(jnp.arange(n, dtype=jnp.int32), n2,
+                jnp.iinfo(jnp.int32).max)
+  pos = jnp.arange(n2)
+  size = 2
+  while size <= n2:
+    stride = size // 2
+    while stride >= 1:
+      partner = pos ^ stride
+      pk, pi = key[partner], idx[partner]
+      # "me before partner" in this block's direction (descending blocks
+      # have (pos & size) == 0; the final size == n2 stage is all-descending)
+      before_desc = (key > pk) | ((key == pk) & (idx < pi))
+      desc = (pos & size) == 0
+      bd = jnp.where(desc, before_desc, ~before_desc)
+      first = pos < partner
+      take = jnp.where(first, ~bd, bd)
+      key = jnp.where(take, pk, key)
+      idx = jnp.where(take, pi, idx)
+      stride //= 2
+    size *= 2
+  return key[:n], idx[:n]
+
+
 def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
            cand_mask: Array | None = None,
            constraint=None, meta: dict[str, Array] | None = None,
@@ -98,7 +146,8 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
            stop_nonpositive: bool = False,
            backend: str | None = None,
            use_select: bool = True,
-           lazy_tile: int | None = None) -> GreedyResult:
+           lazy_tile: int | None = None,
+           warm_bounds: Array | None = None) -> GreedyResult:
   """Select up to ``k_steps`` items from ``cand_feats`` maximizing ``objective``.
 
   Args:
@@ -127,6 +176,15 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
       to refresh the stale bounds.
     lazy_tile: rescore-tile size for mode="lazy" (default: the autotable in
       kernels/autotune.py, keyed on (n, d, backend)).
+    warm_bounds: optional (n,) per-candidate upper bounds on the *initial*
+      (empty-set) marginal gains, e.g. stale gains carried over from a
+      previous epoch of a selection service (valid by submodularity as long
+      as each entry really upper-bounds the candidate's current singleton
+      gain; unknown/new candidates may enter at +inf).  Only mode="lazy"
+      consumes them: step 0 then rescans bound-sorted tiles exactly like
+      later steps instead of paying a full gains pass, and the selection is
+      still bit-identical to a cold run.  Ignored by every other mode
+      (standard recomputes everything anyway, so cold and warm coincide).
   """
   objective = with_backend(objective, backend)
   if mode == "lazy" and not (getattr(objective, "monotone", True)
@@ -148,7 +206,8 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
     return _greedy_lazy(objective, state0, cand_feats, k_steps,
                         cand_mask=cand_mask, constraint=constraint, meta=meta,
                         stop_nonpositive=stop_nonpositive,
-                        use_select=use_select, tile=lazy_tile)
+                        use_select=use_select, tile=lazy_tile,
+                        warm_bounds=warm_bounds)
 
   fdtype = jnp.float32
   select_path = (mode == "standard" and use_select
@@ -229,7 +288,8 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
 def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
                  cand_mask: Array, constraint, meta: dict[str, Array],
                  stop_nonpositive: bool, use_select: bool,
-                 tile: int | None) -> GreedyResult:
+                 tile: int | None,
+                 warm_bounds: Array | None = None) -> GreedyResult:
   """Tile-bound lazy greedy (mode="lazy"): exact, but rescans few tiles.
 
   ``stale[i]`` holds the last gain computed for candidate i -- a valid upper
@@ -248,6 +308,13 @@ def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
   Note the tiles are bound-sorted *membership* groups, not fixed memory
   tiles: a fixed tiling of a shuffled corpus would put a near-best item in
   every tile and never prune.
+
+  With ``warm_bounds`` (epoch warm start, see docs/service.md) step 0 skips
+  the full pass: ``stale`` is seeded from the provided bounds and step 0
+  runs the same bound-sorted rescan as every later step.  Exactness is
+  preserved as long as the bounds really upper-bound the empty-set gains --
+  the rescan refreshes every tile whose head bound could still win, so an
+  over-estimate costs extra rescans, never a wrong selection.
   """
   del use_select  # tile rescans need the full (tile,) gains to refresh stale
   n, d = cand_feats.shape
@@ -302,19 +369,31 @@ def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
     return GreedyResult(carry0["idx"], carry0["feats"], carry0["gains"],
                         state0, jnp.zeros((0,), fdtype))
 
-  # ---- step 0: one full vectorized pass selects AND seeds the bounds ------
-  feasible0 = mask_pad & constraint.mask(carry0["cstate"], meta_pad)
-  g0 = objective.gains(state0, cand_pad).astype(fdtype)
-  best0, bidx0 = masked_top1(g0, feasible0)
-  c = apply_choice(carry0, 0, best0, bidx0, feasible0, g0)
+  if warm_bounds is None:
+    # ---- step 0: one full vectorized pass selects AND seeds the bounds ----
+    feasible0 = mask_pad & constraint.mask(carry0["cstate"], meta_pad)
+    g0 = objective.gains(state0, cand_pad).astype(fdtype)
+    best0, bidx0 = masked_top1(g0, feasible0)
+    c = apply_choice(carry0, 0, best0, bidx0, feasible0, g0)
+    t_start = 1
+  else:
+    # warm start: carried bounds replace the step-0 full pass; step 0 is a
+    # bound-sorted rescan like every later step (padding enters at NEG so
+    # it sorts last and is infeasible anyway)
+    c = dict(carry0,
+             stale=_pad_to(warm_bounds.astype(fdtype), npad, NEG))
+    t_start = 0
 
-  # ---- steps 1..k: rescan bound-sorted tiles until the head bound loses ---
+  # ---- remaining steps: rescan bound-sorted tiles until the head bound
+  # loses -------------------------------------------------------------------
   def body(t, c):
     feasible = (~c["selected"]) & mask_pad & constraint.mask(c["cstate"],
                                                              meta_pad)
     pri = jnp.where(feasible, c["stale"], NEG)
-    order = jnp.argsort(-pri)   # stable: bound ties keep candidate order
-    sorted_pri = pri[order]     # tile p's head bound = sorted_pri[p * tile]
+    # bound ties keep candidate order; NOT jnp.argsort -- see _argsort_desc
+    # for the multi-device CPU sort hazard this sidesteps
+    sorted_pri, order = _argsort_desc(pri)
+    # tile p's head bound = sorted_pri[p * tile]
 
     def cond(s):
       p, best, _, _ = s
@@ -338,7 +417,7 @@ def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
     _, best, bidx, stale = jax.lax.while_loop(cond, rescan_tile, init)
     return apply_choice(c, t, best, bidx, feasible, stale)
 
-  c = _ufori(1, k_steps, body, c)
+  c = _ufori(t_start, k_steps, body, c)
   values = objective.value(state0).astype(fdtype) + jnp.cumsum(c["gains"])
   return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values)
 

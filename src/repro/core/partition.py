@@ -32,6 +32,23 @@ def repartition(rng: Array, feats: Array, m_new: int):
   return random_partition(rng, feats, m_new)
 
 
+def partition_gids(perm: Array, gids: Array | None = None) -> Array:
+  """Global ids of the shard-contiguous layout a partition perm induces.
+
+  ``perm`` is the (m, npp) int32 permutation from ``random_partition``
+  (-1 = padding past a non-divisible n).  ``gids`` optionally maps the
+  permuted row positions to original document ids, itself allowing -1 for
+  the holes of a pad-and-mask block (a growing ground set, docs/service.md).
+  Returns the flat (m*npp,) int32 gids side input for the sharded GreeDi
+  paths, with holes from BOTH sources composed to -1.
+  """
+  p = perm.reshape(-1).astype(jnp.int32)
+  if gids is None:
+    return p
+  safe = jnp.maximum(p, 0)
+  return jnp.where(p >= 0, gids.astype(jnp.int32)[safe], -1)
+
+
 def shard_for_mesh(feats: Array, mesh, axis_names) -> Array:
   """Lay the (already padded) ground set out across mesh data axes."""
   from jax.sharding import NamedSharding, PartitionSpec as P

@@ -106,3 +106,20 @@ def batches_from_indices(corpus: EmbeddedCorpus, indices: np.ndarray,
   for step in range(steps):
     take = rng.choice(idx, size=batch_size, replace=len(idx) < batch_size)
     yield corpus.tokens_for(jnp.asarray(take))
+
+
+def batches_from_epochs(corpus: EmbeddedCorpus, selections,
+                        batch_size: int, steps_per_epoch: int,
+                        seed: int = 0):
+  """Train-side consumer of a multi-epoch selection stream.
+
+  ``selections`` is any iterable of index arrays -- in production the
+  ``SelectionService.selections`` generator (src/repro/service/), which
+  re-selects the coreset each epoch from the still-growing corpus.  Each
+  epoch's indices feed ``steps_per_epoch`` batches through
+  ``batches_from_indices`` with an epoch-distinct seed, so the token
+  stream stays deterministic given (seed, selection history).
+  """
+  for e, idx in enumerate(selections):
+    yield from batches_from_indices(corpus, idx, batch_size,
+                                    steps_per_epoch, seed=seed + e)

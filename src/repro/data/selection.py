@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import greedi as GD
 from repro.core import objectives as O
-from repro.core.partition import random_partition
+from repro.core.partition import partition_gids, random_partition
 
 Array = jax.Array
 
@@ -58,6 +58,12 @@ def greedi_select_indices_sharded(rng: Array, feats: Array, *, mesh,
   laid out contiguously, and the partition permutation rides along as the
   ``gids`` input, so ``sel_gids`` maps straight back to document ids.
 
+  Any ``n`` works: a non-divisible ground set is padded up to a mesh
+  multiple with *hole* rows carrying ``gids = -1`` (``random_partition``'s
+  own padding), which the sharded paths mask out of candidates and
+  evaluation -- so the ragged case selects exactly the same coreset as the
+  reference under the same seed (tested).
+
   Args:
     fast: route through ``greedi_sharded_fast`` (cached similarities; linear
       / rbf via the pairwise oracle) instead of the generic objective path.
@@ -66,13 +72,11 @@ def greedi_select_indices_sharded(rng: Array, feats: Array, *, mesh,
   """
   n, d = feats.shape
   m = GD._mesh_size(mesh, axis_names)
-  if n % m != 0:
-    raise ValueError(f"sharded selection needs n % mesh == 0, got {n} % {m}"
-                     " (pad the corpus or use greedi_select_indices)")
   r_part, r_sel, _, _ = GD.greedi_keys(rng)
-  parts, _, perm = random_partition(r_part, feats, m)   # npp == n // m
-  feats_sh = parts.reshape(n, d)
-  gids = perm.reshape(n).astype(jnp.int32)
+  parts, _, perm = random_partition(r_part, feats, m)   # npp == ceil(n / m)
+  npp = parts.shape[1]
+  feats_sh = parts.reshape(m * npp, d)
+  gids = partition_gids(perm)                           # -1 = hole padding
 
   if fast:
     r = GD.greedi_sharded_fast(

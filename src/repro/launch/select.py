@@ -5,10 +5,20 @@
 With --mesh N the ground set is sharded over N forced host devices and the
 production shard_map path runs (greedi_sharded_fast, or the generic
 greedi_sharded with --no-fast); without it the reference implementation is
-used.  Both paths return *global document indices*, honor --out (npy), and
-report coverage vs the centralized greedy when n is small enough for the
-O(k n^2) baseline to be cheap (force with --coverage, skip with
---no-coverage).
+used.  Any --n works on a mesh: non-divisible ground sets are padded with
+masked hole rows.  Both paths return *global document indices*, honor
+--out (npy), and report coverage vs the centralized greedy when n is small
+enough for the O(k n^2) baseline to be cheap (force with --coverage, skip
+with --no-coverage).
+
+With --epochs E (mesh mode) the long-lived SelectionService runs instead:
+the corpus streams in (--append-frac held back and appended after the
+first epoch), each epoch re-randomizes the partition and re-selects with
+warm-started lazy bounds (--cold disables), and per-epoch stats print as
+they stream.  --out then holds the LAST epoch's selection:
+
+    PYTHONPATH=src python -m repro.launch.select \\
+        --n 4096 --k 16 --mesh 4 --epochs 3 --append-frac 0.25
 """
 from __future__ import annotations
 
@@ -43,6 +53,16 @@ def main() -> None:
   ap.add_argument("--no-fast", action="store_true",
                   help="sharded path: use the generic objective engine "
                   "instead of the cached-similarity fast engine")
+  ap.add_argument("--epochs", type=int, default=0,
+                  help="run the multi-epoch SelectionService for this many "
+                  "epochs (mesh mode only)")
+  ap.add_argument("--append-frac", type=float, default=0.0,
+                  help="service mode: fraction of the corpus appended only "
+                  "after the first epoch (streaming ingest)")
+  ap.add_argument("--cold", action="store_true",
+                  help="service mode: disable warm-started lazy bounds")
+  ap.add_argument("--deadline", type=float, default=None,
+                  help="service mode: straggler liveness deadline (seconds)")
   ap.add_argument("--coverage", action="store_true",
                   help="force the centralized-greedy coverage baseline")
   ap.add_argument("--no-coverage", action="store_true",
@@ -65,7 +85,32 @@ def main() -> None:
                           seq_len=8)
   feats = corpus.features()
   t0 = time.time()
-  if args.mesh:
+  if args.mesh and args.epochs:
+    from repro.service import SelectionService
+    from repro.util import make_mesh
+    mesh = make_mesh((args.mesh,), ("data",))
+    svc = SelectionService(mesh, d=args.d, kappa=kappa, k_final=args.k,
+                           capacity=args.n, kernel=args.kernel,
+                           backend=args.backend, warm_start=not args.cold,
+                           deadline=args.deadline)
+    n0 = args.n - int(args.n * args.append_frac)
+    svc.append(np.asarray(feats)[:n0])
+    res = None
+    for e in range(args.epochs):
+      svc.board.beat()   # all in-process shards are alive by construction
+      res = svc.epoch()
+      s = res.stats
+      print(f"[select] epoch {s.epoch}: {len(res.sel_gids)} docs from "
+            f"{s.n_live} live (cap {s.capacity}), f={s.value:.4f}, "
+            f"alive={int(s.alive.sum())}/{len(s.alive)}, "
+            f"{'warm' if s.warm else 'cold'}, {s.wall_s:.2f}s, "
+            f"traces={s.retraces}")
+      if e == 0 and n0 < args.n:
+        svc.append(np.asarray(feats)[n0:])
+        print(f"[select] appended {args.n - n0} docs mid-stream")
+    sel = res.sel_gids
+    label = f"selection service (m={args.mesh}, {args.epochs} epochs)"
+  elif args.mesh:
     from repro.util import make_mesh  # jax imported post-env-setup
     mesh = make_mesh((args.mesh,), ("data",))
     sel = greedi_select_indices_sharded(

@@ -1,0 +1,4 @@
+from repro.service.heartbeat import HeartbeatBoard
+from repro.service.service import EpochResult, EpochStats, SelectionService
+
+__all__ = ["HeartbeatBoard", "SelectionService", "EpochResult", "EpochStats"]

@@ -1,0 +1,50 @@
+"""Per-shard heartbeat registry feeding the protocol's liveness collective.
+
+The board is deliberately dumb: it records *when* each shard last reported
+healthy (``beat``) and turns that into per-shard ages (``ages``).  The
+decision "is this shard alive?" is NOT made here -- the ages are fed into
+the sharded GreeDi protocol, whose deadline-based liveness collective
+(``core/greedi.py``) derives the straggler mask *inside* the jitted epoch
+and reports it back as ``GreediResult.alive``.  That keeps the policy (the
+deadline) next to the protocol that consumes it, and makes the mask a
+protocol output instead of an operator-supplied input.
+
+In a real deployment ``beat`` is driven by whatever health signal exists
+(per-host heartbeat RPCs, a k8s readiness probe, the trainer's data-fetch
+acks).  Tests inject a fake ``clock`` and call ``fail`` to kill shards
+deterministically.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+class HeartbeatBoard:
+  """Last-heartbeat timestamps for ``m`` shards, with an injectable clock."""
+
+  def __init__(self, m: int, clock=time.monotonic):
+    self._clock = clock
+    self._last = np.full((m,), float(clock()), np.float64)
+
+  @property
+  def m(self) -> int:
+    return self._last.shape[0]
+
+  def beat(self, shard: int | None = None) -> None:
+    """Record a heartbeat for ``shard`` (None = all shards)."""
+    now = float(self._clock())
+    if shard is None:
+      self._last[:] = now
+    else:
+      self._last[shard] = now
+
+  def fail(self, shard: int) -> None:
+    """Mark ``shard`` dead: its age is +inf until it beats again."""
+    self._last[shard] = -np.inf
+
+  def ages(self, now: float | None = None) -> np.ndarray:
+    """(m,) seconds since each shard's last heartbeat (>= 0; inf = dead)."""
+    now = float(self._clock()) if now is None else float(now)
+    return np.maximum(now - self._last, 0.0)

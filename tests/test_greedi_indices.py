@@ -88,6 +88,35 @@ print("INDEX_PARITY")
   assert "INDEX_PARITY" in out
 
 
+def test_sharded_ragged_n_parity_with_reference(subrun):
+  """ROADMAP "non-divisible n": n % mesh != 0 pads with hole rows
+  (gids = -1) that are masked out of candidates AND evaluation, so the
+  sharded paths select exactly the reference's coreset under the same seed
+  -- fast and generic engines, several ragged sizes."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data.selection import (greedi_select_indices,
+                                  greedi_select_indices_sharded)
+from repro.util import make_mesh
+mesh = make_mesh((8,), ("data",))
+for n in (250, 255, 193):
+  f = jax.random.normal(jax.random.PRNGKey(n), (n, 16))
+  f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+  rng = jax.random.PRNGKey(1)
+  s_ref = greedi_select_indices(rng, f, m=8, kappa=8, k_final=8)
+  s_fast = greedi_select_indices_sharded(rng, f, mesh=mesh, kappa=8,
+                                         k_final=8)
+  s_gen = greedi_select_indices_sharded(rng, f, mesh=mesh, kappa=8,
+                                        k_final=8, fast=False)
+  assert (s_fast >= 0).all() and (s_fast < n).all(), (n, s_fast)
+  assert set(s_ref.tolist()) == set(s_fast.tolist()) == set(s_gen.tolist()), \\
+      (n, sorted(s_ref.tolist()), sorted(s_fast.tolist()),
+       sorted(s_gen.tolist()))
+print("RAGGED_PARITY")
+""", n_devices=8)
+  assert "RAGGED_PARITY" in out
+
+
 def test_sharded_gids_map_to_rows(subrun):
   out = subrun("""
 import jax, jax.numpy as jnp, numpy as np

@@ -296,6 +296,41 @@ print("SHARDED_LAZY_OK", np.asarray(lz.sel_gids).tolist())
   assert "SHARDED_LAZY_OK" in out
 
 
+def test_sharded_lazy_multi_tile_sort_regression(subrun):
+  """Regression for the multi-device CPU sort hazard: jnp.argsort inside the
+  lazy loop body under a multi-device shard_map could return ANOTHER
+  device's sort output (a shard then rescanned another shard's top-bound
+  tile and picked its bound-argmax).  Needs a multi-tile operating point --
+  the old 64-rows-per-shard test had nt == 1 and never pruned, so it could
+  not trip the bug.  The lazy loop now routes through the bitonic
+  compare-exchange network (core/greedy._argsort_desc)."""
+  out = subrun("""
+import sys, os
+sys.path.insert(0, os.getcwd())
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from benchmarks.common import near_dup_corpus
+from repro.core import objectives as O
+from repro.core.greedy import greedy
+from repro.util import make_mesh, shard_map
+f = jnp.asarray(np.asarray(near_dup_corpus(8192, 32, seed=0)))
+mesh = make_mesh((4,), ("data",))
+obj = O.FacilityLocation(kernel="linear")
+
+def mk(mode):
+  def fn(lf):
+    r = greedy(obj, obj.init(lf), lf, 8, mode=mode)
+    return jax.lax.all_gather(r.idx, ("data",))
+  return shard_map(fn, mesh=mesh, in_specs=(P(("data",)),), out_specs=P())
+
+std = np.asarray(mk("standard")(f))
+lz = np.asarray(mk("lazy")(f))
+assert (std == lz).all(), (std.tolist(), lz.tolist())
+print("MULTI_TILE_SORT_OK")
+""", n_devices=4)
+  assert "MULTI_TILE_SORT_OK" in out
+
+
 def test_greedi_reference_lazy_matches_standard():
   from repro.core.greedi import greedi_reference
   f = _feats(11, 192, 12)

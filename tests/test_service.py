@@ -1,0 +1,342 @@
+"""The streaming selection service (ISSUE 4): warm-started epoch bounds,
+pad-and-mask growth, protocol-side straggler detection, and the U-holder
+re-election fix.
+
+Layers:
+
+  * greedy-level: warm_bounds makes mode="lazy" skip the step-0 full pass
+    but stays bit-identical to the cold run, for every monotone objective
+    (and for deliberately loose / +inf bounds -- looser bounds cost
+    rescans, never correctness);
+  * protocol-level (subprocess meshes): the liveness collective derives the
+    straggler mask (== an explicit straggler_keep run), the Thm-10 U-holder
+    is re-elected among alive shards, holes (gids = -1) are immaterial;
+  * service-level: restart determinism (same seed + same appends ==> same
+    selections), warm == cold, and the 4-shard acceptance run (>= 3 epochs,
+    append between, killed shard in the last, no re-trace, warm >= 1.3x
+    cold on the near-dup corpus).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import objectives as O
+from repro.core.greedy import greedy
+from repro.service.heartbeat import HeartbeatBoard
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _feats(seed, n, d):
+  f = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+  return f / jnp.linalg.norm(f, axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# heartbeat board
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_board_ages_and_fail():
+  t = [100.0]
+  board = HeartbeatBoard(4, clock=lambda: t[0])
+  t[0] = 107.0
+  np.testing.assert_allclose(board.ages(), [7.0] * 4)
+  board.beat(2)
+  t[0] = 110.0
+  np.testing.assert_allclose(board.ages(), [10.0, 10.0, 3.0, 10.0])
+  board.fail(1)
+  ages = board.ages()
+  assert np.isinf(ages[1]) and ages[1] > 0
+  board.beat()  # global beat revives everyone
+  np.testing.assert_allclose(board.ages(), [0.0] * 4)
+
+
+# ---------------------------------------------------------------------------
+# warm-started lazy bounds: bit-identical on every monotone objective
+# ---------------------------------------------------------------------------
+
+
+def _monotone_cases():
+  f = _feats(5, 220, 12)
+  fa = jnp.abs(f)
+  fl = O.FacilityLocation(kernel="linear")
+  flr = O.FacilityLocation(kernel="rbf", kernel_kwargs=(("h", 1.0),))
+  ig = O.InformationGain(k_max=6, kernel="rbf", kernel_kwargs=(("h", 0.75),),
+                         sigma=0.7)
+  cov = O.SaturatedCoverage(kernel="linear", alpha=0.25)
+  mod = O.Modular()
+  w = jnp.abs(jax.random.normal(jax.random.PRNGKey(9), (12,)))
+  return {
+      "facility_linear": (fl, fl.init(f), f, 8),
+      "facility_rbf": (flr, flr.init(f), f, 8),
+      "information_gain": (ig, ig.init_d(12), f, 6),
+      "coverage": (cov, cov.init(fa), fa, 8),
+      "modular": (mod, mod.init_w(w), f, 8),
+  }
+
+
+_MONOTONE = ["facility_linear", "facility_rbf", "information_gain",
+             "coverage", "modular"]
+
+
+@pytest.mark.parametrize("name", _MONOTONE)
+def test_warm_lazy_bit_identical_to_cold(name):
+  """Epoch warm start at the greedy level: seeding mode="lazy" with the
+  previous epoch's (= exact empty-set) gains, with LOOSE over-estimates,
+  and with +inf (unseen items) all reproduce the cold selection exactly."""
+  obj, st0, feats, k = _monotone_cases()[name]
+  cold = greedy(obj, st0, feats, k, mode="lazy")
+  exact0 = obj.gains(st0, feats).astype(jnp.float32)
+  bounds = {
+      "carried": exact0,                        # epoch t's step-0 gains
+      "loose": exact0 + 0.37,                   # stale-but-valid over-estimate
+      "fresh_items": jnp.full_like(exact0, jnp.inf),   # appended docs
+      "mixed": jnp.where(jnp.arange(220) % 3 == 0, jnp.inf, exact0 + 0.1),
+  }
+  for label, wb in bounds.items():
+    warm = greedy(obj, st0, feats, k, mode="lazy", warm_bounds=wb)
+    assert np.asarray(warm.idx).tolist() == np.asarray(cold.idx).tolist(), \
+        (name, label)
+    np.testing.assert_allclose(np.asarray(warm.gains),
+                               np.asarray(cold.gains), rtol=1e-5, atol=1e-6,
+                               err_msg=f"{name}/{label}")
+    np.testing.assert_allclose(np.asarray(warm.values),
+                               np.asarray(cold.values), rtol=1e-5, atol=1e-6)
+
+
+def test_warm_lazy_nonmonotone_falls_back():
+  """Non-monotone objectives silently fall back to standard; warm bounds
+  are ignored there and the result still matches."""
+  w = jnp.abs(jax.random.normal(jax.random.PRNGKey(6), (64, 64)))
+  cut = O.GraphCut()
+  st0 = cut.init_w(w)
+  onehot = jnp.eye(64)
+  a = greedy(cut, st0, onehot, 10, mode="standard", stop_nonpositive=True)
+  b = greedy(cut, st0, onehot, 10, mode="lazy", stop_nonpositive=True,
+             warm_bounds=jnp.full((64,), jnp.inf))
+  assert np.asarray(a.idx).tolist() == np.asarray(b.idx).tolist()
+
+
+# ---------------------------------------------------------------------------
+# protocol level: liveness collective + U-holder re-election (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_liveness_collective_equals_explicit_mask(subrun):
+  """The protocol-derived straggler mask (heartbeat ages vs deadline) must
+  reproduce an explicit straggler_keep run exactly, on both engines, and
+  report the mask as GreediResult.alive."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+obj = O.FacilityLocation(kernel="linear")
+mesh = make_mesh((4,), ("data",))
+keep = jnp.array([True, False, True, True])
+ages = jnp.array([0.2, 1e9, 3.0, 0.0])   # shard 1 missed its deadline
+for gen in (True, False):
+  if gen:
+    a = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                       straggler_keep=keep)
+    b = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                       liveness_age=ages, liveness_deadline=5.0)
+  else:
+    a = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8,
+                            straggler_keep=keep)
+    b = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8,
+                            liveness_age=ages, liveness_deadline=5.0)
+  np.testing.assert_array_equal(np.asarray(a.sel_gids), np.asarray(b.sel_gids))
+  np.testing.assert_allclose(float(a.value), float(b.value), rtol=1e-6)
+  np.testing.assert_array_equal(np.asarray(a.alive), np.asarray(keep))
+  np.testing.assert_array_equal(np.asarray(b.alive), np.asarray(keep))
+# liveness composes with an explicit keep (AND)
+c = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                   straggler_keep=jnp.array([True, True, True, False]),
+                   liveness_age=ages, liveness_deadline=5.0)
+np.testing.assert_array_equal(np.asarray(c.alive),
+                              np.array([True, False, True, False]))
+print("LIVENESS_OK")
+""", n_devices=4)
+  assert "LIVENESS_OK" in out
+
+
+def test_u_holder_reelected_among_alive(subrun):
+  """Thm-10 U-subset eval with machine 0 dead: the U-holder moves to the
+  first alive shard instead of collapsing the evaluation weight to zero
+  (the value equals f(sel) evaluated on that shard's partition)."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, set_value_feats
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+obj = O.FacilityLocation(kernel="linear")
+mesh = make_mesh((4,), ("data",))
+keep = jnp.array([False, True, True, True])
+r = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                   u_subset_eval=True, straggler_keep=keep)
+assert float(r.value) > 0.1, "U-subset value degenerated with machine 0 dead"
+# the elected U-holder is shard 1: its partition is rows [64, 128)
+u = f[64:128]
+st0 = obj.init(u, jnp.ones((64,), f.dtype))
+want = obj.value(set_value_feats(obj, st0, r.sel_feats, r.sel_valid))
+np.testing.assert_allclose(float(r.value), float(want), rtol=1e-5)
+# all alive keeps the historical holder (machine 0)
+r0 = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                    u_subset_eval=True)
+u0 = f[:64]
+st00 = obj.init(u0, jnp.ones((64,), f.dtype))
+want0 = obj.value(set_value_feats(obj, st00, r0.sel_feats, r0.sel_valid))
+np.testing.assert_allclose(float(r0.value), float(want0), rtol=1e-5)
+print("UHOLDER_OK")
+""", n_devices=4)
+  assert "UHOLDER_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# service level (single-device mesh runs in-process)
+# ---------------------------------------------------------------------------
+
+
+def _mesh1():
+  from repro.util import make_mesh
+  return make_mesh((1,), ("data",))
+
+
+def _service(**kw):
+  from repro.service import SelectionService
+  base = dict(d=16, kappa=8, k_final=8, capacity=256, append_block=128)
+  base.update(kw)
+  return SelectionService(_mesh1(), **base)
+
+
+def test_service_restart_determinism():
+  """Same seed + same append history ==> identical selections across a
+  service restart (compiled-state independence)."""
+  f = np.asarray(_feats(0, 500, 16))
+  runs = []
+  for _ in range(2):  # second construction = the "restarted" service
+    svc = _service(seed=3)
+    svc.append(f[:300])
+    sels = [svc.epoch().sel_gids.tolist()]
+    svc.append(f[300:])            # grows 300 -> 500 (capacity doubles)
+    sels += [svc.epoch().sel_gids.tolist() for _ in range(2)]
+    runs.append(sels)
+  assert runs[0] == runs[1]
+  assert len(runs[0][2]) == 8
+
+
+def test_service_warm_equals_cold_every_epoch():
+  f = np.asarray(_feats(1, 500, 16))
+  sels = {}
+  for warm in (True, False):
+    svc = _service(seed=7, warm_start=warm)
+    svc.append(f[:256])
+    out = [svc.epoch().sel_gids.tolist()]
+    svc.append(f[256:])
+    out += [svc.epoch().sel_gids.tolist() for _ in range(2)]
+    sels[warm] = out
+  assert sels[True] == sels[False]
+
+
+def test_service_epoch_schedule_reranomizes():
+  """Distinct epochs draw distinct partitions; explicit rng overrides the
+  schedule and reproduces."""
+  f = np.asarray(_feats(2, 400, 16))
+  svc = _service(seed=0)
+  svc.append(f)
+  a = svc.epoch(jax.random.PRNGKey(5)).sel_gids.tolist()
+  b = svc.epoch(jax.random.PRNGKey(5)).sel_gids.tolist()
+  assert a == b  # same explicit key, same selection
+  stats = [svc.epoch().stats for _ in range(2)]
+  assert stats[0].epoch != stats[1].epoch
+  assert all(s.retraces == 1 for s in stats)
+
+
+def test_service_append_gid_contract():
+  svc = _service()
+  f = np.asarray(_feats(3, 100, 16))
+  svc.append(f[:60])
+  svc.append(f[60:], gids=np.arange(1000, 1040))
+  r = svc.epoch()
+  assert svc.n_docs == 100
+  assert all((0 <= g < 60) or (1000 <= g < 1040) for g in r.sel_gids.tolist())
+  with pytest.raises(AssertionError):
+    svc.append(f[:4], gids=np.array([-1, 2, 3, 4]))
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance run: 4 shards, >= 3 epochs, append, kill, warm >= 1.3x
+# ---------------------------------------------------------------------------
+
+
+def test_service_four_shard_acceptance(subrun):
+  """ISSUE-4 acceptance: a 4-shard service runs 3+ epochs with an append
+  between epochs and a killed shard in the last one, asserting (a) no
+  re-trace after warm-up, (b) sel_gids set-equality with a cold one-shot
+  run at the same partition seed, (c) warm-start epochs >= 1.3x faster
+  than cold on the near-duplicate corpus (the BENCH_4.json regime)."""
+  out = subrun("""
+import time
+import jax, jax.numpy as jnp, numpy as np
+from benchmarks.common import near_dup_corpus
+from repro.service import SelectionService
+from repro.util import make_mesh
+
+N, D, K = 16384, 32, 8
+feats = np.asarray(near_dup_corpus(N, D, seed=0))
+n0 = 12288
+mesh = make_mesh((4,), ("data",))
+
+def build(warm):
+  svc = SelectionService(mesh, d=D, kappa=K, k_final=K, capacity=N,
+                         seed=11, warm_start=warm, deadline=60.0)
+  svc.append(feats[:n0])
+  return svc
+
+warm, cold = build(True), build(False)
+
+# epoch 0 compiles; epoch 1 after an append; epoch 2 with a killed shard
+sels = {s: [] for s in ("warm", "cold")}
+for name, svc in (("warm", warm), ("cold", cold)):
+  sels[name].append(svc.epoch())
+  svc.append(feats[n0:])
+  sels[name].append(svc.epoch())
+  svc.board.fail(3)
+  sels[name].append(svc.epoch())
+
+for e, (a, b) in enumerate(zip(sels["warm"], sels["cold"])):
+  # (b) the warm multi-epoch service selects the same coreset as a cold
+  # one-shot run of the protocol at the same partition seed
+  assert set(a.sel_gids.tolist()) == set(b.sel_gids.tolist()), e
+  assert len(a.sel_gids) == K, (e, a.sel_gids)
+last = sels["warm"][-1].stats
+assert last.alive.tolist() == [True, True, True, False], last.alive
+
+# (a) no re-trace after warm-up: one trace total at fixed capacity,
+# across appends AND the straggler epoch
+assert warm.retrace_count == 1, warm.retrace_count
+assert cold.retrace_count == 1, cold.retrace_count
+print("EPOCHS_OK")
+
+# (c) warm >= 1.3x cold per epoch (both already compiled + bounds settled;
+# revive shard 3 so the timed epochs do full work)
+for svc in (warm, cold):
+  svc.board.beat()
+def best_epoch_s(svc, reps=3):
+  return min(svc.epoch().stats.wall_s for _ in range(reps))
+t_warm = best_epoch_s(warm)
+t_cold = best_epoch_s(cold)
+ratio = t_cold / t_warm
+print(f"warm {t_warm*1e3:.0f}ms cold {t_cold*1e3:.0f}ms ratio {ratio:.2f}x")
+assert ratio >= 1.3, f"warm-start speedup {ratio:.2f}x < 1.3x"
+print("ACCEPTANCE_OK")
+""", n_devices=4, timeout=900)
+  assert "EPOCHS_OK" in out
+  assert "ACCEPTANCE_OK" in out
