@@ -533,7 +533,9 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     warm_bounds: optional (n,) upper bounds on each row's empty-set gain
       under its shard's local evaluation, threaded to the round-1 lazy
       greedy (mode="lazy" only) so step 0 skips its full pass -- the
-      epoch warm start of the selection service (docs/service.md).
+      epoch warm start of the selection service, whose per-objective
+      validity lives in the ``BoundMaintainer`` registry of
+      core/objectives.py (docs/service.md).
     liveness_age: optional (m,) seconds since each machine's last
       heartbeat.  When given, the protocol itself derives the straggler
       mask: each shard contributes the bit ``age <= liveness_deadline`` to

@@ -177,14 +177,16 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
     lazy_tile: rescore-tile size for mode="lazy" (default: the autotable in
       kernels/autotune.py, keyed on (n, d, backend)).
     warm_bounds: optional (n,) per-candidate upper bounds on the *initial*
-      (empty-set) marginal gains, e.g. stale gains carried over from a
-      previous epoch of a selection service (valid by submodularity as long
-      as each entry really upper-bounds the candidate's current singleton
-      gain; unknown/new candidates may enter at +inf).  Only mode="lazy"
-      consumes them: step 0 then rescans bound-sorted tiles exactly like
-      later steps instead of paying a full gains pass, and the selection is
-      still bit-identical to a cold run.  Ignored by every other mode
-      (standard recomputes everything anyway, so cold and warm coincide).
+      (empty-set) marginal gains, e.g. the cross-epoch table a selection
+      service maintains through the objective's registered
+      ``BoundMaintainer`` (core/objectives.py; valid by submodularity as
+      long as each entry really upper-bounds the candidate's current
+      singleton gain; unknown/new candidates may enter at +inf).  Only
+      mode="lazy" consumes them: step 0 then rescans bound-sorted tiles
+      exactly like later steps instead of paying a full gains pass, and the
+      selection is still bit-identical to a cold run.  Ignored by every
+      other mode (standard recomputes everything anyway, so cold and warm
+      coincide).
   """
   objective = with_backend(objective, backend)
   if mode == "lazy" and not (getattr(objective, "monotone", True)

@@ -512,6 +512,25 @@ class SaturatedCoverage:
   def value(self, state: SatCovState) -> Array:
     return state.value
 
+  # Distributed evaluation helper (same contract as FacilityLocation's): a
+  # psum of the unnormalized partial gains over shards, weighted by live
+  # counts, reproduces the global objective -- what the round-2 engine of
+  # core/greedi.py consumes, making saturated coverage a first-class
+  # protocol objective (and a service objective, see service/store.py).
+  def partial_stats(self, state: SatCovState,
+                    cand_feats: Array) -> tuple[Array, Array]:
+    """Returns (sum-of-gains (nc,), live-count ()) -- psum-able."""
+    if self.kernel in dispatch.FUSED_SIMS:
+      fn = dispatch.resolve("coverage_gain", self.backend)
+      part = fn(state.eval_feats, cand_feats, state.cover, state.cap,
+                state.eval_mask, kernel=self.kernel,
+                h=_kernel_h(self.kernel_kwargs))
+      return part, jnp.sum(state.eval_mask)
+    sim = self._sim(state.eval_feats, cand_feats)
+    new = jnp.minimum(state.cover[:, None] + sim, state.cap[:, None])
+    inc = new - jnp.minimum(state.cover, state.cap)[:, None]
+    return state.eval_mask @ inc, jnp.sum(state.eval_mask)
+
 
 # ---------------------------------------------------------------------------
 # Graph cut (Sec. 6.3; non-monotone) -- index-based, explicit weight matrix
@@ -615,6 +634,124 @@ class Modular:
 
   def value(self, state: ModState) -> Array:
     return state.value
+
+
+# ---------------------------------------------------------------------------
+# Warm-start bound maintainers (the selection service's cross-epoch tables)
+# ---------------------------------------------------------------------------
+#
+# The streaming selection service (src/repro/service/) carries, per document,
+# an upper bound on its *empty-set* marginal gain across epochs, so round 1's
+# lazy greedy can skip its step-0 full pass (``greedy(warm_bounds=...)``,
+# docs/service.md).  What makes such a bound maintainable under appends and
+# valid under ANY re-randomized partition is objective-specific; a
+# ``BoundMaintainer`` packages exactly that math:
+#
+#   * ``append_update``  -- one fused (new_rows x block) pass producing (a)
+#     the mass the new documents add to every older document's bound and (b)
+#     the new documents' own bounds.  Pure local math: the *placement* (which
+#     block columns live on which shard, the psum of the new documents' row
+#     sums) belongs to the caller (service/store.CorpusStore runs this
+#     sharded over the mesh via the ``bound_update`` dispatch oracle).
+#   * ``epoch_bounds``   -- turn carried sum-form table entries into per-item
+#     empty-set gain bounds under a shard evaluating ``n_live`` live rows.
+#
+# Maintainers are registered per objective *type*; each maintainer's own
+# ``supports(objective)`` additionally gates on the instance configuration
+# (e.g. similarity kernel, baseline sign for the sum-form maintainer) so an
+# objective whose parameters break that maintainer's validity argument simply
+# gets none -- and the service falls back to cold lazy selection, which is
+# always exact.  The gates live WITH the maintainer, not in the registry:
+# a future maintainer with different validity conditions brings its own.
+#
+# Adding a maintainer for a new objective (ROADMAP: info-gain / graph-cut):
+# state the validity argument (every evaluation point must contribute
+# non-negatively to the singleton gain, and the per-pair contribution must be
+# partition-independent so the whole-corpus sum dominates any partition's),
+# implement ``supports``/``append_update``/``epoch_bounds``, and register it
+# here.  The service/store layers are objective-agnostic and pick it up
+# untouched.
+
+
+@dataclasses.dataclass(frozen=True)
+class SumFormBoundMaintainer:
+  """Sum-form singleton-gain bounds: ``table[i] = sum_e relu(sim(e, i))``.
+
+  Validity (docs/service.md): for facility location with a non-negative
+  baseline, doc i's empty-set gain under an evaluation set P is
+  ``(1/|P|) sum_{e in P} relu(sim(e,i) - baseline) <= table[i] / |P|``
+  because every evaluation point contributes non-negatively and the sum over
+  any partition is a subset of the sum over the corpus.  Saturated coverage
+  admits the same argument: its per-point contribution
+  ``min(relu(sim), cap_e)`` is capped *below* relu(sim) regardless of the
+  partition-dependent saturation level, so the identical relu-sum table is a
+  valid bound there too -- one maintainer, two objectives.
+  """
+  oracle: str = "bound_update"
+
+  def supports(self, objective: Any) -> bool:
+    """Whether this maintainer's validity argument holds for ``objective``:
+
+      * the similarity kernel must be one the fused ``bound_update`` oracle
+        implements (``dispatch.FUSED_SIMS``) -- e.g. ``neg_sq_dist``
+        facility location runs cold;
+      * a facility-location ``baseline < 0`` would make the true empty-set
+        gain ``relu(sim - baseline)`` exceed ``relu(sim)``, breaking the
+        sum-form bound -- run cold rather than select wrongly.
+    """
+    if getattr(objective, "kernel", None) not in dispatch.FUSED_SIMS:
+      return False
+    if float(getattr(objective, "baseline", 0.0)) < 0.0:
+      return False
+    return True
+
+  def append_update(self, new_rows: Array, block_feats: Array,
+                    new_valid: Array, block_valid: Array, *, kernel: str,
+                    h: float, backend: str | None = None):
+    """One fused (nb_new x nb_block) pass -> (add (nb_block,), sums (nb_new,)).
+
+    ``add[j]`` is the evaluation mass the new documents contribute to block
+    document j's bound; ``sums[i]`` is new document i's own bound restricted
+    to this block's columns (the caller psums partial ``sums`` over shards).
+    """
+    fn = dispatch.resolve(self.oracle, backend or "auto")
+    return fn(new_rows, block_feats, new_valid, block_valid, kernel=kernel,
+              h=h)
+
+  def epoch_bounds(self, table: Array, n_live: Array) -> Array:
+    """Sum-form table entries -> mean-form empty-set bounds for a shard
+    whose evaluation set has ``n_live`` live rows (broadcastable)."""
+    return table / jnp.maximum(n_live, 1.0)
+
+
+_BOUND_MAINTAINERS: dict[type, Any] = {}
+
+
+def register_bound_maintainer(obj_type: type, maintainer: Any) -> None:
+  """Register (or replace) the warm-start bound maintainer for an objective
+  type (see the section comment above for the contract)."""
+  _BOUND_MAINTAINERS[obj_type] = maintainer
+
+
+def bound_maintainer_for(objective: Any) -> Any | None:
+  """The registered maintainer for ``objective``, or None when the objective
+  (type, or configuration per the maintainer's own ``supports``) admits no
+  maintained warm start.
+
+  None means "run cold": the service still selects exactly, it just pays
+  the lazy step-0 full pass each epoch.
+  """
+  maintainer = _BOUND_MAINTAINERS.get(type(objective))
+  if maintainer is None:
+    return None
+  supports = getattr(maintainer, "supports", None)
+  if supports is not None and not supports(objective):
+    return None
+  return maintainer
+
+
+register_bound_maintainer(FacilityLocation, SumFormBoundMaintainer())
+register_bound_maintainer(SaturatedCoverage, SumFormBoundMaintainer())
 
 
 # ---------------------------------------------------------------------------

@@ -49,6 +49,17 @@ def partition_gids(perm: Array, gids: Array | None = None) -> Array:
   return jnp.where(p >= 0, gids.astype(jnp.int32)[safe], -1)
 
 
+def shard_live_counts(valid: Array, m: int) -> Array:
+  """(m,) float32 live-row counts per shard of a shard-contiguous layout.
+
+  ``valid`` is the flat (m*npp,) liveness mask a partition induces (gids >= 0
+  after ``partition_gids`` -- holes of a pad-and-mask block compose to
+  False).  The counts are the per-shard evaluation denominators the service
+  uses to turn sum-form warm-bound tables into mean-form empty-set bounds
+  (``BoundMaintainer.epoch_bounds``, core/objectives.py)."""
+  return jnp.sum(valid.reshape(m, -1), axis=1).astype(jnp.float32)
+
+
 def shard_for_mesh(feats: Array, mesh, axis_names) -> Array:
   """Lay the (already padded) ground set out across mesh data axes."""
   from jax.sharding import NamedSharding, PartitionSpec as P

@@ -99,18 +99,31 @@ class EmbeddedCorpus:
 
 
 def batches_from_indices(corpus: EmbeddedCorpus, indices: np.ndarray,
-                         batch_size: int, steps: int, seed: int = 0):
-  """Cycle batches over a (GreeDi-) selected index set."""
+                         batch_size: int, steps: int, seed: int = 0, *,
+                         board=None, shard: int | None = None):
+  """Cycle batches over a (GreeDi-) selected index set.
+
+  ``board``/``shard`` optionally wire the consumer to a
+  ``service.heartbeat.HeartbeatBoard``: every batch fetch beats the
+  consuming shard's heartbeat (``shard=None`` beats all shards -- the
+  single-consumer-for-the-whole-stream case).  The data-fetch ack IS the
+  liveness signal: a trainer shard that stops pulling batches stops
+  beating, its age crosses the service deadline, and the next epoch's
+  liveness collective masks it out (``GreediResult.alive``).
+  """
   rng = np.random.default_rng(seed)
   idx = np.asarray(indices)
   for step in range(steps):
     take = rng.choice(idx, size=batch_size, replace=len(idx) < batch_size)
+    if board is not None:
+      board.beat(shard)
     yield corpus.tokens_for(jnp.asarray(take))
 
 
 def batches_from_epochs(corpus: EmbeddedCorpus, selections,
                         batch_size: int, steps_per_epoch: int,
-                        seed: int = 0):
+                        seed: int = 0, *, board=None,
+                        shard: int | None = None):
   """Train-side consumer of a multi-epoch selection stream.
 
   ``selections`` is any iterable of index arrays -- in production the
@@ -119,7 +132,14 @@ def batches_from_epochs(corpus: EmbeddedCorpus, selections,
   epoch's indices feed ``steps_per_epoch`` batches through
   ``batches_from_indices`` with an epoch-distinct seed, so the token
   stream stays deterministic given (seed, selection history).
+
+  ``board``/``shard`` thread the heartbeat wiring through: each batch this
+  consumer fetches acks its shard's liveness on the selection service's
+  ``HeartbeatBoard`` (see ``batches_from_indices``), replacing the
+  hand-driven ``board.beat()`` calls of operator scripts with the real
+  transport signal -- the trainer's data-fetch cadence.
   """
   for e, idx in enumerate(selections):
     yield from batches_from_indices(corpus, idx, batch_size,
-                                    steps_per_epoch, seed=seed + e)
+                                    steps_per_epoch, seed=seed + e,
+                                    board=board, shard=shard)

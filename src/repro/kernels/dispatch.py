@@ -30,6 +30,10 @@ registry carries two more families:
 
   * ``pairwise`` -- materialized similarity blocks, for paths that
     legitimately cache the matrix (the sharded GreeDi fast engine);
+  * ``bound_update`` -- the append-time warm-bound pass of the selection
+    service's ``CorpusStore`` (one fused (new x block) sweep -> per-column
+    credit + per-row sums), built on ``pairwise`` so it shards by handing
+    each mesh shard its local block columns (service/store.py);
   * ``select`` oracles (``register_select``/``resolve_select``) -- the fused
     in-kernel top-1 reductions of select_top1.py returning (best_gain,
     best_idx) directly, so the greedy select step is one kernel pass with no

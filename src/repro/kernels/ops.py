@@ -252,6 +252,30 @@ def pairwise(x: Array, y: Array, *, kernel: str = "rbf", h: float = 0.75,
   return out[:nx, :ny]
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "force_xla"))
+def bound_update(new_rows: Array, block_feats: Array, new_valid: Array,
+                 block_valid: Array, *, kernel: str = "linear",
+                 h: float = 0.75, force_xla: bool = False):
+  """Fused append-time warm-bound pass: one (nb_new x nb_block) similarity
+  sweep serving both sides of a corpus append (see service/store.py):
+
+      add[j]  = sum_i relu(sim(new_i, block_j))   -- new evaluation mass
+                                                     credited to document j
+      sums[i] = sum_j relu(sim(new_i, block_j))   -- new document i's own
+                                                     sum-form bound (partial:
+                                                     this block's columns)
+
+  Rows/columns with ``new_valid``/``block_valid`` 0 (chunk padding, holes)
+  contribute nothing.  Routes the similarity block through the same fused
+  ``pairwise`` implementations as the GreeDi fast engine, so it shards over
+  a mesh by simply handing each shard its local block columns.
+  """
+  s = pairwise(new_rows, block_feats, kernel=kernel, h=h, force_xla=force_xla)
+  s = jnp.maximum(s, 0.0)
+  s = s * new_valid[:, None] * block_valid[None, :]
+  return jnp.sum(s, axis=0), jnp.sum(s, axis=1)
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
                                              "block_k", "force_xla"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
@@ -292,6 +316,10 @@ dispatch.register("graph_cut_gain", pallas=graph_cut_gain,
 # (core/greedi.py greedi_sharded_fast) and the GP cross-term benchmarks
 dispatch.register("pairwise", pallas=pairwise,
                   ref=functools.partial(pairwise, force_xla=True))
+# append-time warm-bound maintenance (sum-form relu tables): the sharded
+# bound-update entry point of the selection service's CorpusStore
+dispatch.register("bound_update", pallas=bound_update,
+                  ref=functools.partial(bound_update, force_xla=True))
 
 # fused select-step oracles (in-kernel top-1; see select_top1.py)
 dispatch.register_select("facility_gain", pallas=facility_select,

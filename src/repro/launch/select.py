@@ -56,6 +56,11 @@ def main() -> None:
   ap.add_argument("--epochs", type=int, default=0,
                   help="run the multi-epoch SelectionService for this many "
                   "epochs (mesh mode only)")
+  ap.add_argument("--objective", default="facility",
+                  choices=["facility", "saturated_coverage"],
+                  help="service mode: selection objective; warm starts "
+                  "engage for any objective with a registered "
+                  "BoundMaintainer (core/objectives.py)")
   ap.add_argument("--append-frac", type=float, default=0.0,
                   help="service mode: fraction of the corpus appended only "
                   "after the first epoch (streaming ingest)")
@@ -92,9 +97,12 @@ def main() -> None:
     svc = SelectionService(mesh, d=args.d, kappa=kappa, k_final=args.k,
                            capacity=args.n, kernel=args.kernel,
                            backend=args.backend, warm_start=not args.cold,
-                           deadline=args.deadline)
+                           deadline=args.deadline, objective=args.objective)
     n0 = args.n - int(args.n * args.append_frac)
-    svc.append(np.asarray(feats)[:n0])
+    feats_np = np.asarray(feats)
+    if args.objective == "saturated_coverage":
+      feats_np = np.abs(feats_np)  # nonneg coverage mass (Lin & Bilmes)
+    svc.append(feats_np[:n0])
     res = None
     for e in range(args.epochs):
       svc.board.beat()   # all in-process shards are alive by construction
@@ -106,10 +114,14 @@ def main() -> None:
             f"{'warm' if s.warm else 'cold'}, {s.wall_s:.2f}s, "
             f"traces={s.retraces}")
       if e == 0 and n0 < args.n:
-        svc.append(np.asarray(feats)[n0:])
+        svc.append(feats_np[n0:])
         print(f"[select] appended {args.n - n0} docs mid-stream")
     sel = res.sel_gids
-    label = f"selection service (m={args.mesh}, {args.epochs} epochs)"
+    # the coverage baseline below must score the features selection ran on
+    # (saturated coverage selects over the abs-mapped corpus)
+    feats = jax.numpy.asarray(feats_np)
+    label = (f"selection service (m={args.mesh}, {args.epochs} epochs, "
+             f"{args.objective})")
   elif args.mesh:
     from repro.util import make_mesh  # jax imported post-env-setup
     mesh = make_mesh((args.mesh,), ("data",))

@@ -1,4 +1,6 @@
 from repro.service.heartbeat import HeartbeatBoard
 from repro.service.service import EpochResult, EpochStats, SelectionService
+from repro.service.store import CorpusStore
 
-__all__ = ["HeartbeatBoard", "SelectionService", "EpochResult", "EpochStats"]
+__all__ = ["CorpusStore", "HeartbeatBoard", "SelectionService", "EpochResult",
+           "EpochStats"]

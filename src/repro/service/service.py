@@ -3,55 +3,59 @@ growing corpus (see docs/service.md).
 
 The paper states GreeDi as a one-shot MapReduce job, but its target
 workload -- exemplar selection feeding a trainer -- is repeated: every
-epoch re-selects from a corpus that is still being embedded.  The
-``SelectionService`` owns everything that makes the repeated run cheap:
+epoch re-selects from a corpus that is still being embedded.  The service
+layer splits that into two pieces:
 
-  * **one compiled protocol**: the epoch function (re-partition + the
-    index-tracked sharded engine) is jitted once per capacity; every input
-    that changes between epochs (features, gids, warm bounds, heartbeat
-    ages, deadline, rng) is a runtime array, so epochs and appends never
-    re-trace.  Capacity doubling re-compiles at most O(log n) times.
-  * **pad-and-mask growth**: the corpus lives in a pre-allocated
-    (capacity, d) block; rows past the live count are *holes* with
-    ``gid = -1``, threaded through the protocol's existing ``gids`` side
-    input (never candidates, never evaluation mass).  ``append`` writes
-    into the block and the next ``epoch`` sees the new documents.
-  * **per-epoch re-randomization**: each epoch draws a fresh uniform
-    partition (``core/partition.repartition``), the re-randomization that
-    preserves the distributed approximation guarantee across repeated runs
-    (Barbosa et al., "The Power of Randomization").
-  * **warm-started lazy bounds**: the service maintains, per document, an
-    upper bound on its facility-location singleton gain in *sum form over
-    the whole corpus* (``ubound[i] = sum_e relu(sim(e, i))``).  Because
-    every evaluation point contributes non-negatively, the sum over ANY
-    partition is at most the sum over the corpus, so
-    ``ubound[i] / n_live(shard)`` upper-bounds document i's empty-set gain
-    under whatever partition epoch t+1 draws -- a valid Minoux bound that
-    lets round 1's lazy greedy skip its full step-0 pass (bit-identical
-    selections; validity argument in docs/service.md).  Appended documents
-    enter at +inf and are refreshed by a single fused append-time pass
-    that simultaneously adds their evaluation mass to the old documents'
-    bounds (without that credit the old bounds could under-estimate and
-    break exactness).
-  * **straggler detection as a protocol output**: a ``HeartbeatBoard``
-    records per-shard liveness; the epoch feeds heartbeat *ages* plus a
-    deadline into the protocol's liveness collective, which derives the
-    straggler mask inside the jitted run and re-elects the Thm-10 U-holder
-    among the alive shards.
+  * **`CorpusStore`** (service/store.py) owns the *data plane*: the
+    pad-and-mask ``(capacity, d)`` block lives device-resident and
+    mesh-sharded, appends move only the new rows through a jitted
+    fixed-chunk row writer, growth migrates buffers on device, and the
+    objective's ``BoundMaintainer`` (core/objectives.py) keeps the
+    warm-start bound table current with a mesh-sharded
+    ``(append_block x capacity)`` pass per append chunk.
+  * **`SelectionService`** (this file) is the *lifecycle orchestrator*: it
+    owns the mesh, the heartbeat board, the epoch schedule, and ONE
+    compiled epoch function (re-partition + the index-tracked sharded
+    engine).  Every input that changes between epochs -- the resident store
+    arrays, heartbeat ages, deadline, rng -- is a runtime argument, so
+    epochs and appends never re-trace; an idle epoch transfers only
+    scalars (the store arrays are already on the devices).  Capacity
+    doubling changes the argument shapes and re-compiles at most O(log n)
+    times.
+
+Per epoch the service draws a fresh uniform partition
+(``core/partition.repartition`` -- Barbosa-style re-randomization, which
+preserves the distributed approximation guarantee across repeated runs) and
+runs ``greedi_sharded(mode="lazy")``.  With a maintained bound table, round
+1 is WARM-STARTED: the sum-form table divided by each shard's live count
+upper-bounds every document's empty-set gain under *any* partition
+(``BoundMaintainer.epoch_bounds``; validity argument in docs/service.md), so
+lazy step 0 skips its full pass while the selection stays bit-identical to a
+cold run -- for every objective with a registered maintainer (facility
+location and saturated coverage today); objectives without one fall back to
+cold lazy, which is always exact.
+
+Straggler detection is a protocol OUTPUT: a ``HeartbeatBoard`` records
+per-shard liveness, the epoch feeds heartbeat *ages* plus a deadline into
+the protocol's liveness collective, and the derived mask comes back as
+``GreediResult.alive`` (the Thm-10 U-holder is re-elected among alive
+shards).
 
 Determinism contract: epoch t's partition key is ``fold_in(seed, t)``, the
-bound table is a pure function of the append history, and the compiled
-protocol holds no cross-epoch state -- so a restarted service that replays
-the same appends reproduces the same selections bit-for-bit (tested).
+bound table is a pure function of the append history (deterministic device
+reductions at fixed mesh), and the compiled protocol holds no cross-epoch
+state -- so a restarted service that replays the same appends reproduces
+the same selections bit-for-bit (tested).
 
 Floating point: the carried bounds are only *mathematically* upper bounds;
 f32 summation order differs between the incremental table and the fresh
 per-epoch gain pass, so an un-inflated bound can undershoot the true gain
 by an ulp-scale epsilon and stop the lazy rescan one tile early.  The
-table is therefore accumulated in float64 and every epoch's bounds are
-inflated by a small relative slack (``_BOUND_SLACK_*``) before use --
-slack costs a little pruning, never correctness, because the lazy loop
-verifies every candidate it returns by rescanning its tile.
+store therefore accumulates the table in a compensated double-float pair
+(~f64 precision; service/store.py) and every epoch's bounds are inflated
+by a small relative slack (``_BOUND_SLACK_*``) before use -- slack costs a
+little pruning, never correctness, because the lazy loop verifies every
+candidate it returns by rescanning its tile.
 """
 from __future__ import annotations
 
@@ -65,10 +69,10 @@ import numpy as np
 
 from repro.core import greedi as GD
 from repro.core import objectives as O
-from repro.core.objectives import NEG, _kernel_h
-from repro.core.partition import partition_gids, repartition
-from repro.kernels import dispatch
+from repro.core.objectives import NEG
+from repro.core.partition import partition_gids, repartition, shard_live_counts
 from repro.service.heartbeat import HeartbeatBoard
+from repro.service.store import CorpusStore
 
 Array = jax.Array
 
@@ -78,6 +82,13 @@ Array = jax.Array
 # GAPS in the near-duplicate selection regime are larger still)
 _BOUND_SLACK_REL = 1e-3
 _BOUND_SLACK_ABS = 1e-6
+
+# named service objectives; any instance exposing the protocol surface of
+# core/greedi.py (init/gains/update/value/partial_stats) works too
+_OBJECTIVES = {
+    "facility": O.FacilityLocation,
+    "saturated_coverage": O.SaturatedCoverage,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +101,8 @@ class EpochStats:
   alive: np.ndarray     # (m,) protocol-derived liveness mask
   warm: bool            # whether warm-started bounds were in effect
   wall_s: float         # wall-clock of the epoch (device-synced)
-  retraces: int         # cumulative epoch-fn traces (1 after warm-up)
+  retraces: int         # cumulative epoch-fn traces: 1 per capacity
+                        # actually selected at (<= 1 + growths)
 
 
 class EpochResult(NamedTuple):
@@ -100,7 +112,7 @@ class EpochResult(NamedTuple):
 
 
 class SelectionService:
-  """Multi-epoch sharded GreeDi with a growing pad-and-mask ground set.
+  """Multi-epoch sharded GreeDi over a device-resident growing ground set.
 
   Args:
     mesh: device mesh to run the sharded protocol over.
@@ -110,18 +122,24 @@ class SelectionService:
     k_final: coreset size per epoch.
     capacity: initial block capacity (rounded up to a mesh multiple);
       doubles on overflow, re-compiling the epoch function.
-    kernel / kernel_kwargs / backend: facility-location similarity kernel
-      and gain-oracle backend, as in data/selection.py.
+    kernel / kernel_kwargs / backend: similarity kernel and gain-oracle
+      backend, as in data/selection.py.
+    objective: "facility" (default), "saturated_coverage", or an objective
+      instance exposing the sharded-protocol surface (init/partial_stats/
+      update/value).  Warm starts engage whenever the objective has a
+      registered ``BoundMaintainer`` (core/objectives.py); otherwise the
+      service runs cold lazy -- selections are exact either way.
     mode: round-1 greedy mode; "lazy" (default) enables the cross-epoch
       warm start, "standard" is the fused-select path.
     warm_start: maintain the append-time bound table and thread it into
-      round 1 (lazy mode only; selections are identical either way).
+      round 1 (lazy mode + maintained objective only; selections are
+      identical either way).
     deadline: liveness deadline in seconds; None disables detection (all
       heartbeats pass).
     seed: base key for the per-epoch partition/selection rng schedule.
-    append_block: append chunk size; the bound-update pass is compiled for
-      this fixed shape so appends never re-trace (bigger appends are
-      chunked).
+    append_block: append chunk size; the store's row writer and bound pass
+      are compiled for this fixed shape so appends never re-trace (bigger
+      appends are chunked).
   """
 
   def __init__(self, mesh, *, d: int, kappa: int, k_final: int,
@@ -130,71 +148,54 @@ class SelectionService:
                axis_names: tuple[str, ...] = ("data",), mode: str = "lazy",
                warm_start: bool = True, deadline: float | None = None,
                seed: int = 0, append_block: int = 1024,
-               feat_dtype=np.float32):
+               feat_dtype=np.float32, objective: str | Any = "facility"):
     self.mesh = mesh
     self._axis_names = axis_names
     self._m = GD._mesh_size(mesh, axis_names)
     self._d = d
     self._kappa = kappa
     self._k_final = k_final
-    self._kernel = kernel
-    self._kernel_kwargs = kernel_kwargs
     self._backend = backend
     self._mode = mode
-    self._warm = bool(warm_start) and mode == "lazy"
     self._deadline = deadline
-    self._append_block = append_block
-    self._feat_dtype = feat_dtype
-    self._objective = O.FacilityLocation(kernel=kernel,
+    if isinstance(objective, str):
+      if objective not in _OBJECTIVES:
+        raise ValueError(f"objective {objective!r} not in "
+                         f"{sorted(_OBJECTIVES)} (or pass an instance)")
+      objective = _OBJECTIVES[objective](kernel=kernel,
                                          kernel_kwargs=kernel_kwargs)
+    self._objective = objective
+    # the store's bound pass must match the objective's similarity
+    kernel = getattr(objective, "kernel", kernel)
+    kernel_kwargs = getattr(objective, "kernel_kwargs", kernel_kwargs)
+    self._maintainer = (O.bound_maintainer_for(objective)
+                        if warm_start and mode == "lazy" else None)
+    self._warm = self._maintainer is not None
     self._key = jax.random.PRNGKey(seed)
-
-    self._cap = self._round_capacity(max(capacity, append_block))
-    self._alloc(self._cap)
-    self._n = 0
-    self._next_gid = 0
     self._epoch_idx = 0
     self._trace_count = 0
-    self._bound_trace_count = 0
-    self._growths = 0
+    self.store = CorpusStore(
+        mesh, d=d, capacity=capacity, append_block=append_block,
+        axis_names=axis_names, kernel=kernel, kernel_kwargs=kernel_kwargs,
+        backend=backend, maintainer=self._maintainer, feat_dtype=feat_dtype)
     self.board = HeartbeatBoard(self._m)
     self._compile()
 
-  # ---- block / capacity management ----------------------------------------
-
-  def _round_capacity(self, cap: int) -> int:
-    """Smallest mesh multiple >= cap (the block must tile the data axes)."""
-    return -(-cap // self._m) * self._m
-
-  def _alloc(self, cap: int) -> None:
-    self._feats = np.zeros((cap, self._d), self._feat_dtype)
-    self._gids = np.full((cap,), -1, np.int32)
-    self._ubound = np.zeros((cap,), np.float64)  # f64: accumulation drift
-    self._ub32 = None  # f32 view cache, rebuilt lazily after appends
-
-  def _grow(self) -> None:
-    """Double the capacity: the O(log n) re-compile of the growth contract."""
-    new_cap = self._round_capacity(self._cap * 2)
-    feats, gids, ub = self._feats, self._gids, self._ubound
-    self._cap = new_cap
-    self._alloc(new_cap)
-    self._feats[: feats.shape[0]] = feats
-    self._gids[: gids.shape[0]] = gids
-    self._ubound[: ub.shape[0]] = ub
-    self._growths += 1
-    self._compile()
-
-  # ---- compiled kernels ----------------------------------------------------
+  # ---- the compiled epoch --------------------------------------------------
 
   def _compile(self) -> None:
-    cap, d, m = self._cap, self._d, self._m
-    npp = cap // m
+    """Build the ONE epoch function.  Shapes (capacity) are read off the
+    runtime arguments, so capacity growth re-traces this same jit object --
+    that is the O(log n) recompile budget, counted by ``retrace_count``."""
+    d, m = self._d, self._m
     obj = self._objective
     axis_names = self._axis_names
-    warm = self._warm
+    warm, maintainer = self._warm, self._maintainer
 
     def _epoch(feats, gids, ubound, ages, deadline, rng):
       self._trace_count += 1  # python side effect: counts (re-)traces
+      cap = feats.shape[0]
+      npp = cap // m
       r_part, r_run = jax.random.split(rng)
       # fresh uniform partition every epoch (Barbosa-style re-randomization);
       # cap is a mesh multiple, so the perm has no padding of its own and
@@ -205,12 +206,13 @@ class SelectionService:
       wb = None
       if warm:
         valid_sh = gids_sh >= 0
-        # sum-form corpus bounds -> per-shard mean-form empty-set bounds:
-        # divide by the shard's live evaluation count (holes sort to NEG)
-        nv = jnp.sum(valid_sh.reshape(m, npp), axis=1).astype(jnp.float32)
+        # sum-form corpus table -> per-shard mean-form empty-set bounds
+        # (holes sort to NEG); the divide-by-live-count transform is the
+        # maintainer's epoch_bounds
+        nv = shard_live_counts(valid_sh, m)
         wb = jnp.where(valid_sh, ubound[jnp.maximum(perm.reshape(cap), 0)],
                        NEG)
-        wb = wb / jnp.repeat(jnp.maximum(nv, 1.0), npp)
+        wb = maintainer.epoch_bounds(wb, jnp.repeat(nv, npp))
         # slack keeps the bounds valid under f32 summation-order noise
         wb = wb * (1.0 + _BOUND_SLACK_REL) + _BOUND_SLACK_ABS
       return GD.greedi_sharded(
@@ -221,32 +223,25 @@ class SelectionService:
 
     self._epoch_fn = jax.jit(_epoch)
 
-    sim = dispatch.resolve("pairwise", self._backend or "auto")
-    h = _kernel_h(self._kernel_kwargs)
-    kernel = self._kernel
-
-    def _bound_update(feats, valid, new_rows, new_valid):
-      self._bound_trace_count += 1
-      # one fused pass serves both sides of the append: rows are the new
-      # documents, columns the whole block (the new rows are already placed,
-      # so their mutual/self terms are included exactly once)
-      s = jnp.maximum(sim(new_rows, feats, kernel=kernel, h=h), 0.0)
-      s = s * new_valid[:, None] * valid[None, :]
-      add = jnp.sum(s, axis=0)   # new eval mass credited to every document
-      sums = jnp.sum(s, axis=1)  # full-corpus sums for the new documents
-      return add, sums
-
-    self._bound_fn = jax.jit(_bound_update)
-
   # ---- public surface ------------------------------------------------------
 
   @property
   def n_docs(self) -> int:
-    return self._n
+    return self.store.n_docs
 
   @property
   def capacity(self) -> int:
-    return self._cap
+    return self.store.capacity
+
+  @property
+  def warm(self) -> bool:
+    """Whether warm-started bounds are active (lazy mode + a registered
+    ``BoundMaintainer`` for the objective)."""
+    return self._warm
+
+  @property
+  def objective(self):
+    return self._objective
 
   @property
   def retrace_count(self) -> int:
@@ -256,74 +251,42 @@ class SelectionService:
 
   @property
   def growths(self) -> int:
-    return self._growths
+    return self.store.growths
 
   def append(self, feats, gids=None) -> None:
-    """Grow the ground set: write documents into the pad-and-mask block.
+    """Grow the ground set: delegate to the device-resident store.
 
-    ``gids`` default to consecutive document ids.  When warm starts are on,
-    each chunk pays one fused (append_block x capacity) similarity pass
-    that (a) sets the new documents' bounds exactly and (b) credits their
-    evaluation mass to every older document's bound -- the update that
-    keeps the carried bounds valid upper bounds (docs/service.md).
+    Only the new rows cross H2D; when warm starts are on the store's
+    maintainer runs one mesh-sharded (append_block x capacity) pass per
+    chunk that (a) sets the new documents' bounds exactly and (b) credits
+    their evaluation mass to every older document's bound -- the update
+    that keeps the carried bounds valid (docs/service.md).  Duplicate
+    explicit gids raise ``ValueError`` before anything is written.
     """
-    feats = np.asarray(feats, self._feat_dtype)
-    assert feats.ndim == 2 and feats.shape[1] == self._d, feats.shape
-    b = feats.shape[0]
-    if gids is None:
-      gids = np.arange(self._next_gid, self._next_gid + b, dtype=np.int32)
-      self._next_gid += b
-    else:
-      gids = np.asarray(gids, np.int32)
-      assert gids.shape == (b,) and (gids >= 0).all(), "gids must be >= 0"
-      self._next_gid = max(self._next_gid, int(gids.max()) + 1 if b else 0)
-    while self._n + b > self._cap:
-      self._grow()
-
-    ab = self._append_block
-    for off in range(0, b, ab):
-      chunk = feats[off:off + ab]
-      cb = chunk.shape[0]
-      s, e = self._n, self._n + cb
-      self._feats[s:e] = chunk
-      self._gids[s:e] = gids[off:off + cb]
-      self._ubound[s:e] = np.inf  # new documents enter at +inf
-      self._n = e
-      if self._warm:
-        pad = ab - cb
-        rows = np.concatenate(
-            [chunk, np.zeros((pad, self._d), self._feat_dtype)]) \
-            if pad else chunk
-        rvalid = np.concatenate(
-            [np.ones((cb,), np.float32), np.zeros((pad,), np.float32)])
-        add, sums = self._bound_fn(self._feats, (self._gids >= 0)
-                                   .astype(np.float32), rows, rvalid)
-        self._ubound += np.asarray(add)
-        self._ubound[s:e] = np.asarray(sums)[:cb]
-    self._ub32 = None
+    self.store.append(feats, gids)
 
   def epoch(self, rng: Array | None = None) -> EpochResult:
     """Run one selection epoch: re-partition, select, stream ids + stats.
 
     ``rng`` defaults to ``fold_in(seed, epoch_index)`` so a restarted
     service that replays the same appends reproduces the same schedule.
+    Idle epochs transfer only the arguments built here -- heartbeat ages,
+    the deadline, and the rng key; the corpus block stays device-resident.
     """
     if rng is None:
       rng = jax.random.fold_in(self._key, self._epoch_idx)
     ages = jnp.asarray(self.board.ages(), jnp.float32)
     deadline = jnp.asarray(
         np.inf if self._deadline is None else self._deadline, jnp.float32)
-    if self._ub32 is None:
-      self._ub32 = self._ubound.astype(np.float32)
     t0 = time.perf_counter()
-    r = self._epoch_fn(self._feats, self._gids, self._ub32, ages, deadline,
-                       rng)
+    r = self._epoch_fn(self.store.feats, self.store.gids,
+                       self.store.ubound_device, ages, deadline, rng)
     jax.block_until_ready(r)
     wall = time.perf_counter() - t0
     sel = np.asarray(r.sel_gids)[np.asarray(r.sel_valid)]
     sel = sel[sel >= 0]
-    stats = EpochStats(epoch=self._epoch_idx, n_live=self._n,
-                       capacity=self._cap, value=float(r.value),
+    stats = EpochStats(epoch=self._epoch_idx, n_live=self.store.n_docs,
+                       capacity=self.store.capacity, value=float(r.value),
                        alive=np.asarray(r.alive), warm=self._warm,
                        wall_s=wall, retraces=self._trace_count)
     self._epoch_idx += 1

@@ -1,0 +1,330 @@
+"""Device-resident, mesh-sharded corpus block for the selection service.
+
+The paper's GreeDi protocol assumes the data already lives on the machines;
+PR 4's service instead kept the pad-and-mask block in host NumPy and re-fed
+the full ``(capacity, d)`` block over H2D every epoch.  ``CorpusStore`` makes
+data placement a first-class abstraction (the same move that lets
+horizontally-scalable submodular maximization scale past one machine's
+memory): the block's three arrays -- ``feats (capacity, d)``,
+``gids (capacity,)``, and the warm-bound table -- are jax Arrays laid out
+row-sharded over the service mesh (``NamedSharding(mesh, P(axis_names))``)
+and never leave the devices.
+
+Transfer accounting (what actually crosses H2D; docs/service.md):
+
+  * ``append``  -- ONE fixed-shape chunk per ``append_block`` rows: the new
+    feature rows, their gids, a validity mask, and the write offset.  A
+    jitted row writer scatters them into the resident block (out-of-range /
+    padding rows are dropped), so appends move O(append_block * d) bytes
+    regardless of capacity and never re-trace at fixed capacity.
+  * ``epoch``   -- nothing from here.  The service's compiled epoch function
+    takes the resident arrays by reference; an idle epoch transfers only
+    scalars (rng key, heartbeat ages, deadline).
+  * growth      -- capacity doubles in place on device (pad + reshard), the
+    O(log n) re-compile of the growth contract.  No host round-trip, and
+    the bound table is preserved bit-exactly (tested).
+
+Warm-bound maintenance is objective-generic: the store holds a *sum-form*
+bound table maintained by the objective's registered ``BoundMaintainer``
+(core/objectives.py).  The ``(append_block x capacity)`` append-time pass
+runs SHARDED over the mesh through the ``bound_update`` dispatch oracle --
+each shard sweeps the new rows against its local block columns (the
+per-column credit stays sharded; the new rows' own sums are psum-reduced) --
+instead of on one device, closing the ROADMAP "distributed append" item.
+Objectives without a maintainer get a store with ``maintainer=None``: the
+table stays zero and the service selects cold (always exact).
+
+Float64 without x64: the host store accumulated its table in NumPy float64
+to keep f32 summation drift below the epoch slack.  jax arrays in this
+process are f32 (x64 disabled), so the resident table is a **double-float
+pair** ``(hi, lo)`` -- 2Sum-compensated f32 accumulation carrying ~48
+mantissa bits, numerically the same guarantee, migrated exactly on growth.
+Epochs consume ``hi`` (the f32 rounding is covered by the service's bound
+slack, exactly as the host store's f64 -> f32 cast was).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.greedi import _combined_index, _mesh_size
+from repro.core.objectives import _kernel_h
+from repro.util import shard_map as _shard_map
+
+Array = jax.Array
+
+
+def _df_add(hi: Array, lo: Array, x: Array):
+  """Add f32 ``x`` into the double-float pair ``(hi, lo)``.
+
+  2Sum (Knuth) computes the exact f32 rounding error of ``hi + x``; the
+  error accumulates in ``lo`` and a Fast2Sum renormalization keeps
+  ``|lo| <= ulp(hi)/2``.  The pair tracks the true sum to ~2^-48 relative
+  over any realistic append history -- the device-resident stand-in for the
+  host store's float64 table.
+  """
+  s = hi + x
+  b = s - hi
+  err = (hi - (s - b)) + (x - b)
+  lo = lo + err
+  hi2 = s + lo
+  lo2 = lo - (hi2 - s)
+  return hi2, lo2
+
+
+class CorpusStore:
+  """Device-resident pad-and-mask corpus block with maintained warm bounds.
+
+  Args:
+    mesh / axis_names: the service mesh; rows shard over the named axes.
+    d: feature dimension.
+    capacity: initial block capacity, rounded up to a mesh multiple;
+      doubles on overflow (``append`` grows automatically, ``reserve``
+      pre-grows).
+    append_block: fixed chunk shape of the jitted row writer; bigger
+      appends are chunked, so appends never re-trace at fixed capacity.
+    kernel / kernel_kwargs / backend: similarity kernel + oracle backend
+      for the maintainer's bound pass (unused when ``maintainer`` is None).
+    maintainer: the objective's ``BoundMaintainer``
+      (``core.objectives.bound_maintainer_for``) or None to keep no table.
+    feat_dtype: storage dtype of the feature rows.
+  """
+
+  def __init__(self, mesh, *, d: int, capacity: int = 4096,
+               append_block: int = 1024,
+               axis_names: tuple[str, ...] = ("data",),
+               kernel: str = "linear", kernel_kwargs: tuple = (),
+               backend: str | None = None, maintainer=None,
+               feat_dtype=np.float32):
+    self._mesh = mesh
+    self._axis_names = axis_names
+    self._m = _mesh_size(mesh, axis_names)
+    self._d = d
+    self._append_block = append_block
+    self._kernel = kernel
+    self._kernel_kwargs = kernel_kwargs
+    self._backend = backend
+    self._maintainer = maintainer
+    self._feat_dtype = feat_dtype
+    self._sharding = NamedSharding(mesh, P(axis_names))
+
+    self._cap = self._round_capacity(max(capacity, append_block))
+    self._n = 0
+    self._next_gid = 0
+    # duplicate-id bookkeeping, host-side and O(ids the caller chose):
+    # auto-allocated ids are contiguous watermark ranges (merged, so the
+    # list stays tiny), explicit ids go in a set -- the default auto path
+    # stores no per-id state and the check never touches the device
+    self._auto_ranges: list[tuple[int, int]] = []
+    self._explicit_gids: set[int] = set()
+    self._growths = 0
+    self._write_trace_count = 0
+    self._alloc(self._cap)
+    self._compile()
+
+  # ---- placement -----------------------------------------------------------
+
+  def _round_capacity(self, cap: int) -> int:
+    """Smallest mesh multiple >= cap (the block must tile the data axes)."""
+    return -(-cap // self._m) * self._m
+
+  def _dev(self, x: np.ndarray) -> Array:
+    return jax.device_put(x, self._sharding)
+
+  def _alloc(self, cap: int) -> None:
+    self._feats = self._dev(np.zeros((cap, self._d), self._feat_dtype))
+    self._gids = self._dev(np.full((cap,), -1, np.int32))
+    self._ub_hi = self._dev(np.zeros((cap,), np.float32))
+    self._ub_lo = self._dev(np.zeros((cap,), np.float32))
+
+  def _grow(self) -> None:
+    """Double the capacity in place on device: pad each resident array and
+    re-balance it over the mesh (values -- including the bound pair -- are
+    copied exactly).  One of the O(log n) growth re-compiles."""
+    new_cap = self._round_capacity(self._cap * 2)
+    pad = new_cap - self._cap
+
+    def _pad(x, fill):
+      widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+      return jnp.pad(x, widths, constant_values=fill)
+
+    mig = jax.jit(_pad, static_argnums=(1,), out_shardings=self._sharding)
+    self._feats = mig(self._feats, 0)
+    self._gids = mig(self._gids, -1)
+    self._ub_hi = mig(self._ub_hi, 0)
+    self._ub_lo = mig(self._ub_lo, 0)
+    self._cap = new_cap
+    self._growths += 1
+    self._compile()
+
+  # ---- the compiled row writer / bound pass --------------------------------
+
+  def _compile(self) -> None:
+    cap, ab = self._cap, self._append_block
+    ax = self._axis_names
+    mesh = self._mesh
+    npp = cap // self._m
+    maintainer = self._maintainer
+    kernel = self._kernel
+    h = _kernel_h(self._kernel_kwargs)
+    backend = self._backend
+
+    def body(lfeats, lgids, lhi, llo, rows, rgids, rvalid, off):
+      # ---- shard-local row write: each shard scatters only the chunk rows
+      # that land in its own slice (O(append_block) work per shard, no
+      # collectives) -- the write pattern a global scatter on the sharded
+      # block would otherwise turn into an O(capacity) GSPMD gather/scatter
+      me = _combined_index(ax, mesh)
+      pos = off + jnp.arange(ab, dtype=jnp.int32) - me * npp
+      mine = (rvalid > 0) & (pos >= 0) & (pos < npp)
+      widx = jnp.where(mine, pos, npp)   # out of local range -> dropped
+      lfeats = lfeats.at[widx].set(rows, mode="drop")
+      lgids = lgids.at[widx].set(rgids, mode="drop")
+      if maintainer is not None:
+        # ---- sharded (append_block x capacity) bound pass: each shard
+        # sweeps the new rows against its own (already updated) block
+        # columns, so the new rows' mutual/self terms are included exactly
+        # once.  The per-column credit stays sharded; only the new rows'
+        # own sums cross shards (one (append_block,) psum).
+        lvalid = (lgids >= 0).astype(jnp.float32)
+        add, sums_part = maintainer.append_update(
+            rows, lfeats, rvalid, lvalid, kernel=kernel, h=h,
+            backend=backend)
+        sums = jax.lax.psum(sums_part, ax)
+        lhi, llo = _df_add(lhi, llo, add)
+        lhi = lhi.at[widx].set(sums, mode="drop")
+        llo = llo.at[widx].set(jnp.zeros((ab,), jnp.float32), mode="drop")
+      return lfeats, lgids, lhi, llo
+
+    def write(feats, gids, ub_hi, ub_lo, rows, rgids, rvalid, off):
+      self._write_trace_count += 1  # python side effect: counts (re-)traces
+      return _shard_map(
+          body, mesh=mesh,
+          in_specs=(P(ax), P(ax), P(ax), P(ax), P(), P(), P(), P()),
+          out_specs=(P(ax),) * 4)(feats, gids, ub_hi, ub_lo, rows, rgids,
+                                  rvalid, off)
+
+    # outputs pinned to the store's row sharding: the resident block must
+    # stay mesh-sharded across appends no matter what GSPMD would infer
+    self._append_fn = jax.jit(write, donate_argnums=(0, 1, 2, 3),
+                              out_shardings=(self._sharding,) * 4)
+
+  # ---- public surface ------------------------------------------------------
+
+  @property
+  def n_docs(self) -> int:
+    return self._n
+
+  @property
+  def capacity(self) -> int:
+    return self._cap
+
+  @property
+  def growths(self) -> int:
+    return self._growths
+
+  @property
+  def write_trace_count(self) -> int:
+    """Row-writer traces so far (1 per capacity: appends never re-trace)."""
+    return self._write_trace_count
+
+  @property
+  def feats(self) -> Array:
+    """(capacity, d) resident feature block, row-sharded over the mesh."""
+    return self._feats
+
+  @property
+  def gids(self) -> Array:
+    """(capacity,) resident gids; -1 rows are holes."""
+    return self._gids
+
+  @property
+  def ubound_device(self) -> Array:
+    """(capacity,) f32 resident bound table (the pair's ``hi`` word) -- what
+    the compiled epoch function consumes (service slack covers the f32
+    rounding, exactly as it covered the host store's f64 -> f32 cast)."""
+    return self._ub_hi
+
+  @property
+  def ubound(self) -> np.ndarray:
+    """(capacity,) float64 view of the bound table (hi + lo, exact).
+
+    Pulls the pair to host -- diagnostics/tests only; the hot path reads
+    ``ubound_device``.
+    """
+    return (np.asarray(self._ub_hi).astype(np.float64)
+            + np.asarray(self._ub_lo).astype(np.float64))
+
+  def reserve(self, n_total: int) -> None:
+    """Pre-grow so ``n_total`` documents fit without mid-append growth."""
+    while n_total > self._cap:
+      self._grow()
+
+  def append(self, feats, gids=None) -> None:
+    """Write documents into the resident block (chunked, fixed shapes).
+
+    ``gids`` default to consecutive ids.  Explicit gids must be unique --
+    within the batch and against every id already in the block: a duplicate
+    would alias two documents under one id downstream (selection sets,
+    trainer batch lookups) and is rejected with ``ValueError`` before any
+    row is written.  The check is pure host bookkeeping (watermark ranges
+    for auto ids, a set for explicit ones): no device round-trip, and no
+    per-id state on the default auto path.  The bookkeeping is committed
+    only after every chunk has landed, so a failed ``reserve`` (growth OOM)
+    leaves the id space clean for a retry.  A device failure *mid-write*
+    is not recoverable in place -- the writer donates the resident buffers
+    -- and calls for the restart-and-replay path (docs/service.md).
+    """
+    feats = np.asarray(feats, self._feat_dtype)
+    assert feats.ndim == 2 and feats.shape[1] == self._d, feats.shape
+    b = feats.shape[0]
+    auto = gids is None
+    if auto:
+      # auto ids are allocated above the watermark: collision-free by
+      # construction (explicit appends push the watermark past their max)
+      start = self._next_gid
+      gids = np.arange(start, start + b, dtype=np.int32)
+    else:
+      gids = np.asarray(gids, np.int32)
+      assert gids.shape == (b,) and (gids >= 0).all(), "gids must be >= 0"
+      uniq, counts = np.unique(gids, return_counts=True)
+      if uniq.size != b:
+        raise ValueError(
+            f"duplicate gids within append: {uniq[counts > 1].tolist()}")
+      clash = [int(g) for g in uniq.tolist()
+               if g in self._explicit_gids
+               or any(s <= g < e for s, e in self._auto_ranges)]
+      if clash:
+        raise ValueError(f"gids already in the corpus: {clash}")
+    self.reserve(self._n + b)
+
+    ab = self._append_block
+    for off in range(0, b, ab):
+      chunk = feats[off:off + ab]
+      cb = chunk.shape[0]
+      pad = ab - cb
+      rows = chunk if not pad else np.concatenate(
+          [chunk, np.zeros((pad, self._d), self._feat_dtype)])
+      rgids = gids[off:off + ab] if not pad else np.concatenate(
+          [gids[off:off + ab], np.full((pad,), -1, np.int32)])
+      rvalid = np.concatenate([np.ones((cb,), np.float32),
+                               np.zeros((pad,), np.float32)])
+      self._feats, self._gids, self._ub_hi, self._ub_lo = self._append_fn(
+          self._feats, self._gids, self._ub_hi, self._ub_lo,
+          rows, rgids, rvalid, jnp.int32(self._n))
+      self._n += cb
+
+    # every chunk landed: commit the id bookkeeping
+    if auto:
+      self._next_gid = start + b
+      if b:
+        if self._auto_ranges and self._auto_ranges[-1][1] == start:
+          self._auto_ranges[-1] = (self._auto_ranges[-1][0], start + b)
+        else:
+          self._auto_ranges.append((start, start + b))
+    else:
+      self._explicit_gids.update(int(g) for g in gids.tolist())
+      self._next_gid = max(self._next_gid, int(gids.max()) + 1 if b else 0)

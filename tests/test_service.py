@@ -54,6 +54,77 @@ def test_heartbeat_board_ages_and_fail():
 
 
 # ---------------------------------------------------------------------------
+# heartbeats from a real transport: the data pipeline's fetch cadence
+# ---------------------------------------------------------------------------
+
+
+def test_pipeline_fetch_beats_heartbeat():
+  """Every batch a consumer fetches acks its shard's liveness on the board
+  (ISSUE-5 satellite: HeartbeatBoard wired to a real signal)."""
+  from repro.data.pipeline import EmbeddedCorpus, batches_from_epochs
+  corpus = EmbeddedCorpus(n_docs=32, feat_dim=8, vocab=64, seq_len=4)
+  t = [100.0]
+  board = HeartbeatBoard(2, clock=lambda: t[0])
+  sel = np.arange(16)
+  g = batches_from_epochs(corpus, [sel, sel], 2, 3, board=board, shard=1)
+  t[0] = 150.0
+  next(g)
+  ages = board.ages()
+  assert ages[1] == 0.0 and ages[0] == 50.0   # only the consuming shard acks
+  t[0] = 170.0
+  next(g)
+  np.testing.assert_allclose(board.ages(), [70.0, 0.0])
+  # a consumer for the whole stream (shard=None) acks every shard
+  g_all = batches_from_epochs(corpus, [sel], 2, 1, board=board)
+  next(g_all)
+  np.testing.assert_allclose(board.ages(), [0.0, 0.0])
+
+
+def test_stalled_consumer_trips_liveness_collective(subrun):
+  """A trainer shard that stops pulling batches stops beating; its age
+  crosses the deadline and the next epoch's liveness collective masks it
+  out (EpochStats.alive) -- no operator-supplied straggler mask anywhere."""
+  out = subrun("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.data.pipeline import EmbeddedCorpus, batches_from_epochs
+from repro.service import SelectionService
+from repro.service.heartbeat import HeartbeatBoard
+from repro.util import make_mesh
+
+t = [0.0]
+mesh = make_mesh((4,), ("data",))
+svc = SelectionService(mesh, d=8, kappa=4, k_final=8, capacity=256,
+                       append_block=64, deadline=5.0, seed=0)
+svc.board = HeartbeatBoard(4, clock=lambda: t[0])
+corpus = EmbeddedCorpus(n_docs=64, feat_dim=8, vocab=64, seq_len=4)
+svc.append(np.asarray(corpus.features()))
+
+sel = np.arange(16)
+streams = [batches_from_epochs(corpus, [sel] * 8, 2, 8,
+                               board=svc.board, shard=i) for i in range(4)]
+for s in streams:            # every shard's consumer fetches: all beat
+  next(s)
+t[0] += 1.0
+r = svc.epoch()
+assert r.stats.alive.tolist() == [True] * 4, r.stats.alive
+# shard 3's consumer stalls; the rest keep fetching while time passes
+for _ in range(3):
+  t[0] += 3.0
+  for s in streams[:3]:
+    next(s)
+r = svc.epoch()
+assert r.stats.alive.tolist() == [True, True, True, False], r.stats.alive
+assert len(r.sel_gids) == 8
+# the stalled consumer resumes fetching: its next ack revives it
+next(streams[3])
+r = svc.epoch()
+assert r.stats.alive.tolist() == [True] * 4, r.stats.alive
+print("STALL_OK")
+""", n_devices=4)
+  assert "STALL_OK" in out
+
+
+# ---------------------------------------------------------------------------
 # warm-started lazy bounds: bit-identical on every monotone objective
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,320 @@
+"""Device-resident sharded CorpusStore + objective-generic bound maintainers
+(ISSUE 5).
+
+Layers:
+
+  * store-level: the resident block is genuinely device-placed and
+    mesh-sharded, the maintained sum-form table matches a host float64
+    reference, duplicate gids are rejected before any write, and capacity
+    growth migrates every buffer -- the bound table bit-exactly;
+  * registry-level: ``bound_maintainer_for`` hands out maintainers only for
+    (objective type, configuration) pairs whose validity argument holds;
+    everything else falls back to cold lazy selection;
+  * service-level: capacity growth preserves the warm == cold identity and
+    the O(log n) retrace budget; saturated-coverage warm starts select
+    exactly like cold runs across appends and growth (in-process and on a
+    4-shard mesh).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import objectives as O
+from repro.service import CorpusStore, SelectionService
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _feats(seed, n, d):
+  f = jax.random.normal(jax.random.PRNGKey(seed), (n, d))
+  return np.asarray(f / jnp.linalg.norm(f, axis=1, keepdims=True))
+
+
+def _mesh1():
+  from repro.util import make_mesh
+  return make_mesh((1,), ("data",))
+
+
+def _store(**kw):
+  base = dict(d=16, capacity=256, append_block=64,
+              maintainer=O.bound_maintainer_for(O.FacilityLocation()))
+  base.update(kw)
+  return CorpusStore(_mesh1(), **base)
+
+
+def _service(**kw):
+  base = dict(d=16, kappa=8, k_final=8, capacity=256, append_block=128)
+  base.update(kw)
+  return SelectionService(_mesh1(), **base)
+
+
+def _host_table(feats: np.ndarray) -> np.ndarray:
+  """Float64 reference: ubound[i] = sum_e relu(<e, i>) over live rows."""
+  f = feats.astype(np.float64)
+  return np.maximum(f @ f.T, 0.0).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# store level
+# ---------------------------------------------------------------------------
+
+
+def test_store_block_is_device_resident_and_sharded():
+  svc = _service()
+  svc.append(_feats(0, 200, 16))
+  st = svc.store
+  for arr in (st.feats, st.gids, st.ubound_device):
+    assert isinstance(arr, jax.Array)
+    assert isinstance(arr.sharding, NamedSharding)
+    assert arr.sharding.spec == P(("data",))
+  # idle epochs read the resident arrays by reference: nothing is copied,
+  # re-uploaded, or replaced between epochs
+  f0, g0, u0 = st.feats, st.gids, st.ubound_device
+  svc.epoch()
+  svc.epoch()
+  assert st.feats is f0 and st.gids is g0 and st.ubound_device is u0
+
+
+def test_store_table_matches_host_float64_reference():
+  f = _feats(1, 300, 16)
+  st = _store()
+  st.append(f[:100])
+  st.append(f[100:])                   # chunked: 64 + 36, then 64x3 + 8
+  live = np.asarray(st.gids) >= 0
+  assert live.sum() == 300
+  got = st.ubound[live]
+  want = _host_table(f)
+  np.testing.assert_allclose(got, want, rtol=2e-6, atol=1e-5)
+  # holes carry no mass
+  assert (st.ubound[~live] == 0.0).all()
+
+
+def test_store_append_transfers_fixed_chunks_without_retrace():
+  st = _store()
+  st.append(_feats(2, 40, 16))
+  t0 = st.write_trace_count
+  assert t0 == 1
+  for i in range(3, 6):
+    st.append(_feats(i, 50, 16))       # ragged sizes, same compiled writer
+  assert st.write_trace_count == t0    # appends never re-trace at fixed cap
+
+
+def test_store_duplicate_gids_rejected_before_write():
+  st = _store()
+  f = _feats(3, 80, 16)
+  st.append(f[:40])                                   # auto gids 0..39
+  st.append(f[40:60], gids=np.arange(1000, 1020))
+  snap_n, snap_ub = st.n_docs, st.ubound.copy()
+  # duplicates within one append
+  with pytest.raises(ValueError, match="within append"):
+    st.append(f[60:63], gids=np.array([7000, 7000, 7001]))
+  # duplicate of an explicitly-assigned existing id
+  with pytest.raises(ValueError, match="already in the corpus"):
+    st.append(f[60:62], gids=np.array([1005, 7000]))
+  # duplicate of an auto-assigned existing id
+  with pytest.raises(ValueError, match="already in the corpus"):
+    st.append(f[60:62], gids=np.array([3, 7000]))
+  # validation happens before any row is written: state is untouched
+  assert st.n_docs == snap_n
+  np.testing.assert_array_equal(st.ubound, snap_ub)
+  # and a clean append still works afterwards
+  st.append(f[60:], gids=np.arange(7000, 7020))
+  assert st.n_docs == 80
+
+
+def test_service_append_rejects_duplicate_gids():
+  """Regression (ISSUE 5 satellite): the service no longer silently accepts
+  duplicate explicit gids -- neither within an append nor against ids
+  already in the block."""
+  svc = _service()
+  f = _feats(4, 30, 16)
+  svc.append(f[:10])
+  with pytest.raises(ValueError):
+    svc.append(f[10:12], gids=np.array([50, 50]))
+  with pytest.raises(ValueError):
+    svc.append(f[10:12], gids=np.array([5, 60]))
+  svc.append(f[10:])
+  assert svc.n_docs == 30
+
+
+def test_store_growth_migrates_buffers_exactly():
+  f = _feats(5, 200, 16)
+  st = _store()
+  st.append(f)
+  cap0 = st.capacity
+  snap = (np.asarray(st.feats).copy(), np.asarray(st.gids).copy(),
+          st.ubound.copy())
+  st.reserve(1000)                     # 256 -> 512 -> 1024: two growths
+  assert st.growths == 2 and st.capacity == 1024
+  np.testing.assert_array_equal(np.asarray(st.feats)[:cap0], snap[0])
+  np.testing.assert_array_equal(np.asarray(st.gids)[:cap0], snap[1])
+  # the f64 bound view (double-float pair) survives growth BIT-exactly
+  np.testing.assert_array_equal(st.ubound[:cap0], snap[2])
+  assert (np.asarray(st.gids)[cap0:] == -1).all()
+  assert (st.ubound[cap0:] == 0.0).all()
+  # appends after growth still extend the same table consistently
+  st.append(f[:50] * 0.5)
+  live = np.asarray(st.gids) >= 0
+  assert live.sum() == 250
+
+
+# ---------------------------------------------------------------------------
+# maintainer registry
+# ---------------------------------------------------------------------------
+
+
+def test_bound_maintainer_registry_gates():
+  # registered types with valid configurations get the sum-form maintainer
+  assert O.bound_maintainer_for(O.FacilityLocation()) is not None
+  assert O.bound_maintainer_for(
+      O.FacilityLocation(kernel="rbf", kernel_kwargs=(("h", 1.0),)))
+  assert O.bound_maintainer_for(O.SaturatedCoverage()) is not None
+  # configurations breaking the validity argument fall back (None)
+  assert O.bound_maintainer_for(
+      O.FacilityLocation(kernel="neg_sq_dist")) is None
+  assert O.bound_maintainer_for(O.FacilityLocation(baseline=-0.5)) is None
+  # a non-negative baseline keeps relu(sim - b) <= relu(sim): still valid
+  assert O.bound_maintainer_for(O.FacilityLocation(baseline=0.2)) is not None
+  # unregistered objective types have no maintainer
+  assert O.bound_maintainer_for(O.GraphCut()) is None
+  assert O.bound_maintainer_for(O.InformationGain(k_max=4)) is None
+  assert O.bound_maintainer_for(O.Modular()) is None
+
+
+def test_service_without_maintainer_falls_back_cold():
+  """An objective configuration with no maintainer runs cold lazy (exact);
+  the service reports warm=False and keeps no table."""
+  f = _feats(6, 150, 16)
+  svc = _service(kernel="neg_sq_dist", warm_start=True)
+  assert not svc.warm
+  svc.append(f)
+  r = svc.epoch()
+  assert not r.stats.warm
+  assert (svc.store.ubound == 0.0).all()
+  # selections equal an explicitly-cold service
+  cold = _service(kernel="neg_sq_dist", warm_start=False)
+  cold.append(f)
+  assert r.sel_gids.tolist() == cold.epoch().sel_gids.tolist()
+
+
+# ---------------------------------------------------------------------------
+# service level: growth contract + saturated-coverage warm starts
+# ---------------------------------------------------------------------------
+
+
+def test_service_growth_contract_warm_equals_cold():
+  """ISSUE-5 satellite: grow mid-run under the device-resident store; the
+  bound table survives growth exactly, growths/retraces follow the O(log n)
+  contract, and warm == cold selections hold after the growth."""
+  f = _feats(7, 1200, 16)
+  sels = {}
+  for warm in (True, False):
+    svc = _service(seed=5, warm_start=warm)       # capacity 256
+    svc.append(f[:200])
+    out = [svc.epoch().sel_gids.tolist()]
+    svc.append(f[200:1200])                       # 256 -> 2048: three growths
+    assert svc.growths == 3 and svc.capacity == 2048
+    # isolate a pure growth (no append riding along): the f64 table view
+    # must survive the buffer migration bit-exactly
+    ub1 = svc.store.ubound.copy()
+    svc.store.reserve(4096)
+    assert svc.growths == 4
+    np.testing.assert_array_equal(svc.store.ubound[:2048], ub1)
+    out += [svc.epoch().sel_gids.tolist() for _ in range(2)]
+    # one epoch-fn trace per capacity actually selected at: 256 then 4096
+    assert svc.retrace_count == 2
+    assert svc.retrace_count <= 1 + svc.growths
+    # the row writer compiled once per capacity it wrote at
+    assert svc.store.write_trace_count <= 1 + svc.growths
+    sels[warm] = out
+  assert sels[True] == sels[False]
+  assert len(sels[True][-1]) == 8
+
+
+def test_service_satcov_warm_equals_cold_across_append_and_growth():
+  """Saturated coverage through the same maintainer: warm-started epochs
+  select bit-identically to cold across an append and a capacity growth."""
+  f = np.abs(_feats(8, 600, 16))       # nonneg coverage mass
+  sels = {}
+  for warm in (True, False):
+    svc = _service(seed=9, warm_start=warm, objective="saturated_coverage")
+    assert svc.warm == (warm and True)
+    svc.append(f[:250])
+    out = [svc.epoch().sel_gids.tolist()]
+    svc.append(f[250:])                # 256 -> 1024: capacity growth
+    assert svc.growths == 2
+    out += [svc.epoch().sel_gids.tolist() for _ in range(2)]
+    sels[warm] = out
+  assert sels[True] == sels[False]
+  assert len(sels[True][-1]) == 8
+
+
+def test_service_satcov_restart_determinism():
+  f = np.abs(_feats(9, 400, 16))
+  runs = []
+  for _ in range(2):
+    svc = _service(seed=4, objective="saturated_coverage")
+    svc.append(f[:300])
+    sels = [svc.epoch().sel_gids.tolist()]
+    svc.append(f[300:])
+    sels.append(svc.epoch().sel_gids.tolist())
+    runs.append(sels)
+  assert runs[0] == runs[1]
+
+
+# ---------------------------------------------------------------------------
+# sharded: the distributed append pass + 4-shard satcov warm start
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_store_and_satcov_service(subrun):
+  """On a 4-device mesh: (a) the mesh-sharded (append_block x capacity)
+  bound pass reproduces the single-device table (f32 psum-order tolerance)
+  and the host f64 reference; (b) a saturated-coverage service warm-starts
+  across an append with selections identical to cold."""
+  out = subrun("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import objectives as O
+from repro.service import CorpusStore, SelectionService
+from repro.util import make_mesh
+
+f = np.asarray(jax.random.normal(jax.random.PRNGKey(0), (300, 16)),
+               np.float32)
+f = f / np.linalg.norm(f, axis=1, keepdims=True)
+maint = O.bound_maintainer_for(O.FacilityLocation())
+
+mesh4 = make_mesh((4,), ("data",))
+mesh1 = make_mesh((1,), ("data",))
+tables = {}
+for name, mesh in (("m4", mesh4), ("m1", mesh1)):
+  st = CorpusStore(mesh, d=16, capacity=256, append_block=64,
+                   maintainer=maint)
+  st.append(f[:120])
+  st.append(f[120:])
+  live = np.asarray(st.gids) >= 0
+  assert live.sum() == 300, live.sum()
+  tables[name] = st.ubound[live]
+np.testing.assert_allclose(tables["m4"], tables["m1"], rtol=1e-5, atol=1e-5)
+want = np.maximum(f.astype(np.float64) @ f.astype(np.float64).T, 0.0).sum(0)
+np.testing.assert_allclose(tables["m4"], want, rtol=2e-6, atol=1e-5)
+print("TABLE_OK")
+
+fa = np.abs(f)
+sels = {}
+for warm in (True, False):
+  svc = SelectionService(mesh4, d=16, kappa=4, k_final=8, capacity=512,
+                         append_block=64, seed=2, warm_start=warm,
+                         objective="saturated_coverage")
+  svc.append(fa[:200])
+  out = [svc.epoch().sel_gids.tolist()]
+  svc.append(fa[200:])
+  out.append(svc.epoch().sel_gids.tolist())
+  assert svc.retrace_count == 1, svc.retrace_count
+  sels[warm] = out
+assert sels[True] == sels[False], sels
+print("SATCOV_OK")
+""", n_devices=4)
+  assert "TABLE_OK" in out
+  assert "SATCOV_OK" in out
