@@ -23,7 +23,7 @@ def main() -> None:
   from benchmarks import (common, fig4_exemplar, fig6_active_set,
                           fig8_speedup, fig9_maxcut, fig10_coverage,
                           kernels_bench, roofline, select_step,
-                          service_epochs, store_transfer)
+                          service_epochs, sieve_query, store_transfer)
 
   if args.json:
     common.start_collection()
@@ -38,6 +38,7 @@ def main() -> None:
       "roofline": lambda: roofline.run(quick=args.quick),
       "select_step": lambda: select_step.run(quick=args.quick),
       "service_epochs": lambda: service_epochs.run(quick=args.quick),
+      "sieve_query": lambda: sieve_query.run(quick=args.quick),
       "store_transfer": lambda: store_transfer.run(quick=args.quick),
   }
   names = [args.only] if args.only else list(suites)

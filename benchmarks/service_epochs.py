@@ -53,8 +53,14 @@ def run(quick: bool = False) -> None:
     shapes = {"n": n, "d": D, "kappa": KAPPA, "k_final": K_FINAL}
     times, sels = {}, {}
     for warm in (False, True):
+      # sieve=False: this suite gates the warm-bound machinery, so both
+      # arms must run identical per-epoch work.  Without it only the warm
+      # arm would pay the standing-sieve reset (warm_start=False disables
+      # the maintainer and with it the sieves), skewing the ratio; the
+      # sieve path has its own BENCH_6.json trajectory.
       svc = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
-                             capacity=n, seed=0, warm_start=warm)
+                             capacity=n, seed=0, warm_start=warm,
+                             sieve=False)
       svc.append(feats)
       sels[warm] = svc.epoch().sel_gids.tolist()  # compiles + settles
       times[warm] = _epoch_time_s(svc)

@@ -1,0 +1,119 @@
+"""Standing-sieve query benchmark: select-on-append vs epoch-only freshness
+(the BENCH_6.json trajectory of ISSUE 6).
+
+One service ingests the first half of a near-duplicate corpus, runs an
+epoch, then streams the second half in blocks.  After every block it
+answers "give me k representatives NOW" two ways:
+
+  * ``query`` -- the standing threshold sieves, merged on device in O(k)
+    host work, fresh after the append (the select-on-append path);
+  * ``epoch-stale`` -- the epoch-only service's answer: the LAST epoch's
+    selection, which has not seen any streamed block.
+
+Both selections are scored with the same host-side facility-location value
+over the full current corpus, so the staleness-vs-quality curve is an
+apples-to-apples f ratio.  The latency entry compares a steady-state query
+against a full (warm, already-compiled) epoch at final corpus size.
+
+Emitted entries (gated ones contain "speedup"; check_regression.py):
+
+  * ``sieve_query/query_n*`` / ``sieve_query/epoch_n*`` -- microseconds;
+  * ``sieve_query/speedup_query_vs_epoch_n*`` -- epoch_us / query_us, the
+    dimensionless machine-portable latency ratio the CI gate watches;
+  * ``sieve_query/quality_q{b}_n*`` -- f(query) / f(stale epoch) after
+    each streamed block b (>= 1 when freshness wins, as it should on the
+    near-dup stream where new clusters keep arriving);
+  * ``sieve_query/quality_final_vs_fresh_n*`` -- f(query) / f(fresh
+    epoch) at the end: how much protocol quality the O(k) answer gives up.
+
+The run also asserts the ISSUE-6 acceptance bound f(query) >= 0.5 x
+f(last epoch selection) at every block, and the transfer contract (one
+writer trace, one query-merge trace, O(k) outputs).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, near_dup_corpus
+
+D, KAPPA, K_FINAL, BLOCKS, QUERY_REPS = 32, 16, 16, 4, 5
+
+
+def _f_value(feats: np.ndarray, gids: np.ndarray) -> float:
+  """Host float64 facility-location value of a selection over ``feats``."""
+  sims = feats.astype(np.float64) @ feats[gids].astype(np.float64).T
+  return float(np.maximum(sims, 0.0).max(axis=1).mean())
+
+
+def _query_time_s(svc) -> float:
+  ts = []
+  for _ in range(QUERY_REPS):
+    t0 = time.perf_counter()
+    svc.query()
+    ts.append(time.perf_counter() - t0)
+  return min(ts)
+
+
+def run(quick: bool = False) -> None:
+  from repro.service import SelectionService
+  from repro.util import make_mesh
+
+  mesh = make_mesh((1,), ("data",))
+  ns = (4096,) if quick else (4096, 16384)
+  for n in ns:
+    feats = np.asarray(near_dup_corpus(n, D, seed=0))
+    n0 = n // 2
+    block = (n - n0) // BLOCKS
+    shapes = {"n": n, "d": D, "kappa": KAPPA, "k_final": K_FINAL,
+              "stream_blocks": BLOCKS}
+    svc = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
+                           capacity=n, seed=0)
+    svc.append(feats[:n0])
+    r0 = svc.epoch()                       # compiles + seeds the sieves
+    stale_sel = r0.sel_gids
+
+    ratios = []
+    for b in range(BLOCKS):
+      lo = n0 + b * block
+      hi = n if b == BLOCKS - 1 else lo + block
+      svc.append(feats[lo:hi])
+      q = svc.query()
+      assert q.source == "sieve" and len(q.sel_gids) > 0
+      cur = feats[:hi]
+      f_query = _f_value(cur, q.sel_gids)
+      f_stale = _f_value(cur, stale_sel)
+      assert f_query >= 0.5 * f_stale, (n, b, f_query, f_stale)
+      ratios.append(f_query / f_stale)
+      emit(f"sieve_query/quality_q{b}_n{n}", f_query / f_stale,
+           derived="f_query_over_f_stale_epoch", shapes=shapes)
+
+    # transfer contract at steady state: the whole stream traced the writer
+    # once and the query merge once; answers moved only (k,) ids + scores
+    assert svc.store.write_trace_count == 1, svc.store.write_trace_count
+    assert svc.store.query_trace_count == 1, svc.store.query_trace_count
+
+    t_query = _query_time_s(svc)
+    r1 = svc.epoch()                       # fresh protocol run, full corpus
+    t_epoch = min(svc.epoch().stats.wall_s for _ in range(3))
+    f_fresh = _f_value(feats, r1.sel_gids)
+    q_final = svc.query()                  # epoch-fresh: exact answer
+    emit(f"sieve_query/query_n{n}", t_query * 1e6,
+         derived="us_per_query", shapes=shapes)
+    emit(f"sieve_query/epoch_n{n}", t_epoch * 1e6,
+         derived="us_per_epoch", shapes=shapes)
+    emit(f"sieve_query/speedup_query_vs_epoch_n{n}", t_epoch / t_query,
+         derived="x_epoch_over_query", shapes=shapes)
+    # how much protocol quality the O(k) sieve answer gave up at the end
+    svc2 = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
+                            capacity=n, seed=0)
+    svc2.append(feats[:n0])
+    svc2.epoch()
+    svc2.append(feats[n0:])
+    q2 = svc2.query()
+    emit(f"sieve_query/quality_final_vs_fresh_n{n}",
+         _f_value(feats, q2.sel_gids) / f_fresh,
+         derived="f_query_over_f_fresh_epoch", shapes=shapes)
+    print(f"# n={n}: query {t_query*1e3:.2f}ms vs epoch {t_epoch*1e3:.1f}ms,"
+          f" staleness ratios {[round(r, 3) for r in ratios]}")

@@ -64,8 +64,13 @@ def _child(ns: tuple[int, ...]) -> None:
     shapes = {"n": n, "d": D, "kappa": KAPPA, "k_final": K_FINAL,
               "append_block": AB, "mesh": NDEV}
     feats = np.asarray(near_dup_corpus(n, D, seed=0))
+    # sieve=False: this suite measures the PLACEMENT of the bound pass
+    # (host-fed vs device-resident), so both sides must run identical work
+    # -- the PR-4 host emulation below has no standing sieves.  The sieve
+    # admission cost that rides the device append is measured separately
+    # (informational sieve_append_overhead entry at the end).
     svc = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
-                           capacity=n, append_block=AB, seed=0)
+                           capacity=n, append_block=AB, seed=0, sieve=False)
     svc.append(feats)
     svc.epoch()                            # compile + settle
 
@@ -99,7 +104,7 @@ def _child(ns: tuple[int, ...]) -> None:
     chunk = np.asarray(near_dup_corpus(AB, D, seed=1))
     cap = n + (APPEND_REPS + 2) * AB
     svc = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
-                           capacity=cap, append_block=AB, seed=0)
+                           capacity=cap, append_block=AB, seed=0, sieve=False)
     svc.append(feats)
 
     def dev_append():
@@ -152,6 +157,27 @@ def _child(ns: tuple[int, ...]) -> None:
                 "us_per_append", shapes)
     _emit_child(f"store_transfer/speedup_append_n{n}",
                 t_host_app / t_dev_app, "x_host_over_device", shapes)
+
+    # informational (ungated; no "speedup" in the name): what the standing
+    # sieves add to a device append.  The admission scan is sequential in
+    # append_block, so CPU pays it in wall time; on a fused accelerator
+    # pass the (T x k) bucket updates ride the same pass as bound_update.
+    svc_s = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
+                             capacity=cap, append_block=AB, seed=0)
+    svc_s.append(feats)
+
+    def dev_append_sieve():
+      svc_s.append(chunk)
+      jax.block_until_ready(svc_s.store.ubound_device)
+
+    ts = []
+    dev_append_sieve()                     # compile once
+    for _ in range(APPEND_REPS):
+      t0 = time.perf_counter()
+      dev_append_sieve()
+      ts.append(time.perf_counter() - t0)
+    _emit_child(f"store_transfer/sieve_append_overhead_n{n}",
+                min(ts) / t_dev_app, "x_sieve_over_plain_append", shapes)
 
 
 def run(quick: bool = False) -> None:

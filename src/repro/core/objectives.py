@@ -686,8 +686,16 @@ class SumFormBoundMaintainer:
   ``min(relu(sim), cap_e)`` is capped *below* relu(sim) regardless of the
   partition-dependent saturation level, so the identical relu-sum table is a
   valid bound there too -- one maintainer, two objectives.
+
+  ``supports_sieve``: the same sum-form machinery powers the store's
+  standing threshold sieves (select-on-append): the psum-reduced ``sums``
+  of ``append_update`` ARE each new document's standing singleton gain, so
+  sieve admission rides the bound pass at zero extra collectives.  A
+  maintainer without sum-form singleton gains leaves the service epoch-only
+  (``query`` falls back to the last epoch's selection).
   """
   oracle: str = "bound_update"
+  supports_sieve: bool = True
 
   def supports(self, objective: Any) -> bool:
     """Whether this maintainer's validity argument holds for ``objective``:

@@ -34,6 +34,11 @@ registry carries two more families:
     service's ``CorpusStore`` (one fused (new x block) sweep -> per-column
     credit + per-row sums), built on ``pairwise`` so it shards by handing
     each mesh shard its local block columns (service/store.py);
+  * ``sieve_update`` -- streaming threshold-sieve admission over an append
+    chunk (the standing select-on-append state behind
+    ``SelectionService.query``): two fused ``pairwise`` sweeps hoist all
+    similarity work out of a bookkeeping-only scan (kernels/ops.py, ground
+    truth ``ref.sieve_admit_ref``);
   * ``select`` oracles (``register_select``/``resolve_select``) -- the fused
     in-kernel top-1 reductions of select_top1.py returning (best_gain,
     best_idx) directly, so the greedy select step is one kernel pass with no

@@ -276,6 +276,79 @@ def bound_update(new_rows: Array, block_feats: Array, new_valid: Array,
   return jnp.sum(s, axis=0), jnp.sum(s, axis=1)
 
 
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "force_xla"))
+def sieve_update(rows: Array, gains: Array, rgids: Array, active: Array,
+                 tau: Array, sieve_gid: Array, sieve_gain: Array,
+                 sieve_feat: Array, sieve_count: Array, *,
+                 kernel: str = "linear", h: float = 0.75,
+                 force_xla: bool = False):
+  """Streaming threshold-sieve admission over one append chunk.
+
+  Replays ``ref.sieve_admit_ref`` for every chunk row IN ORDER (the stream
+  semantics of sieve-streaming: item i's redundancy is measured against the
+  buckets as updated by items 0..i-1, including intra-chunk admissions) --
+  but all similarity work is hoisted OUT of the sequential part: one fused
+  ``pairwise`` sweep of the chunk against the standing members (ab, T*k) and
+  one of the chunk against itself (ab, ab), so the scan body is pure
+  gather/mask/scatter bookkeeping.  Cost per chunk is O(ab * (T*k + ab) * d)
+  similarity flops -- the same order as the ``bound_update`` pass this rides
+  along with -- regardless of how many admissions happen.
+
+  Args:
+    rows: (ab, d) chunk feature rows.
+    gains: (ab,) standing sum-form singleton gains of the chunk rows (the
+      ``sums`` output of the ``bound_update`` pass, already psum-reduced).
+    rgids: (ab,) int32 chunk gids (-1 = chunk padding).
+    active: (ab,) bool -- rows this shard's sieve should consider (valid AND
+      landing in this shard's slice AND a usable threshold grid exists).
+    tau: (T,) per-bucket admission thresholds.
+    sieve_gid / sieve_gain / sieve_feat / sieve_count: this shard's standing
+      sieve state -- (T, k) int32 / (T, k) f32 / (T, k, d) f32 / (T,) int32.
+
+  Returns the four updated sieve arrays.
+  """
+  ab, d = rows.shape
+  t, k = sieve_gid.shape
+  s_pre = pairwise(rows, sieve_feat.reshape(t * k, d), kernel=kernel, h=h,
+                   force_xla=force_xla)                       # (ab, t*k)
+  s_intra = pairwise(rows, rows, kernel=kernel, h=h,
+                     force_xla=force_xla)                     # (ab, ab)
+  if kernel == "linear":
+    rsq = jnp.maximum(jnp.sum(rows.astype(jnp.float32) ** 2, axis=-1), 1e-12)
+    msq_pre = jnp.maximum(
+        jnp.sum(sieve_feat.astype(jnp.float32) ** 2, axis=-1), 1e-12)
+
+  def step(carry, i):
+    gid_b, gain_b, src, cnt = carry
+    live = jnp.arange(k)[None, :] < cnt[:, None]
+    # slot similarity: intra-chunk members (src >= 0) read the chunk-self
+    # sweep, standing members the pre-chunk sweep
+    safe = jnp.maximum(src, 0)
+    sim = jnp.where(src >= 0, s_intra[i, safe],
+                    s_pre[i].reshape(t, k))
+    if kernel == "linear":
+      msq = jnp.where(src >= 0, rsq[safe], msq_pre)
+      red = jnp.maximum(sim, 0.0) / jnp.sqrt(rsq[i] * msq)
+    else:  # rbf: sim(v, v) == 1 and sim already lands in [0, 1]
+      red = sim
+    red = jnp.max(jnp.where(live, red, 0.0), axis=1)          # (t,)
+    score = gains[i] * jnp.maximum(1.0 - red, 0.0)
+    admit = active[i] & (score >= tau) & (cnt < k) & (rgids[i] >= 0)
+    slot = jnp.where(admit, cnt, k)                           # k = dropped
+    rws = jnp.arange(t)
+    gid_b = gid_b.at[rws, slot].set(rgids[i], mode="drop")
+    gain_b = gain_b.at[rws, slot].set(score, mode="drop")
+    src = src.at[rws, slot].set(i, mode="drop")
+    return (gid_b, gain_b, src, cnt + admit.astype(cnt.dtype)), ()
+
+  src0 = jnp.full((t, k), -1, jnp.int32)
+  (sieve_gid, sieve_gain, src, sieve_count), _ = jax.lax.scan(
+      step, (sieve_gid, sieve_gain, src0, sieve_count), jnp.arange(ab))
+  sieve_feat = jnp.where((src >= 0)[..., None],
+                         rows[jnp.maximum(src, 0)], sieve_feat)
+  return sieve_gid, sieve_gain, sieve_feat, sieve_count
+
+
 @functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
                                              "block_k", "force_xla"))
 def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
@@ -320,6 +393,11 @@ dispatch.register("pairwise", pallas=pairwise,
 # bound-update entry point of the selection service's CorpusStore
 dispatch.register("bound_update", pallas=bound_update,
                   ref=functools.partial(bound_update, force_xla=True))
+# streaming threshold-sieve admission over an append chunk: the standing
+# select-on-append state behind SelectionService.query (service/store.py);
+# per-item ground truth in ref.sieve_admit_ref
+dispatch.register("sieve_update", pallas=sieve_update,
+                  ref=functools.partial(sieve_update, force_xla=True))
 
 # fused select-step oracles (in-kernel top-1; see select_top1.py)
 dispatch.register_select("facility_gain", pallas=facility_select,

@@ -138,6 +138,69 @@ def graph_cut_select_ref(w: Array, in_s: Array, node_ok: Array):
   return masked_top1(graph_cut_gain_ref(w, in_s), node_ok)
 
 
+# ---------------------------------------------------------------------------
+# threshold-sieve admission: the streaming select-on-append oracle
+# (ground truth for the chunk-vectorized ``sieve_update`` in ops.py)
+# ---------------------------------------------------------------------------
+
+
+def sieve_redundancy_ref(v: Array, members: Array, live: Array, *,
+                         kernel: str = "linear", h: float = 0.75) -> Array:
+  """Normalized redundancy of item ``v`` (d,) against each sieve bucket.
+
+  ``members`` is the (T, k, d) per-bucket member block, ``live`` its (T, k)
+  bool occupancy.  Returns (T,) in [0, 1]: the max over live members of
+  ``relu(sim(v, s)) / sqrt(sim(v, v) * sim(s, s))`` -- Cauchy-Schwarz for
+  PSD similarity kernels caps the ratio at 1 (an exact duplicate scores 1,
+  an orthogonal item 0).  Empty buckets score 0.
+  """
+  t, k, d = members.shape
+  sim = _sim(v[None].astype(jnp.float32),
+             members.reshape(t * k, d).astype(jnp.float32),
+             kernel, h)[0].reshape(t, k)
+  if kernel == "linear":
+    vsq = jnp.maximum(jnp.sum(v.astype(jnp.float32) ** 2), 1e-12)
+    msq = jnp.maximum(jnp.sum(members.astype(jnp.float32) ** 2, axis=-1),
+                      1e-12)
+    red = jnp.maximum(sim, 0.0) / jnp.sqrt(vsq * msq)
+  else:  # rbf: sim(v, v) == 1, sim already in [0, 1]
+    red = sim
+  return jnp.max(jnp.where(live, red, 0.0), axis=1)
+
+
+def sieve_admit_ref(v: Array, gain: Array, gid: Array, active: Array,
+                    tau: Array, sieve_gid: Array, sieve_gain: Array,
+                    sieve_feat: Array, sieve_count: Array, *,
+                    kernel: str = "linear", h: float = 0.75):
+  """ONE streaming admission step -- the per-item ground truth semantics the
+  chunk-vectorized ``ops.sieve_update`` must replay row by row.
+
+  Item ``v`` (d,) with standing singleton gain ``gain`` () and id ``gid``
+  () is offered to every threshold bucket: its admission score is the
+  redundancy-discounted singleton gain
+
+      score_t = gain * relu(1 - redundancy(v, bucket_t))
+
+  and bucket t admits iff ``active`` (the item lands on this shard),
+  ``score_t >= tau[t]``, the bucket has a free slot, and ``gid >= 0``.
+  Admitted items land in slot ``count_t`` with their score as the recorded
+  gain.  Returns the updated (sieve_gid, sieve_gain, sieve_feat,
+  sieve_count).
+  """
+  t, k = sieve_gid.shape
+  live = jnp.arange(k)[None, :] < sieve_count[:, None]
+  red = sieve_redundancy_ref(v, sieve_feat, live, kernel=kernel, h=h)
+  score = gain * jnp.maximum(1.0 - red, 0.0)
+  admit = (active & (score >= tau) & (sieve_count < k) & (gid >= 0))
+  slot = jnp.where(admit, sieve_count, k)          # k = dropped
+  rows = jnp.arange(t)
+  sieve_gid = sieve_gid.at[rows, slot].set(gid, mode="drop")
+  sieve_gain = sieve_gain.at[rows, slot].set(score, mode="drop")
+  sieve_feat = sieve_feat.at[rows, slot].set(v[None, :], mode="drop")
+  return (sieve_gid, sieve_gain, sieve_feat,
+          sieve_count + admit.astype(sieve_count.dtype))
+
+
 def mha_ref(q: Array, k: Array, v: Array, *, causal: bool = True,
             scale: float | None = None) -> Array:
   """Reference GQA attention. q: (B, H, Lq, dh); k, v: (B, Hkv, Lk, dh)."""

@@ -64,6 +64,11 @@ def main() -> None:
   ap.add_argument("--append-frac", type=float, default=0.0,
                   help="service mode: fraction of the corpus appended only "
                   "after the first epoch (streaming ingest)")
+  ap.add_argument("--query-every", type=int, default=0,
+                  help="service mode: stream the held-back --append-frac "
+                  "rows in blocks of this size and run service.query() "
+                  "after each block (the standing-sieve select-on-append "
+                  "path), printing per-query latency and value")
   ap.add_argument("--cold", action="store_true",
                   help="service mode: disable warm-started lazy bounds")
   ap.add_argument("--deadline", type=float, default=None,
@@ -114,7 +119,19 @@ def main() -> None:
             f"{'warm' if s.warm else 'cold'}, {s.wall_s:.2f}s, "
             f"traces={s.retraces}")
       if e == 0 and n0 < args.n:
-        svc.append(feats_np[n0:])
+        if args.query_every:
+          # stream the held-back rows in blocks, answering "give me k NOW"
+          # after each append from the standing sieves -- no protocol run
+          for boff in range(n0, args.n, args.query_every):
+            svc.append(feats_np[boff:boff + args.query_every])
+            q = svc.query()
+            print(f"[select] query after {svc.n_docs} docs: "
+                  f"{len(q.sel_gids)} ids from {q.source}, "
+                  f"est={q.value_estimate:.4f}, "
+                  f"stale_appends={q.appends_since_epoch}, "
+                  f"{q.wall_s * 1e3:.1f}ms")
+        else:
+          svc.append(feats_np[n0:])
         print(f"[select] appended {args.n - n0} docs mid-stream")
     sel = res.sel_gids
     # the coverage baseline below must score the features selection ran on

@@ -111,6 +111,24 @@ class EpochResult(NamedTuple):
   raw: Any              # the full replicated GreediResult
 
 
+class QueryResult(NamedTuple):
+  """Answer of ``SelectionService.query`` -- fresh after every append.
+
+  ``value_estimate`` is the sieve's own surrogate (sum of admission-time
+  redundancy-discounted singleton gains, mean-normalized); it lower-bounds
+  the selection's marginal structure but is NOT f(selection) -- compare
+  selections through the objective when exactness matters (docs/service.md).
+  """
+  sel_gids: np.ndarray  # selected ids, filtered (no -1 padding)
+  value_estimate: float  # sieve surrogate value (see above); exact f for
+                         # ``source == "epoch"`` answers
+  source: str            # "sieve" (standing buckets) | "epoch" (last epoch)
+  appends_since_epoch: int  # appends since the last epoch refinement: a
+                         # "sieve" answer folds them in at sieve fidelity,
+                         # an "epoch" answer does not reflect them at all
+  wall_s: float          # host wall-clock of the query
+
+
 class SelectionService:
   """Multi-epoch sharded GreeDi over a device-resident growing ground set.
 
@@ -148,14 +166,14 @@ class SelectionService:
                axis_names: tuple[str, ...] = ("data",), mode: str = "lazy",
                warm_start: bool = True, deadline: float | None = None,
                seed: int = 0, append_block: int = 1024,
-               feat_dtype=np.float32, objective: str | Any = "facility"):
+               feat_dtype=np.float32, objective: str | Any = "facility",
+               sieve: bool = True):
     self.mesh = mesh
     self._axis_names = axis_names
     self._m = GD._mesh_size(mesh, axis_names)
     self._d = d
     self._kappa = kappa
     self._k_final = k_final
-    self._backend = backend
     self._mode = mode
     self._deadline = deadline
     if isinstance(objective, str):
@@ -165,19 +183,29 @@ class SelectionService:
       objective = _OBJECTIVES[objective](kernel=kernel,
                                          kernel_kwargs=kernel_kwargs)
     self._objective = objective
-    # the store's bound pass must match the objective's similarity
+    # the store's bound pass and the epoch protocol must match the
+    # objective's configuration: similarity kernel AND oracle backend.  A
+    # passed instance's ``backend`` wins whenever the service-level arg is
+    # left at None (previously it was silently dropped, so the bound pass
+    # could run a different oracle backend than the objective's gain loop).
     kernel = getattr(objective, "kernel", kernel)
     kernel_kwargs = getattr(objective, "kernel_kwargs", kernel_kwargs)
+    if backend is None:
+      backend = getattr(objective, "backend", None)
+    self._backend = backend
     self._maintainer = (O.bound_maintainer_for(objective)
                         if warm_start and mode == "lazy" else None)
     self._warm = self._maintainer is not None
     self._key = jax.random.PRNGKey(seed)
     self._epoch_idx = 0
     self._trace_count = 0
+    self._appends_since_epoch = 0
+    self._last_epoch: EpochResult | None = None
     self.store = CorpusStore(
         mesh, d=d, capacity=capacity, append_block=append_block,
         axis_names=axis_names, kernel=kernel, kernel_kwargs=kernel_kwargs,
-        backend=backend, maintainer=self._maintainer, feat_dtype=feat_dtype)
+        backend=backend, maintainer=self._maintainer,
+        sieve_k=k_final if sieve else 0, feat_dtype=feat_dtype)
     self.board = HeartbeatBoard(self._m)
     self._compile()
 
@@ -240,6 +268,16 @@ class SelectionService:
     return self._warm
 
   @property
+  def sieve_enabled(self) -> bool:
+    """Whether the store keeps standing threshold sieves (select-on-append),
+    i.e. ``query`` answers fresh after every append."""
+    return self.store.sieve_enabled
+
+  @property
+  def appends_since_epoch(self) -> int:
+    return self._appends_since_epoch
+
+  @property
   def objective(self):
     return self._objective
 
@@ -263,7 +301,43 @@ class SelectionService:
     that keeps the carried bounds valid (docs/service.md).  Duplicate
     explicit gids raise ``ValueError`` before anything is written.
     """
+    n_before = self.store.n_docs
     self.store.append(feats, gids)
+    if self.store.n_docs > n_before:
+      self._appends_since_epoch += 1
+
+  def query(self, k: int | None = None) -> QueryResult:
+    """Answer "give me k representatives NOW" without running the protocol.
+
+    Freshness contract (docs/service.md): with the standing sieve enabled
+    (sum-form maintainer objectives), the answer reflects EVERY append so
+    far -- the store merges its threshold buckets on device and only the
+    (k,) winners cross D2H, so host work is O(k) and the corpus block is
+    never touched.  When nothing was appended since the last epoch, the
+    epoch's (exact-protocol) selection is returned directly.  Without a
+    sieve the last epoch's selection is the best available answer (stale by
+    ``appends_since_epoch`` appends).  Greedy prefixes are nested, so any
+    ``k <= k_final`` reuses the same compiled merge.
+    """
+    k = self._k_final if k is None else int(k)
+    if not 0 < k <= self._k_final:
+      raise ValueError(f"k must be in (0, {self._k_final}], got {k}")
+    t0 = time.perf_counter()
+    stale = self._appends_since_epoch
+    if self._last_epoch is not None and (
+        stale == 0 or not self.store.sieve_enabled):
+      le = self._last_epoch
+      return QueryResult(le.sel_gids[:k], float(le.stats.value), "epoch",
+                         stale, time.perf_counter() - t0)
+    if not self.store.sieve_enabled:
+      raise RuntimeError(
+          "query() needs a standing sieve (an objective with a sum-form "
+          "BoundMaintainer) or at least one completed epoch")
+    gids, scores = self.store.query_sieves()
+    sel = gids[:k]
+    sel = sel[sel >= 0]
+    val = float(scores[:k].sum()) / max(self.store.n_docs, 1)
+    return QueryResult(sel, val, "sieve", stale, time.perf_counter() - t0)
 
   def epoch(self, rng: Array | None = None) -> EpochResult:
     """Run one selection epoch: re-partition, select, stream ids + stats.
@@ -278,19 +352,34 @@ class SelectionService:
     ages = jnp.asarray(self.board.ages(), jnp.float32)
     deadline = jnp.asarray(
         np.inf if self._deadline is None else self._deadline, jnp.float32)
+    # "warm" must mean warm bounds were actually THREADED with signal: a
+    # configured-warm service whose table is still all zeros (cold start,
+    # zero corpus) ran this epoch effectively cold -- report that, so
+    # dashboards don't misread cold epochs as warm
+    warm_eff = self._warm and self.store.bounds_populated
     t0 = time.perf_counter()
     r = self._epoch_fn(self.store.feats, self.store.gids,
                        self.store.ubound_device, ages, deadline, rng)
     jax.block_until_ready(r)
     wall = time.perf_counter() - t0
-    sel = np.asarray(r.sel_gids)[np.asarray(r.sel_valid)]
-    sel = sel[sel >= 0]
+    sv = np.asarray(r.sel_valid)
+    sel = np.asarray(r.sel_gids)[sv]
+    sel_feats = np.asarray(r.sel_feats)[sv]
+    keep = sel >= 0
+    sel, sel_feats = sel[keep], sel_feats[keep]
     stats = EpochStats(epoch=self._epoch_idx, n_live=self.store.n_docs,
                        capacity=self.store.capacity, value=float(r.value),
-                       alive=np.asarray(r.alive), warm=self._warm,
+                       alive=np.asarray(r.alive), warm=warm_eff,
                        wall_s=wall, retraces=self._trace_count)
     self._epoch_idx += 1
-    return EpochResult(sel, stats, r)
+    result = EpochResult(sel, stats, r)
+    # epoch output seeds the fresh sieve grid: queries between epochs start
+    # from (at least) the refined selection, and the threshold grid is
+    # re-derived from the whole corpus' standing gains
+    self.store.reset_sieves(sel_feats, sel)
+    self._appends_since_epoch = 0
+    self._last_epoch = result
+    return result
 
   def selections(self, n_epochs: int) -> Iterator[np.ndarray]:
     """Yield ``sel_gids`` for ``n_epochs`` epochs -- the iterator shape

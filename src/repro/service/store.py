@@ -22,7 +22,22 @@ Transfer accounting (what actually crosses H2D; docs/service.md):
     scalars (rng key, heartbeat ages, deadline).
   * growth      -- capacity doubles in place on device (pad + reshard), the
     O(log n) re-compile of the growth contract.  No host round-trip, and
-    the bound table is preserved bit-exactly (tested).
+    the bound table is preserved bit-exactly (tested).  Sieve state has a
+    capacity-independent shape and migrates bit-exactly for free (tested).
+  * ``query``   -- nothing from the corpus block: the standing sieve state
+    merges on device and only the (k,) winners + scores cross D2H.
+
+Select-on-append (the sieve): when the maintainer supports it (sum-form
+relu tables, ``supports_sieve``), each shard additionally keeps
+``n_thresholds = O(log Delta / eps)`` threshold buckets of up to
+``sieve_k`` members -- fixed-shape device state row-sharded like the bound
+table -- admitting new rows *inside the same fused append pass* via the
+``sieve_update`` oracle.  The admission score is the redundancy-discounted
+standing singleton gain (see ``kernels/ref.sieve_admit_ref``); the
+geometric threshold grid tracks the running max singleton gain Delta and
+re-grids by rolling buckets down when Delta grows.  ``query_sieves`` merges
+the standing buckets on device (one jit, capacity-independent shapes) so a
+fresh coreset is O(k) host work after any append, with no epoch run.
 
 Warm-bound maintenance is objective-generic: the store holds a *sum-form*
 bound table maintained by the objective's registered ``BoundMaintainer``
@@ -52,9 +67,29 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.greedi import _combined_index, _mesh_size
 from repro.core.objectives import _kernel_h
+from repro.kernels import dispatch
 from repro.util import shard_map as _shard_map
 
 Array = jax.Array
+
+_NEG = -1e30   # masked-score floor of the query merge (kernels/ref.NEG)
+_JTOP_COLD = -(1 << 30)  # sieve grid sentinel: no positive gain seen yet
+
+
+def _sieve_n_thresholds(sieve_k: int, eps: float) -> int:
+  """Bucket count covering the SieveStreaming grid [Delta/(2k), Delta]."""
+  return int(np.ceil(np.log(2 * sieve_k) / np.log1p(eps))) + 1
+
+
+def _np_sim(a: np.ndarray, b: np.ndarray, kernel: str, h: float) -> np.ndarray:
+  """Host-side mirror of kernels/ref._sim for the epoch-reset sieve replay."""
+  a = a.astype(np.float32)
+  b = b.astype(np.float32)
+  if kernel == "linear":
+    return a @ b.T
+  d2 = np.maximum((a * a).sum(-1)[:, None] - 2.0 * (a @ b.T)
+                  + (b * b).sum(-1)[None, :], 0.0)
+  return np.exp(-d2 / (h * h))
 
 
 def _df_add(hi: Array, lo: Array, x: Array):
@@ -90,6 +125,10 @@ class CorpusStore:
       for the maintainer's bound pass (unused when ``maintainer`` is None).
     maintainer: the objective's ``BoundMaintainer``
       (``core.objectives.bound_maintainer_for``) or None to keep no table.
+    sieve_k: standing-sieve depth (bucket size / max query coreset size);
+      0 disables the sieve.  Requires a maintainer with ``supports_sieve``
+      (the sum-form machinery supplies the admission gains).
+    sieve_eps: geometric grid ratio of the threshold sieve (1 + eps).
     feat_dtype: storage dtype of the feature rows.
   """
 
@@ -98,6 +137,7 @@ class CorpusStore:
                axis_names: tuple[str, ...] = ("data",),
                kernel: str = "linear", kernel_kwargs: tuple = (),
                backend: str | None = None, maintainer=None,
+               sieve_k: int = 0, sieve_eps: float = 0.5,
                feat_dtype=np.float32):
     self._mesh = mesh
     self._axis_names = axis_names
@@ -122,7 +162,21 @@ class CorpusStore:
     self._explicit_gids: set[int] = set()
     self._growths = 0
     self._write_trace_count = 0
+    self._bounds_seen = False
+
+    self._sieve_k = 0
+    self._sieve_eps = float(sieve_eps)
+    if sieve_k and maintainer is not None and getattr(
+        maintainer, "supports_sieve", False):
+      self._sieve_k = int(sieve_k)
+    self._sieve_T = (_sieve_n_thresholds(self._sieve_k, self._sieve_eps)
+                     if self._sieve_k else 0)
+    self._query_fn = None
+    self._query_trace_count = 0
+    self._query_count = 0
+
     self._alloc(self._cap)
+    self._alloc_sieve()
     self._compile()
 
   # ---- placement -----------------------------------------------------------
@@ -140,10 +194,27 @@ class CorpusStore:
     self._ub_hi = self._dev(np.zeros((cap,), np.float32))
     self._ub_lo = self._dev(np.zeros((cap,), np.float32))
 
+  def _alloc_sieve(self) -> None:
+    """Fixed-shape standing-sieve state, row-sharded like the bound table:
+    (m * T, k) gid/gain blocks, (m * T, k, d) member features, per-bucket
+    counts, and the per-shard running Delta / grid-top exponent.  Shapes are
+    capacity-independent, so growth migrates the sieve bit-exactly by simply
+    not touching it."""
+    if not self._sieve_k:
+      return
+    m, t, k = self._m, self._sieve_T, self._sieve_k
+    self._sieve_gid = self._dev(np.full((m * t, k), -1, np.int32))
+    self._sieve_gain = self._dev(np.zeros((m * t, k), np.float32))
+    self._sieve_feat = self._dev(np.zeros((m * t, k, self._d), np.float32))
+    self._sieve_cnt = self._dev(np.zeros((m * t,), np.int32))
+    self._sieve_delta = self._dev(np.zeros((m,), np.float32))
+    self._sieve_jtop = self._dev(np.full((m,), _JTOP_COLD, np.int32))
+
   def _grow(self) -> None:
     """Double the capacity in place on device: pad each resident array and
     re-balance it over the mesh (values -- including the bound pair -- are
-    copied exactly).  One of the O(log n) growth re-compiles."""
+    copied exactly).  One of the O(log n) growth re-compiles.  Sieve state
+    has capacity-independent shapes and is deliberately left untouched."""
     new_cap = self._round_capacity(self._cap * 2)
     pad = new_cap - self._cap
 
@@ -171,8 +242,58 @@ class CorpusStore:
     kernel = self._kernel
     h = _kernel_h(self._kernel_kwargs)
     backend = self._backend
+    sieve_t = self._sieve_T
+    log1pe = float(np.log1p(self._sieve_eps))
+    sieve_op = (dispatch.resolve("sieve_update", backend or "auto")
+                if self._sieve_k else None)
 
-    def body(lfeats, lgids, lhi, llo, rows, rgids, rvalid, off):
+    def sieve_body(state, rows, rgids, mine, sums):
+      """Standing-sieve update for one chunk, on this shard's local state:
+      fold the chunk's (already psum-reduced) singleton gains into the
+      running Delta, re-grid by rolling buckets down if the grid top moved,
+      then stream the shard's own rows through ``sieve_update``.  All
+      O(append_block) work; the one extra collective is the psum the bound
+      pass already pays."""
+      lsgid, lsgain, lsfeat, lscnt, ldelta, ljtop = state
+      # Delta folds in EVERY valid chunk row (padding rows carry gid -1),
+      # not just this shard's -- sums is already psum-reduced, so every
+      # shard derives the same grid and the sieves stay mergeable.
+      valid = rgids >= 0
+      delta_new = jnp.maximum(ldelta[0],
+                              jnp.max(jnp.where(valid, sums, 0.0)))
+      has = delta_new > 0.0
+      jtop_new = jnp.where(
+          has,
+          jnp.ceil(jnp.log(jnp.maximum(delta_new, 1e-30))
+                   / log1pe).astype(jnp.int32),
+          _JTOP_COLD)
+      # Delta grew past the grid top: drop the `shift` lowest thresholds
+      # (their buckets roll out) and open fresh top buckets.  Slot p holds
+      # threshold (1+eps)^(jtop - (T-1) + p), so a roll by -shift keeps
+      # every surviving bucket's contents exactly.
+      shift = jnp.clip(jtop_new - ljtop[0], 0, sieve_t)
+      cleared = jnp.arange(sieve_t) >= (sieve_t - shift)
+
+      def _roll(x, fill):
+        mask = cleared.reshape((sieve_t,) + (1,) * (x.ndim - 1))
+        return jnp.where(mask, fill, jnp.roll(x, -shift, axis=0))
+
+      lsgid = _roll(lsgid, -1)
+      lsgain = _roll(lsgain, 0.0)
+      lsfeat = _roll(lsfeat, 0.0)
+      lscnt = _roll(lscnt, 0)
+      expo = (jtop_new - (sieve_t - 1)
+              + jnp.arange(sieve_t)).astype(jnp.float32)
+      tau = jnp.exp(expo * log1pe)
+      lsgid, lsgain, lsfeat, lscnt = sieve_op(
+          rows, sums, rgids, mine & has, tau, lsgid, lsgain, lsfeat, lscnt,
+          kernel=kernel, h=h)
+      ldelta = jnp.full_like(ldelta, delta_new)
+      ljtop = jnp.full_like(ljtop, jtop_new)
+      return lsgid, lsgain, lsfeat, lscnt, ldelta, ljtop
+
+    def body(lfeats, lgids, lhi, llo, *rest):
+      sieve_state, (rows, rgids, rvalid, off) = rest[:-4], rest[-4:]
       # ---- shard-local row write: each shard scatters only the chunk rows
       # that land in its own slice (O(append_block) work per shard, no
       # collectives) -- the write pattern a global scatter on the sharded
@@ -197,20 +318,34 @@ class CorpusStore:
         lhi, llo = _df_add(lhi, llo, add)
         lhi = lhi.at[widx].set(sums, mode="drop")
         llo = llo.at[widx].set(jnp.zeros((ab,), jnp.float32), mode="drop")
-      return lfeats, lgids, lhi, llo
+        if sieve_state:
+          # ---- standing-sieve admission rides the same pass: the psum'd
+          # sums ARE the admission gains, so the sieve adds no collectives
+          sieve_state = sieve_body(sieve_state, rows, rgids, mine, sums)
+      return (lfeats, lgids, lhi, llo) + tuple(sieve_state)
 
-    def write(feats, gids, ub_hi, ub_lo, rows, rgids, rvalid, off):
+    n_state = 4 + (6 if self._sieve_k else 0)
+
+    def write(*arrays_and_chunk):
       self._write_trace_count += 1  # python side effect: counts (re-)traces
       return _shard_map(
           body, mesh=mesh,
-          in_specs=(P(ax), P(ax), P(ax), P(ax), P(), P(), P(), P()),
-          out_specs=(P(ax),) * 4)(feats, gids, ub_hi, ub_lo, rows, rgids,
-                                  rvalid, off)
+          in_specs=(P(ax),) * n_state + (P(), P(), P(), P()),
+          out_specs=(P(ax),) * n_state)(*arrays_and_chunk)
 
     # outputs pinned to the store's row sharding: the resident block must
     # stay mesh-sharded across appends no matter what GSPMD would infer
-    self._append_fn = jax.jit(write, donate_argnums=(0, 1, 2, 3),
-                              out_shardings=(self._sharding,) * 4)
+    self._append_fn = jax.jit(write, donate_argnums=tuple(range(n_state)),
+                              out_shardings=(self._sharding,) * n_state)
+
+    def gather(gids_blk, hi, q):
+      eq = gids_blk[None, :] == q[:, None]          # (kq, capacity)
+      hit = jnp.any(eq, axis=1)
+      return jnp.where(hit, hi[jnp.argmax(eq, axis=1)], 0.0)
+
+    # table lookup by gid for the epoch-reset sieve seeding: one jit object
+    # per capacity, O(k) D2H per call
+    self._gather_fn = jax.jit(gather)
 
   # ---- public surface ------------------------------------------------------
 
@@ -258,6 +393,186 @@ class CorpusStore:
     return (np.asarray(self._ub_hi).astype(np.float64)
             + np.asarray(self._ub_lo).astype(np.float64))
 
+  @property
+  def bounds_populated(self) -> bool:
+    """True iff the warm-bound table carries any actual signal -- i.e. a
+    maintainer exists and at least one table entry is nonzero.  A cold store
+    (no appends, or an all-zero corpus) reports False, so operators don't
+    misread cold epochs as warm.  The one-bit device read is cached once it
+    turns True (the table only ever accumulates rows)."""
+    if self._maintainer is None or self._n == 0:
+      return False
+    if not self._bounds_seen:
+      self._bounds_seen = bool(jax.device_get(jnp.any(self._ub_hi != 0.0)))
+    return self._bounds_seen
+
+  # ---- standing-sieve surface ----------------------------------------------
+
+  @property
+  def sieve_enabled(self) -> bool:
+    return self._sieve_k > 0
+
+  @property
+  def sieve_k(self) -> int:
+    return self._sieve_k
+
+  @property
+  def sieve_thresholds(self) -> int:
+    """Bucket count T = O(log Delta / eps) (0 when the sieve is disabled)."""
+    return self._sieve_T
+
+  @property
+  def sieve_state_bytes(self) -> int:
+    """Device bytes held by the standing sieve across all shards."""
+    if not self._sieve_k:
+      return 0
+    m, t, k = self._m, self._sieve_T, self._sieve_k
+    return m * t * (k * 4 + k * 4 + k * self._d * 4) + m * (4 + 4 + 4)
+
+  @property
+  def query_trace_count(self) -> int:
+    """Query-merge traces so far (1 total: shapes are capacity-independent,
+    so growth never re-traces the query path)."""
+    return self._query_trace_count
+
+  @property
+  def query_count(self) -> int:
+    return self._query_count
+
+  def sieve_state_host(self):
+    """Host pull of (gid, gain, feat, count, delta, jtop) -- tests only."""
+    assert self._sieve_k, "sieve disabled"
+    return tuple(np.asarray(x) for x in
+                 (self._sieve_gid, self._sieve_gain, self._sieve_feat,
+                  self._sieve_cnt, self._sieve_delta, self._sieve_jtop))
+
+  def _compile_query(self) -> None:
+    """One jit for the device-side sieve merge.  Input shapes depend only on
+    (mesh, T, k, d) -- never on capacity -- so this compiles exactly once
+    per store.  Every bucket of every shard pools into one candidate set
+    (N = m * T * k) and a k-step greedy MMR pass re-applies the admission
+    score (redundancy-discounted standing gain) over the pool -- at least
+    as good as the best single threshold bucket, which carries the sieve
+    guarantee.  Redundancy updates one pooled column per pick, so no (N, N)
+    matrix is ever materialized.  A gid admitted into several buckets
+    dedupes itself: its second copy is fully redundant with the first
+    (red == 1 -> score == 0).  Greedy picks are nested, so a caller wanting
+    k' < k representatives takes the first k' outputs.  Only the (k,)
+    winners + scores leave the device."""
+    t, k, m = self._sieve_T, self._sieve_k, self._m
+    kernel = self._kernel
+    h = _kernel_h(self._kernel_kwargs)
+    pairwise = dispatch.resolve("pairwise", self._backend or "auto")
+    n = m * t * k
+
+    def merge(sgid, sgain, sfeat):
+      self._query_trace_count += 1  # python side effect: counts traces
+      gt = sgid.reshape(n)
+      wt = sgain.reshape(n)
+      ft = sfeat.reshape(n, self._d).astype(jnp.float32)
+      if kernel == "linear":
+        nsq = jnp.maximum(jnp.sum(ft * ft, -1), 1e-12)
+      ok = gt >= 0
+
+      def step(i, c):
+        picked, redmax, out_g, out_s = c
+        score = wt * jnp.maximum(1.0 - redmax, 0.0)
+        score = jnp.where(ok & ~picked, score, _NEG)
+        j = jnp.argmax(score).astype(jnp.int32)
+        s = score[j]
+        take = s > 0.0
+        out_g = out_g.at[i].set(jnp.where(take, gt[j], -1))
+        out_s = out_s.at[i].set(jnp.where(take, s, 0.0))
+        picked = picked | (take & (jnp.arange(n) == j))
+        simj = pairwise(ft, ft[j][None], kernel=kernel, h=h)[:, 0]
+        if kernel == "linear":
+          redj = jnp.maximum(simj, 0.0) / jnp.sqrt(nsq * nsq[j])
+        else:
+          redj = simj
+        redmax = jnp.where(take, jnp.maximum(redmax, redj), redmax)
+        return picked, redmax, out_g, out_s
+
+      init = (jnp.zeros((n,), bool), jnp.zeros((n,), jnp.float32),
+              jnp.full((k,), -1, jnp.int32), jnp.zeros((k,), jnp.float32))
+      _, _, out_g, out_s = jax.lax.fori_loop(0, k, step, init)
+      return out_g, out_s
+
+    self._query_fn = jax.jit(merge)
+
+  def query_sieves(self):
+    """Merge the standing sieves into a (sieve_k,) coreset: (gids, scores)
+    as host arrays, gid -1 past the end.  O(k) D2H and no corpus-block
+    access -- the merge reads ONLY the fixed-shape sieve state (tested by
+    poisoning the feature block)."""
+    assert self._sieve_k, "sieve disabled on this store"
+    if self._query_fn is None:
+      self._compile_query()
+    gids, scores = self._query_fn(self._sieve_gid, self._sieve_gain,
+                                  self._sieve_feat)
+    self._query_count += 1
+    return np.asarray(gids), np.asarray(scores)
+
+  def reset_sieves(self, sel_feats=None, sel_gids=None) -> None:
+    """Epoch hand-off: clear the sieves and re-grid from the current table.
+
+    The new Delta is the table's max standing singleton gain (one scalar
+    D2H), so the grid reflects the WHOLE corpus rather than only rows seen
+    since the last reset.  The epoch's selection (``sel_feats``/
+    ``sel_gids``, padding filtered by the caller) seeds the fresh buckets
+    through the same admission rule, replayed host-side on shard 0's slice
+    with the selected rows' table entries as gains -- so a query right
+    after an epoch answers with (at least) the epoch's own picks.
+    """
+    if not self._sieve_k:
+      return
+    m, t, k, d = self._m, self._sieve_T, self._sieve_k, self._d
+    eps = self._sieve_eps
+    delta = float(jax.device_get(jnp.max(self._ub_hi)))
+    sgid = np.full((m * t, k), -1, np.int32)
+    sgain = np.zeros((m * t, k), np.float32)
+    sfeat = np.zeros((m * t, k, d), np.float32)
+    scnt = np.zeros((m * t,), np.int32)
+    if delta > 0.0:
+      jtop = int(np.ceil(np.log(delta) / np.log1p(eps)))
+      tau = np.exp((jtop - (t - 1) + np.arange(t)) * np.log1p(eps))
+      if sel_feats is not None and len(sel_feats):
+        sel_feats = np.asarray(sel_feats, np.float32)
+        gains = self._gather_bounds(np.asarray(sel_gids, np.int32))
+        kern, h = self._kernel, _kernel_h(self._kernel_kwargs)
+        for v, g, gid in zip(sel_feats, gains, np.asarray(sel_gids)):
+          # mirror of ref.sieve_admit_ref on shard 0's buckets
+          red = np.zeros((t,), np.float32)
+          for p in range(t):
+            c = int(scnt[p])
+            if c:
+              sim = _np_sim(v[None], sfeat[p, :c], kern, h)[0]
+              if kern == "linear":
+                vsq = max((v.astype(np.float32) ** 2).sum(), 1e-12)
+                msq = np.maximum(
+                    (sfeat[p, :c].astype(np.float32) ** 2).sum(-1), 1e-12)
+                sim = np.maximum(sim, 0.0) / np.sqrt(vsq * msq)
+              red[p] = max(float(np.max(sim)), 0.0)
+          score = float(g) * np.maximum(1.0 - red, 0.0)
+          admit = (score >= tau) & (scnt[:t] < k) & (gid >= 0)
+          for p in np.nonzero(admit)[0]:
+            sgid[p, scnt[p]] = gid
+            sgain[p, scnt[p]] = score[p]
+            sfeat[p, scnt[p]] = v
+            scnt[p] += 1
+    else:
+      jtop = _JTOP_COLD
+    self._sieve_gid = self._dev(sgid)
+    self._sieve_gain = self._dev(sgain)
+    self._sieve_feat = self._dev(sfeat)
+    self._sieve_cnt = self._dev(scnt)
+    self._sieve_delta = self._dev(np.full((m,), max(delta, 0.0), np.float32))
+    self._sieve_jtop = self._dev(np.full((m,), jtop, np.int32))
+
+  def _gather_bounds(self, gids_q: np.ndarray) -> np.ndarray:
+    """Table entries of the given gids (0.0 for unknown ids): O(k) D2H."""
+    return np.asarray(self._gather_fn(self._gids, self._ub_hi,
+                                      jnp.asarray(gids_q)))
+
   def reserve(self, n_total: int) -> None:
     """Pre-grow so ``n_total`` documents fit without mid-append growth."""
     while n_total > self._cap:
@@ -294,11 +609,21 @@ class CorpusStore:
       if uniq.size != b:
         raise ValueError(
             f"duplicate gids within append: {uniq[counts > 1].tolist()}")
-      clash = [int(g) for g in uniq.tolist()
-               if g in self._explicit_gids
-               or any(s <= g < e for s, e in self._auto_ranges)]
+      # vectorized clash check, O(b log ranges + b) host work: the auto
+      # ranges are disjoint and start-sorted by construction (the watermark
+      # only moves up and adjacent ranges merge), so one searchsorted finds
+      # each id's candidate range; explicit ids are one set intersection
+      clash = set(map(int, uniq.tolist())) & self._explicit_gids
+      if self._auto_ranges:
+        starts = np.fromiter((s for s, _ in self._auto_ranges), np.int64,
+                             len(self._auto_ranges))
+        ends = np.fromiter((e for _, e in self._auto_ranges), np.int64,
+                           len(self._auto_ranges))
+        idx = np.searchsorted(starts, uniq, side="right") - 1
+        in_auto = (idx >= 0) & (uniq < ends[np.maximum(idx, 0)])
+        clash |= set(map(int, uniq[in_auto].tolist()))
       if clash:
-        raise ValueError(f"gids already in the corpus: {clash}")
+        raise ValueError(f"gids already in the corpus: {sorted(clash)}")
     self.reserve(self._n + b)
 
     ab = self._append_block
@@ -312,9 +637,15 @@ class CorpusStore:
           [gids[off:off + ab], np.full((pad,), -1, np.int32)])
       rvalid = np.concatenate([np.ones((cb,), np.float32),
                                np.zeros((pad,), np.float32)])
-      self._feats, self._gids, self._ub_hi, self._ub_lo = self._append_fn(
-          self._feats, self._gids, self._ub_hi, self._ub_lo,
-          rows, rgids, rvalid, jnp.int32(self._n))
+      state = [self._feats, self._gids, self._ub_hi, self._ub_lo]
+      if self._sieve_k:
+        state += [self._sieve_gid, self._sieve_gain, self._sieve_feat,
+                  self._sieve_cnt, self._sieve_delta, self._sieve_jtop]
+      out = self._append_fn(*state, rows, rgids, rvalid, jnp.int32(self._n))
+      self._feats, self._gids, self._ub_hi, self._ub_lo = out[:4]
+      if self._sieve_k:
+        (self._sieve_gid, self._sieve_gain, self._sieve_feat,
+         self._sieve_cnt, self._sieve_delta, self._sieve_jtop) = out[4:]
       self._n += cb
 
     # every chunk landed: commit the id bookkeeping

@@ -411,3 +411,82 @@ print("ACCEPTANCE_OK")
 """, n_devices=4, timeout=900)
   assert "EPOCHS_OK" in out
   assert "ACCEPTANCE_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-6 satellites: objective backend honored, warm stats honest on cold
+# starts, heartbeat fail -> beat revival across consecutive epochs
+# ---------------------------------------------------------------------------
+
+
+def test_service_honors_objective_backend():
+  """Regression (ISSUE 6 satellite): a passed objective instance's
+  ``backend`` must flow to the store's bound pass and the epoch protocol
+  when the service-level ``backend`` is None (it was silently dropped)."""
+  from repro.core import objectives as O
+  obj = O.FacilityLocation(kernel="linear", backend="ref")
+  svc = _service(objective=obj)
+  assert svc._backend == "ref"
+  assert svc.store._backend == "ref"
+  # an explicit service-level backend still wins over the objective's
+  svc2 = _service(objective=obj, backend="auto")
+  assert svc2._backend == "auto" and svc2.store._backend == "auto"
+  # and the fixed service selects exactly like one configured directly
+  f = np.asarray(_feats(9, 120, 16))
+  svc.append(f)
+  svc3 = _service(backend="ref")
+  svc3.append(f)
+  assert set(svc.epoch().sel_gids.tolist()) == \
+      set(svc3.epoch().sel_gids.tolist())
+
+
+def test_service_warm_stat_honest_on_cold_start():
+  """Regression (ISSUE 6 satellite): ``EpochStats.warm`` must report
+  whether warm bounds actually carried signal, not the configuration flag.
+  An all-zero corpus keeps the table at zero: epoch 0 ran effectively
+  cold and must say so; once real mass lands, warm turns True."""
+  svc = _service()
+  assert svc.warm                      # configured warm...
+  svc.append(np.zeros((40, 16), np.float32))
+  r0 = svc.epoch()
+  assert r0.stats.warm is False        # ...but nothing was threaded
+  svc.append(np.abs(np.asarray(_feats(2, 40, 16))))
+  r1 = svc.epoch()
+  assert r1.stats.warm is True
+  # warm_start=False stays False regardless of table state
+  svc2 = _service(warm_start=False)
+  svc2.append(np.abs(np.asarray(_feats(2, 40, 16))))
+  assert svc2.epoch().stats.warm is False
+
+
+def test_heartbeat_fail_beat_revival_across_epochs(subrun):
+  """ISSUE-6 satellite: a ``fail``-ed shard is masked out of THAT epoch's
+  alive mask and a bare ``beat`` revives it in the NEXT epoch's -- the
+  revival must be observable across two consecutive epochs, not just in
+  board state."""
+  out = subrun("""
+import numpy as np
+from repro.service import SelectionService
+from repro.service.heartbeat import HeartbeatBoard
+from repro.util import make_mesh
+
+t = [0.0]
+mesh = make_mesh((4,), ("data",))
+svc = SelectionService(mesh, d=8, kappa=4, k_final=8, capacity=256,
+                       append_block=64, deadline=5.0, seed=0)
+svc.board = HeartbeatBoard(4, clock=lambda: t[0])
+svc.append(np.abs(np.random.default_rng(0).normal(size=(64, 8))
+                  .astype(np.float32)))
+svc.board.beat()
+r0 = svc.epoch()
+assert r0.stats.alive.tolist() == [True] * 4, r0.stats.alive
+svc.board.fail(2)
+r1 = svc.epoch()
+assert r1.stats.alive.tolist() == [True, True, False, True], r1.stats.alive
+assert len(r1.sel_gids) > 0
+svc.board.beat(2)                    # the shard reports healthy again
+r2 = svc.epoch()
+assert r2.stats.alive.tolist() == [True] * 4, r2.stats.alive
+print("REVIVAL_OK")
+""", n_devices=4)
+  assert "REVIVAL_OK" in out
