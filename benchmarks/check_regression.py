@@ -9,6 +9,11 @@ the fused-select and lazy-mode advantages are relative and must not erode.
 Exit status 1 if any ratio present in BOTH files drops below
 (1 - tol) * baseline, if the fresh run recorded suite failures, or if the
 files share no comparable entries (a silently-empty gate is a broken gate).
+Baseline entries absent from the fresh run fail the gate too -- a shrunken
+sweep must not silently un-gate entries (``--allow-missing`` opts out for
+intentional partial sweeps) -- and the failure names exactly which keys
+went missing, including when the shared set is empty.  Exit status 2 for
+unusable inputs (missing file, malformed JSON).
 
 Usage:
     python benchmarks/check_regression.py \
@@ -27,6 +32,73 @@ def _ratios(payload: dict) -> dict[str, float]:
           if "speedup" in r["name"]}
 
 
+def check(base: dict, new: dict, *, tol: float = 0.25,
+          allow_missing: bool = False,
+          baseline_name: str = "baseline",
+          new_name: str = "new") -> tuple[int, list[str]]:
+  """Pure gate logic: (exit status, report lines).  Testable without argv
+  or the filesystem; main() only parses/loads and prints."""
+  lines: list[str] = []
+
+  if new.get("failures"):
+    lines.append(f"FAIL: fresh run recorded suite failures: {new['failures']}")
+    return 1, lines
+
+  base_r, new_r = _ratios(base), _ratios(new)
+  shared = sorted(set(base_r) & set(new_r))
+
+  # Report baseline keys the fresh run dropped BEFORE the no-shared check:
+  # when the sweep shrank to nothing the missing names are the diagnosis,
+  # not a casualty of the earlier early-return.
+  missing = sorted(set(base_r) - set(new_r))
+  if missing:
+    lines.append(f"{'note' if allow_missing else 'FAIL'}: baseline entries "
+                 f"absent from the fresh run (ungated): {missing}")
+  extra = sorted(set(new_r) - set(base_r))
+  if extra:
+    lines.append(f"note: fresh-run entries not in the baseline (not yet "
+                 f"gated, consider re-baselining): {extra}")
+
+  if not shared:
+    lines.append(f"FAIL: no shared speedup entries between {baseline_name} "
+                 f"({sorted(base_r)}) and {new_name} ({sorted(new_r)})")
+    return 1, lines
+  if missing and not allow_missing:
+    return 1, lines
+
+  bad = []
+  for name in shared:
+    floor = (1.0 - tol) * base_r[name]
+    status = "ok" if new_r[name] >= floor else "REGRESSED"
+    lines.append(f"{name}: baseline {base_r[name]:.2f}x  new "
+                 f"{new_r[name]:.2f}x  floor {floor:.2f}x  {status}")
+    if new_r[name] < floor:
+      bad.append(name)
+
+  if bad:
+    lines.append(f"FAIL: {len(bad)} speedup "
+                 f"entr{'y' if len(bad) == 1 else 'ies'} "
+                 f"regressed >{tol:.0%}: {bad}")
+    return 1, lines
+  lines.append(f"OK: {len(shared)} speedup entries within {tol:.0%} "
+               f"of baseline")
+  return 0, lines
+
+
+def _load(path: str) -> dict:
+  try:
+    with open(path) as f:
+      payload = json.load(f)
+  except FileNotFoundError:
+    raise SystemExit(f"ERROR: benchmark file not found: {path}")
+  except json.JSONDecodeError as e:
+    raise SystemExit(f"ERROR: malformed JSON in {path}: {e}")
+  if not isinstance(payload, dict):
+    raise SystemExit(f"ERROR: {path}: expected a JSON object, got "
+                     f"{type(payload).__name__}")
+  return payload
+
+
 def main() -> int:
   ap = argparse.ArgumentParser()
   ap.add_argument("--baseline", required=True)
@@ -39,43 +111,11 @@ def main() -> int:
                        "so a shrunken sweep cannot silently un-gate entries")
   args = ap.parse_args()
 
-  with open(args.baseline) as f:
-    base = json.load(f)
-  with open(args.new) as f:
-    new = json.load(f)
-
-  if new.get("failures"):
-    print(f"FAIL: fresh run recorded suite failures: {new['failures']}")
-    return 1
-
-  base_r, new_r = _ratios(base), _ratios(new)
-  shared = sorted(set(base_r) & set(new_r))
-  if not shared:
-    print(f"FAIL: no shared speedup entries between {args.baseline} "
-          f"({sorted(base_r)}) and {args.new} ({sorted(new_r)})")
-    return 1
-  missing = sorted(set(base_r) - set(new_r))
-  if missing:
-    print(f"{'note' if args.allow_missing else 'FAIL'}: baseline entries "
-          f"absent from the fresh run (ungated): {missing}")
-    if not args.allow_missing:
-      return 1
-
-  bad = []
-  for name in shared:
-    floor = (1.0 - args.tol) * base_r[name]
-    status = "ok" if new_r[name] >= floor else "REGRESSED"
-    print(f"{name}: baseline {base_r[name]:.2f}x  new {new_r[name]:.2f}x  "
-          f"floor {floor:.2f}x  {status}")
-    if new_r[name] < floor:
-      bad.append(name)
-
-  if bad:
-    print(f"FAIL: {len(bad)} speedup entr{'y' if len(bad) == 1 else 'ies'} "
-          f"regressed >{args.tol:.0%}: {bad}")
-    return 1
-  print(f"OK: {len(shared)} speedup entries within {args.tol:.0%} of baseline")
-  return 0
+  code, lines = check(_load(args.baseline), _load(args.new), tol=args.tol,
+                      allow_missing=args.allow_missing,
+                      baseline_name=args.baseline, new_name=args.new)
+  print("\n".join(lines))
+  return code
 
 
 if __name__ == "__main__":

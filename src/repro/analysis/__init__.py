@@ -1,0 +1,38 @@
+"""Static hazard analysis for shard_map / jit / Pallas code.
+
+Two layers (rule catalog in docs/analysis.md):
+
+- jaxpr layer (``jaxpr_check``): traces registered entry points with
+  ``jax.make_jaxpr`` at representative shapes and walks the closed jaxpr.
+  R1 sort-in-loop under multi-device shard_map on non-TPU backends,
+  R2 collective axis-name / cond-branch hazards,
+  R3 row reductions over pad-and-mask blocks that never consume the
+  gid-validity taint.
+- AST layer (``ast_lint``): pure-syntax checks, no jax import.
+  R4 ``jax.jit`` inside function bodies, R5 bare ``jnp.sort``/``argsort``
+  in shard_map files, R6 Python branching on traced params of ``@jit``
+  functions.
+
+Suppress a finding with ``# repro: allow(<rule>): justification`` on the
+same line or the line above -- the justification is required.
+"""
+from repro.analysis.findings import (  # noqa: F401
+    Finding,
+    apply_suppressions,
+    format_finding,
+    load_baseline,
+    new_findings,
+    write_baseline,
+)
+from repro.analysis.ast_lint import lint_file, lint_paths  # noqa: F401
+
+_JAXPR_NAMES = ("check_closed_jaxpr", "check_entry")
+
+
+def __getattr__(name):
+  # the jaxpr layer imports jax; load it lazily so --ast-only (and plain
+  # findings/lint users) stay jax-free and never trigger device init
+  if name in _JAXPR_NAMES:
+    from repro.analysis import jaxpr_check
+    return getattr(jaxpr_check, name)
+  raise AttributeError(name)

@@ -1,0 +1,116 @@
+"""CLI: ``python -m repro.analysis [paths] --baseline analysis_baseline.json``.
+
+Exit status: 0 when every finding is suppressed or already in the baseline,
+1 on new unsuppressed findings, 2 on analyzer errors (an entry point that
+fails to trace is a broken entry registration, not a clean bill).
+
+The multi-device host platform MUST be forced before jax is imported:
+``core/greedy._argsort_desc`` branches at trace time on the device count, so
+a single-device trace would take the native-sort fast path and R1 would
+never see the configuration production runs with (tests/conftest.py forces
+the same thing for the sharded test suite).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from pathlib import Path
+
+
+def _force_devices(n: int) -> None:
+  assert "jax" not in sys.modules, (
+      "repro.analysis must set XLA_FLAGS before jax is imported")
+  flags = os.environ.get("XLA_FLAGS", "")
+  if "xla_force_host_platform_device_count" not in flags:
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
+
+
+def main(argv: list[str] | None = None) -> int:
+  ap = argparse.ArgumentParser(
+      prog="python -m repro.analysis",
+      description="jaxpr + AST hazard analyzer (rules R1-R6, docs/analysis.md)")
+  ap.add_argument("paths", nargs="*", default=["src"],
+                  help="files/directories to AST-lint (default: src)")
+  ap.add_argument("--baseline", type=Path, default=None,
+                  help="known-findings file; fail only on NEW findings")
+  ap.add_argument("--write-baseline", action="store_true",
+                  help="write the current findings to --baseline and exit 0")
+  ap.add_argument("--devices", type=int, default=8,
+                  help="forced host device count for jaxpr tracing")
+  ap.add_argument("--ast-only", action="store_true",
+                  help="skip the jaxpr layer (no tracing, no jax import)")
+  ap.add_argument("--repo-root", type=Path, default=Path.cwd())
+  args = ap.parse_args(argv)
+
+  if not args.ast_only:
+    _force_devices(args.devices)
+
+  from repro.analysis import ast_lint, findings as F
+
+  root = args.repo_root.resolve()
+  files: list[Path] = []
+  for p in args.paths:
+    pp = (root / p).resolve() if not Path(p).is_absolute() else Path(p)
+    if pp.is_dir():
+      files.extend(pp.rglob("*.py"))
+    elif pp.suffix == ".py":
+      files.append(pp)
+  all_findings = ast_lint.lint_paths(files, root)
+
+  skipped: list[str] = []
+  if not args.ast_only:
+    import jax
+
+    from repro import analysis
+    from repro.analysis import entries as _entries  # noqa: F401 (registers)
+    from repro.kernels import dispatch
+
+    n_dev = jax.device_count()
+    seen = {f.key() for f in all_findings}
+    for ep in dispatch.entry_points():
+      if ep.needs_devices > n_dev:
+        skipped.append(f"{ep.name} (needs {ep.needs_devices} devices, "
+                       f"have {n_dev})")
+        continue
+      try:
+        spec = ep.build()
+        fs = analysis.check_entry(
+            spec.fn, spec.args, entry=ep.name, mask_positions=spec.mask_args,
+            row_sizes=spec.row_sizes, repo_root=root)
+      except Exception as e:  # a broken entry is an analyzer error
+        print(f"ERROR tracing entry {ep.name}: {type(e).__name__}: {e}",
+              file=sys.stderr)
+        return 2
+      for f in fs:
+        if f.key() not in seen:  # one finding per hazard, not per entry
+          seen.add(f.key())
+          all_findings.append(f)
+
+  active, suppressed = F.apply_suppressions(all_findings, root)
+
+  if args.write_baseline:
+    if args.baseline is None:
+      print("--write-baseline needs --baseline", file=sys.stderr)
+      return 2
+    F.write_baseline(args.baseline, active)
+    print(f"wrote {len(active)} finding(s) to {args.baseline}")
+    return 0
+
+  baseline = F.load_baseline(args.baseline) if args.baseline else set()
+  new = F.new_findings(active, baseline)
+  known = len(active) - len(new)
+
+  for f in sorted(new, key=F.Finding.key):
+    print(F.format_finding(f))
+  tail = (f"{len(new)} new finding(s), {known} baselined, "
+          f"{len(suppressed)} suppressed")
+  if skipped:
+    tail += f"; {len(skipped)} entry point(s) skipped: {', '.join(skipped)}"
+  print(tail)
+  return 1 if new else 0
+
+
+if __name__ == "__main__":
+  sys.exit(main())

@@ -1,0 +1,249 @@
+"""AST-level hazard lint (rules R4-R6) over Python source, stdlib ``ast`` only.
+
+R4  no ``jax.jit`` *call* inside a function/method body.  Jits must be
+    module-level decorators/constants or hoisted into a ``_compile*`` method
+    (the sanctioned one-time hoist point, see service/service.py) -- a jit
+    created per call silently defeats the compile cache (the PR 6 bug class:
+    serve_step re-jitted prefill/decode on every generate()).  Process entry
+    points named ``main`` are also allowed: they jit exactly once per process.
+
+R5  no bare ``jnp.sort``/``jnp.argsort`` in modules that use ``shard_map``
+    (or are declared to execute under a caller's shard_map).  XLA CPU's sort
+    inside loop bodies under multi-device shard_map returned another shard's
+    output (the PR 4 bug class); ``core/greedy._argsort_desc`` is the safe
+    wrapper.  The jaxpr layer (R1) catches the same hazard semantically; R5
+    catches it lexically before any tracing happens.
+
+R6  no Python ``if``/``while`` on a parameter of a ``@jit``-decorated
+    function unless that parameter is listed in ``static_argnames`` /
+    ``static_argnums``.  Branching on a tracer raises at trace time at best
+    and silently bakes in one branch at worst.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import Finding
+
+__all__ = ["lint_file", "lint_paths", "SHARD_MAP_CONTEXT_FILES"]
+
+# Modules whose loops execute under a *caller's* shard_map even though the
+# module itself never references shard_map (so the import-scan below cannot
+# see it).  core/greedy.py's lazy rescan loop runs inside every sharded
+# engine -- exactly where the PR 4 sort bug lived.
+SHARD_MAP_CONTEXT_FILES = frozenset({
+    "src/repro/core/greedy.py",
+})
+
+# Function names whose bodies may create jits (R4).
+_JIT_HOIST_PREFIXES = ("_compile",)
+_JIT_ALLOWED_FUNCS = frozenset({"main"})
+
+
+def _dotted(node: ast.AST) -> str:
+  """'jax.jit' for Attribute chains, 'jit' for a bare Name, '' otherwise."""
+  parts = []
+  while isinstance(node, ast.Attribute):
+    parts.append(node.attr)
+    node = node.value
+  if isinstance(node, ast.Name):
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+  return ""
+
+
+def _is_jax_jit(node: ast.AST, jit_aliases: set[str]) -> bool:
+  d = _dotted(node)
+  return d in ("jax.jit", "jax.pmap") or d in jit_aliases
+
+
+def _jit_name_aliases(tree: ast.Module) -> set[str]:
+  """Names bound by ``from jax import jit [as x]`` at module level."""
+  out: set[str] = set()
+  for node in tree.body:
+    if isinstance(node, ast.ImportFrom) and node.module == "jax":
+      for alias in node.names:
+        if alias.name in ("jit", "pmap"):
+          out.add(alias.asname or alias.name)
+  return out
+
+
+class _Linter(ast.NodeVisitor):
+
+  def __init__(self, rel: str, jit_aliases: set[str], shard_map_ctx: bool):
+    self.rel = rel
+    self.jit_aliases = jit_aliases
+    self.shard_map_ctx = shard_map_ctx
+    self.stack: list[str] = []  # enclosing function names, innermost last
+    self.findings: list[Finding] = []
+
+  # -- scope handling: decorators and defaults evaluate in the ENCLOSING
+  # scope, so they are visited before the function name is pushed.
+  def _visit_func(self, node):
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+      for dec in node.decorator_list:
+        self.visit(dec)
+      for default in list(node.args.defaults) + [
+          d for d in node.args.kw_defaults if d is not None]:
+        self.visit(default)
+      name = node.name
+      body = node.body
+    else:  # Lambda: no decorators; defaults evaluate in the enclosing scope
+      for default in list(node.args.defaults) + [
+          d for d in node.args.kw_defaults if d is not None]:
+        self.visit(default)
+      name = "<lambda>"
+      body = [node.body]
+    self.stack.append(name)
+    for stmt in body:
+      self.visit(stmt)
+    self.stack.pop()
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+      self._check_r6(node)
+
+  visit_FunctionDef = _visit_func
+  visit_AsyncFunctionDef = _visit_func
+  visit_Lambda = _visit_func
+
+  # -- R4 / R5 ---------------------------------------------------------
+  def visit_Call(self, node: ast.Call):
+    if _is_jax_jit(node.func, self.jit_aliases) and self.stack:
+      fn = self.stack[-1]
+      if not (fn.startswith(_JIT_HOIST_PREFIXES) or fn in _JIT_ALLOWED_FUNCS):
+        self.findings.append(Finding(
+            rule="R4", file=self.rel, line=node.lineno,
+            msg=f"jax.jit created inside function body '{fn}' (per-call jit "
+                "defeats the compile cache)",
+            hint="hoist the jit to module level or into a _compile() method "
+                 "called once"))
+    if self.shard_map_ctx:
+      d = _dotted(node.func)
+      if d in ("jnp.sort", "jnp.argsort", "jax.numpy.sort", "jax.numpy.argsort"):
+        self.findings.append(Finding(
+            rule="R5", file=self.rel, line=node.lineno,
+            msg=f"bare {d} in a shard_map-context module (XLA CPU sort under "
+                "multi-device shard_map is unsafe in loop bodies)",
+            hint="route through core/greedy._argsort_desc or add "
+                 "'# repro: allow(R5): <why safe>'"))
+    self.generic_visit(node)
+
+  # -- R6 --------------------------------------------------------------
+  def _check_r6(self, node: ast.FunctionDef):
+    static, is_jit = _jit_decorator_statics(node, self.jit_aliases)
+    if not is_jit:
+      return
+    params = {a.arg for a in (node.args.posonlyargs + node.args.args
+                              + node.args.kwonlyargs)}
+    traced = params - static - {"self", "cls"}
+    for branch in _branches(node):
+      names = {n.id for n in ast.walk(branch.test) if isinstance(n, ast.Name)}
+      bad = sorted(names & traced)
+      if bad:
+        self.findings.append(Finding(
+            rule="R6", file=self.rel, line=branch.lineno,
+            msg=f"Python branch on traced parameter(s) {', '.join(bad)} of "
+                f"jitted function '{node.name}'",
+            hint="use lax.cond/jnp.where, or add the name to static_argnames"))
+
+
+def _branches(fn: ast.FunctionDef):
+  """if/while statements in fn's own body, not descending into nested defs."""
+  todo = list(fn.body)
+  while todo:
+    node = todo.pop()
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+      continue
+    if isinstance(node, (ast.If, ast.While)):
+      yield node
+    for child in ast.iter_child_nodes(node):
+      todo.append(child)
+
+
+def _jit_decorator_statics(
+    node: ast.FunctionDef, jit_aliases: set[str]) -> tuple[set[str], bool]:
+  """(static param names, has-jit-decorator) from the decorator list.
+
+  Understands ``@jax.jit`` and ``@functools.partial(jax.jit,
+  static_argnames=(...))`` with literal string/tuple arguments.
+  """
+  static: set[str] = set()
+  is_jit = False
+  for dec in node.decorator_list:
+    if _is_jax_jit(dec, jit_aliases):
+      is_jit = True
+    elif isinstance(dec, ast.Call):
+      callee = _dotted(dec.func)
+      if callee.endswith("partial") and dec.args and _is_jax_jit(
+          dec.args[0], jit_aliases):
+        is_jit = True
+        for kw in dec.keywords:
+          if kw.arg == "static_argnames":
+            static |= _literal_strs(kw.value)
+          elif kw.arg == "static_argnums":
+            nums = _literal_ints(kw.value)
+            allargs = node.args.posonlyargs + node.args.args
+            for i in nums:
+              if 0 <= i < len(allargs):
+                static.add(allargs[i].arg)
+      elif _is_jax_jit(dec.func, jit_aliases):
+        is_jit = True
+        for kw in dec.keywords:
+          if kw.arg == "static_argnames":
+            static |= _literal_strs(kw.value)
+  return static, is_jit
+
+
+def _literal_strs(node: ast.AST) -> set[str]:
+  if isinstance(node, ast.Constant) and isinstance(node.value, str):
+    return {node.value}
+  if isinstance(node, (ast.Tuple, ast.List)):
+    out: set[str] = set()
+    for elt in node.elts:
+      out |= _literal_strs(elt)
+    return out
+  return set()
+
+
+def _literal_ints(node: ast.AST) -> set[int]:
+  if isinstance(node, ast.Constant) and isinstance(node.value, int):
+    return {node.value}
+  if isinstance(node, (ast.Tuple, ast.List)):
+    out: set[int] = set()
+    for elt in node.elts:
+      out |= _literal_ints(elt)
+    return out
+  return set()
+
+
+def _uses_shard_map(tree: ast.Module) -> bool:
+  for node in ast.walk(tree):
+    if isinstance(node, ast.Name) and node.id == "shard_map":
+      return True
+    if isinstance(node, ast.Attribute) and node.attr == "shard_map":
+      return True
+    if isinstance(node, (ast.Import, ast.ImportFrom)):
+      for alias in node.names:
+        if "shard_map" in alias.name or alias.asname == "shard_map":
+          return True
+  return False
+
+
+def lint_file(path: Path, repo_root: Path) -> list[Finding]:
+  rel = str(path.relative_to(repo_root)) if path.is_absolute() else str(path)
+  try:
+    tree = ast.parse(path.read_text(), filename=str(path))
+  except SyntaxError as e:
+    return [Finding(rule="parse", file=rel, line=e.lineno or 0,
+                    msg=f"syntax error: {e.msg}")]
+  shard_map_ctx = _uses_shard_map(tree) or rel in SHARD_MAP_CONTEXT_FILES
+  linter = _Linter(rel, _jit_name_aliases(tree), shard_map_ctx)
+  linter.visit(tree)
+  return linter.findings
+
+
+def lint_paths(paths: list[Path], repo_root: Path) -> list[Finding]:
+  findings: list[Finding] = []
+  for p in sorted(paths):
+    findings.extend(lint_file(p, repo_root))
+  return findings

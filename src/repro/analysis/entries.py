@@ -1,0 +1,157 @@
+"""Protocol- and service-level traceable entry points.
+
+The oracle families register their entries next to their wrappers in
+``kernels/ops.py``; this module adds the surfaces that need a device mesh --
+the ``_dist_greedy_core`` engines (``greedi_sharded`` / ``_fast`` /
+``_hierarchical``) and the selection service's epoch / append / query jits
+(traced through the raw bodies the service keeps for exactly this purpose:
+``SelectionService._epoch_raw``, ``CorpusStore._append_raw`` /
+``_query_raw``).
+
+Shapes are representative, not exhaustive, and the pad-and-mask row sizes
+(N=512 corpus, 128 per-shard rows, 64 append chunk, 32 merged candidates)
+are chosen distinct from the feature dim (16) and from each other, so the
+R3 rule's size matching is unambiguous.  Every entry here declares
+``needs_devices=4``: the analyzer CLI forces a multi-device host platform
+before importing jax (see ``__main__``), which is also what makes the R1
+trace faithful -- ``core/greedy._argsort_desc`` branches at trace time on
+the device count.
+
+To register a new entry point: build a ``dispatch.TraceSpec`` (fn +
+example args + mask-arg positions + row sizes) in a zero-arg builder and
+``dispatch.register_entry_point(name, builder, needs_devices=...)``.  See
+docs/analysis.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import greedi as GD
+from repro.core import objectives as O
+from repro.kernels import dispatch
+from repro.util import make_mesh
+
+# representative protocol shapes (see module docstring)
+_N, _D, _M, _KAPPA, _KF, _AB = 512, 16, 4, 8, 8, 64
+_NPP = _N // _M
+_ROWS = (_N, _NPP, _M * _KAPPA)
+
+
+def _f32(*shape):
+  return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+  return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _mesh():
+  return make_mesh((_M,), ("data",))
+
+
+def _greedi_spec(mode: str, warm: bool) -> dispatch.TraceSpec:
+  mesh = _mesh()
+  obj = O.FacilityLocation(kernel="linear")
+
+  def run(feats, gids, wb, ages):
+    return GD.greedi_sharded(
+        feats, mesh=mesh, kappa=_KAPPA, k_final=_KF, objective=obj,
+        gids=gids, mode=mode, warm_bounds=wb if warm else None,
+        liveness_age=ages, liveness_deadline=5.0)
+
+  return dispatch.TraceSpec(
+      fn=run, args=(_f32(_N, _D), _i32(_N), _f32(_N), _f32(_M)),
+      mask_args=(1,), row_sizes=_ROWS)
+
+
+def _greedi_fast_spec() -> dispatch.TraceSpec:
+  mesh = _mesh()
+
+  def run(feats, gids, ages):
+    return GD.greedi_sharded_fast(
+        feats, mesh=mesh, kappa=_KAPPA, k_final=_KF, kernel="linear",
+        gids=gids, liveness_age=ages, liveness_deadline=5.0)
+
+  return dispatch.TraceSpec(
+      fn=run, args=(_f32(_N, _D), _i32(_N), _f32(_M)),
+      mask_args=(1,), row_sizes=_ROWS)
+
+
+def _greedi_hier_spec() -> dispatch.TraceSpec:
+  mesh = make_mesh((2, 2), ("pod", "data"))
+  obj = O.FacilityLocation(kernel="linear")
+  # kappa=12 (not the module default 8): with 2 pods the per-pod merge is
+  # 2*kappa rows, and 2*8=16 would collide with the feature dim _D, making
+  # every legitimate d-contraction pattern-match R3's row sizes.
+  kappa = 12
+
+  def run(feats, gids):
+    return GD.greedi_hierarchical(
+        feats, mesh=mesh, kappa=kappa, k_final=_KF, objective=obj,
+        gids=gids)
+
+  return dispatch.TraceSpec(
+      fn=run, args=(_f32(_N, _D), _i32(_N)),
+      mask_args=(1,), row_sizes=(_N, _NPP, 4 * kappa, 2 * kappa))
+
+
+def _service(objective: str):
+  from repro.service.service import SelectionService
+  return SelectionService(
+      _mesh(), d=_D, kappa=_KAPPA, k_final=_KF, capacity=_N,
+      append_block=_AB, objective=objective, seed=0)
+
+
+def _service_epoch_spec(objective: str = "facility") -> dispatch.TraceSpec:
+  svc = _service(objective)
+  key = jax.ShapeDtypeStruct(jax.random.PRNGKey(0).shape, jnp.uint32)
+  return dispatch.TraceSpec(
+      fn=svc._epoch_raw,
+      args=(_f32(_N, _D), _i32(_N), _f32(_N), _f32(_M), _f32(), key),
+      mask_args=(1,), row_sizes=_ROWS)
+
+
+def _store_append_spec() -> dispatch.TraceSpec:
+  svc = _service("facility")
+  store = svc.store
+  state = [store._feats, store._gids, store._ub_hi, store._ub_lo]
+  if store.sieve_enabled:
+    state += [store._sieve_gid, store._sieve_gain, store._sieve_feat,
+              store._sieve_cnt, store._sieve_delta, store._sieve_jtop]
+  args = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype) for a in state)
+  args += (_f32(_AB, _D), _i32(_AB), _f32(_AB), _i32())
+  # taint roots: the resident gid column and the chunk's row validity
+  return dispatch.TraceSpec(
+      fn=store._append_raw, args=args,
+      mask_args=(1, len(args) - 2), row_sizes=(_NPP, _AB))
+
+
+def _store_query_spec() -> dispatch.TraceSpec:
+  svc = _service("facility")
+  store = svc.store
+  store._compile_query()
+  t, k, m = store.sieve_thresholds, store.sieve_k, store._m
+  return dispatch.TraceSpec(
+      fn=store._query_raw,
+      args=(_i32(m * t, k), _f32(m * t, k), _f32(m * t, k, _D)),
+      mask_args=(0,), row_sizes=(m * t * k,))
+
+
+def register_all() -> None:
+  """Idempotent registration of the mesh-needing entries (the analyzer CLI
+  and the fixture tests call this after forcing a multi-device platform)."""
+  ep = functools.partial(dispatch.register_entry_point, needs_devices=_M)
+  ep("greedi:sharded_standard", lambda: _greedi_spec("standard", False))
+  ep("greedi:sharded_lazy_warm", lambda: _greedi_spec("lazy", True))
+  ep("greedi:sharded_fast", _greedi_fast_spec)
+  ep("greedi:hierarchical", _greedi_hier_spec)
+  ep("service:epoch_facility", lambda: _service_epoch_spec("facility"))
+  ep("service:epoch_info_gain", lambda: _service_epoch_spec("info_gain"))
+  ep("service:store_append", _store_append_spec)
+  ep("service:store_query", _store_query_spec)
+
+
+register_all()

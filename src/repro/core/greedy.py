@@ -110,6 +110,7 @@ def _argsort_desc(pri: Array) -> tuple[Array, Array]:
   """
   from repro.kernels.autotune import default_backend
   if default_backend() == "tpu" or jax.device_count() == 1:
+    # repro: allow(R5): native-sort fast path inside the sanctioned wrapper; the trace-time branch guarantees single-device-or-TPU here
     order = jnp.argsort(-pri)
     return pri[order], order
   n = pri.shape[0]

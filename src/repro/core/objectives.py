@@ -254,6 +254,18 @@ class IGState(NamedTuple):
   value: Array       # scalar f(S) = 0.5 logdet(I + sigma^-2 K_SS)
 
 
+class IGShardState(NamedTuple):
+  """``IGState`` plus the shard's live evaluation-row count.
+
+  Information gain is evaluation-set independent, so the sharded protocol's
+  state needs nothing from the local partition except its live mass: the
+  count makes ``partial_stats`` weight the (identical-on-every-shard) gains
+  so the engine's psum-weighted mean reproduces them exactly (core/greedi.py
+  ``_objective_engine``)."""
+  inner: IGState
+  n_live: Array      # () float32 live eval rows on this shard
+
+
 def _masked_linv(chol: Array, count: Array) -> Array:
   """inv(L) with the columns of not-yet-selected rows zeroed.
 
@@ -303,6 +315,32 @@ class InformationGain:
         value=jnp.zeros((), dtype),
     )
 
+  @staticmethod
+  def _state(state) -> IGState:
+    return state.inner if isinstance(state, IGShardState) else state
+
+  def init(self, eval_feats: Array, eval_mask: Array | None = None
+           ) -> IGShardState:
+    """Sharded-protocol surface (core/greedi.py): f ignores the evaluation
+    set, so only its live mass is recorded (see ``IGShardState``)."""
+    ne, d = eval_feats.shape
+    if eval_mask is None:
+      n_live = jnp.asarray(float(ne), jnp.float32)
+    else:
+      n_live = jnp.sum(eval_mask.astype(jnp.float32))
+    return IGShardState(self.init_d(d), n_live)
+
+  def partial_stats(self, state, cand_feats: Array) -> tuple[Array, Array]:
+    """(live-count-weighted gains, live count) for the psum-reduced merge.
+
+    Every shard computes the SAME gains from the replicated candidate block
+    (f is eval-set independent), so weighting by the shard's live count
+    makes ``psum(part * w) / psum(n_live * w)`` reproduce them exactly for
+    any liveness weighting ``w``."""
+    n_live = (state.n_live if isinstance(state, IGShardState)
+              else jnp.asarray(1.0, jnp.float32))
+    return self.gains(state, cand_feats) * n_live, n_live
+
   def _cross(self, state: IGState, cand_feats: Array) -> Array:
     """L^-1 K_{S,cand} with rows past ``count`` zeroed: (k_max, nc)."""
     k_sc = self._k(state.sel_feats, cand_feats)            # (k_max, nc)
@@ -310,7 +348,8 @@ class InformationGain:
     k_sc = jnp.where(row_live, k_sc, 0.0)
     return jax.scipy.linalg.solve_triangular(state.chol, k_sc, lower=True)
 
-  def gains(self, state: IGState, cand_feats: Array) -> Array:
+  def gains(self, state, cand_feats: Array) -> Array:
+    state = self._state(state)
     s2 = self.sigma ** 2
     if self.kernel in dispatch.FUSED_SIMS:
       fn = dispatch.resolve("info_gain_cond", self.backend)
@@ -323,8 +362,9 @@ class InformationGain:
       cond = jnp.maximum(k_vv + s2 - jnp.sum(c * c, axis=0), 1e-12)
     return 0.5 * jnp.log(cond / s2)
 
-  def select(self, state: IGState, cand_feats: Array,
+  def select(self, state, cand_feats: Array,
              feasible: Array) -> tuple[Array, Array]:
+    state = self._state(state)
     s2 = self.sigma ** 2
     if self.kernel in dispatch.FUSED_SIMS:
       fn = dispatch.resolve_select("info_gain_cond", self.backend)
@@ -334,7 +374,9 @@ class InformationGain:
       return 0.5 * jnp.log(jnp.maximum(cond, 1e-12) / s2), idx
     return masked_top1(self.gains(state, cand_feats), feasible)
 
-  def update(self, state: IGState, feat: Array) -> IGState:
+  def update(self, state, feat: Array):
+    if isinstance(state, IGShardState):
+      return IGShardState(self.update(state.inner, feat), state.n_live)
     s2 = self.sigma ** 2
     c = self._cross(state, feat[None, :])[:, 0]            # (k_max,)
     k_vv = self._k(feat[None], feat[None])[0, 0]
@@ -349,8 +391,8 @@ class InformationGain:
     gain = 0.5 * jnp.log(jnp.maximum(diag * diag, 1e-12) / s2)
     return IGState(sel, i + 1, chol, state.value + gain)
 
-  def value(self, state: IGState) -> Array:
-    return state.value
+  def value(self, state) -> Array:
+    return self._state(state).value
 
 
 # ---------------------------------------------------------------------------
@@ -732,6 +774,59 @@ class SumFormBoundMaintainer:
     return table / jnp.maximum(n_live, 1.0)
 
 
+@dataclasses.dataclass(frozen=True)
+class InfoGainPriorBoundMaintainer:
+  """Data-independent prior bound for information gain (ROADMAP item).
+
+  A document v's empty-set gain is EXACTLY its prior entropy reduction
+  ``0.5 * log(1 + k(v,v) / sigma^2)`` -- independent of the evaluation set,
+  the partition, and every other document.  So the "table" is trivial to
+  maintain: appends set the new rows' own bounds and move nobody else's
+  (``add == 0``), and ``epoch_bounds`` is the identity (the bound is
+  per-item, not sum-form, so no live-count normalization applies).  Being
+  the exact empty-set gain, the bound is tight: warm lazy epochs select
+  bit-identically to cold ones (tested at the service level).
+
+  ``sums_global``: unlike the sum-form maintainer, every shard computes each
+  new row's COMPLETE bound from the replicated chunk rows -- the store must
+  NOT psum the returned sums (service/store.py gates on this flag).
+
+  ``supports_sieve`` is False: sieve admission scores need sum-form
+  redundancy-discounted singleton gains, which this prior is not; the
+  service stays epoch-only for queries.
+  """
+  sigma: float = 1.0
+  supports_sieve: bool = False
+  sums_global: bool = True
+
+  def supports(self, objective: Any) -> bool:
+    # k(v,v) must be computable from the row alone: 1 for rbf, ||v||^2 for
+    # linear.  Other kernels run cold.
+    return getattr(objective, "kernel", None) in ("rbf", "linear")
+
+  def for_objective(self, objective: Any) -> "InfoGainPriorBoundMaintainer":
+    """Bind the objective instance's noise level (``bound_maintainer_for``
+    hook): the bound depends on sigma, which lives on the objective."""
+    return dataclasses.replace(self, sigma=float(objective.sigma))
+
+  def append_update(self, new_rows: Array, block_feats: Array,
+                    new_valid: Array, block_valid: Array, *, kernel: str,
+                    h: float, backend: str | None = None):
+    del block_valid, h, backend  # prior bound: no cross terms, no oracle
+    s2 = self.sigma ** 2
+    if kernel == "rbf":
+      k_vv = jnp.ones((new_rows.shape[0],), jnp.float32)
+    else:  # linear
+      k_vv = jnp.sum(new_rows.astype(jnp.float32) ** 2, axis=-1)
+    sums = 0.5 * jnp.log1p(k_vv / s2) * new_valid.astype(jnp.float32)
+    add = jnp.zeros((block_feats.shape[0],), jnp.float32)
+    return add, sums
+
+  def epoch_bounds(self, table: Array, n_live: Array) -> Array:
+    del n_live  # per-item prior, partition-independent: already mean-form
+    return table
+
+
 _BOUND_MAINTAINERS: dict[type, Any] = {}
 
 
@@ -755,11 +850,17 @@ def bound_maintainer_for(objective: Any) -> Any | None:
   supports = getattr(maintainer, "supports", None)
   if supports is not None and not supports(objective):
     return None
+  # maintainers whose math depends on instance parameters (e.g. the
+  # info-gain prior needs sigma) bind them here
+  bind = getattr(maintainer, "for_objective", None)
+  if bind is not None:
+    maintainer = bind(objective)
   return maintainer
 
 
 register_bound_maintainer(FacilityLocation, SumFormBoundMaintainer())
 register_bound_maintainer(SaturatedCoverage, SumFormBoundMaintainer())
+register_bound_maintainer(InformationGain, InfoGainPriorBoundMaintainer())
 
 
 # ---------------------------------------------------------------------------

@@ -142,3 +142,53 @@ def resolve(name: str, backend: str = "auto") -> Callable:
 def resolve_select(name: str, backend: str = "auto") -> Callable:
   """Map (select-oracle name, backend) to the implementation to call."""
   return _pick(get_select(name), backend)
+
+
+# ---------------------------------------------------------------------------
+# Traceable entry points (the static-analysis surface, repro.analysis)
+# ---------------------------------------------------------------------------
+#
+# Every production trace surface -- each oracle family above at representative
+# shapes, the `_dist_greedy_core` engines, the service epoch/append/query jits
+# -- registers a TraceSpec builder here so `python -m repro.analysis` can
+# enumerate and trace them without knowing their call conventions.  Builders
+# run lazily (constructing example args only when the analyzer asks), so
+# registration is free at import time.
+
+
+class TraceSpec(NamedTuple):
+  """One traceable call: fn(*args) plus the R3 mask annotations.
+
+  ``mask_args``  positions of gid-validity/mask inputs -- the taint roots of
+                 the R3 mask-discipline rule;
+  ``row_sizes``  padded row-axis sizes of the pad-and-mask blocks in play
+                 (chosen distinct from feature dims so a size match really
+                 means "a row axis").
+  """
+
+  fn: Callable
+  args: tuple
+  mask_args: tuple[int, ...] = ()
+  row_sizes: tuple[int, ...] = ()
+
+
+class EntryPoint(NamedTuple):
+  name: str
+  build: Callable[[], TraceSpec]
+  needs_devices: int = 1  # minimum device count for a faithful trace
+
+
+_ENTRY_POINTS: dict[str, EntryPoint] = {}
+
+
+def register_entry_point(name: str, build: Callable[[], TraceSpec],
+                         *, needs_devices: int = 1) -> None:
+  """Register (or replace) a traceable entry point for the analyzer."""
+  _ENTRY_POINTS[name] = EntryPoint(name, build, needs_devices)
+
+
+def entry_points() -> tuple[EntryPoint, ...]:
+  """All registered entry points (oracle families register on ops import;
+  protocol/service entries on ``repro.analysis.entries`` import)."""
+  _ensure_registered()
+  return tuple(sorted(_ENTRY_POINTS.values()))

@@ -411,3 +411,91 @@ dispatch.register_select("coverage_gain", pallas=coverage_select,
 dispatch.register_select("graph_cut_gain", pallas=graph_cut_select,
                          ref=functools.partial(graph_cut_select,
                                                force_xla=True))
+
+
+# ---------------------------------------------------------------------------
+# traceable entry points (repro.analysis): every oracle family above at
+# representative shapes, with R3 mask annotations.  Row sizes are distinct
+# from d and from each other so a reduced-axis size match really means "a
+# pad-and-mask row axis".  Builders resolve "auto" so the analyzer traces
+# the implementation production uses on this host's backend.
+# ---------------------------------------------------------------------------
+
+_NE, _NC, _AB, _D = 384, 96, 48, 16  # eval rows, candidates, append chunk, d
+
+
+def _f32(*shape):
+  return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(*shape):
+  return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _ep(name, builder, needs_devices=1):
+  dispatch.register_entry_point(name, builder, needs_devices=needs_devices)
+
+
+_ep("oracle:facility_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("facility_gain", "auto"),
+    args=(_f32(_NE, _D), _f32(_NC, _D), _f32(_NE), _f32(_NE)),
+    mask_args=(3,), row_sizes=(_NE,)))
+
+_ep("select:facility_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select("facility_gain", "auto"),
+    args=(_f32(_NE, _D), _f32(_NC, _D), _f32(_NE), _f32(_NE), _f32(_NC)),
+    mask_args=(3, 4), row_sizes=(_NE, _NC)))
+
+_ep("oracle:coverage_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("coverage_gain", "auto"),
+    args=(_f32(_NE, _D), _f32(_NC, _D), _f32(_NE), _f32(_NE), _f32(_NE)),
+    mask_args=(4,), row_sizes=(_NE,)))
+
+_ep("select:coverage_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select("coverage_gain", "auto"),
+    args=(_f32(_NE, _D), _f32(_NC, _D), _f32(_NE), _f32(_NE), _f32(_NE),
+          _f32(_NC)),
+    mask_args=(4, 5), row_sizes=(_NE, _NC)))
+
+# info-gain's eval-set independence means no row mask on the gain side; the
+# select side masks the candidate axis through cand_ok
+_ep("oracle:info_gain_cond", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("info_gain_cond", "auto"),
+    args=(_f32(8, _D), _f32(8, 8), _f32(_NC, _D))))
+
+_ep("select:info_gain_cond", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select("info_gain_cond", "auto"),
+    args=(_f32(8, _D), _f32(8, 8), _f32(_NC, _D), _f32(_NC)),
+    mask_args=(3,), row_sizes=(_NC,)))
+
+# graph-cut contracts the full adjacency (no pad-and-mask rows at this
+# surface; node_ok only gates the top-1), so R3 has nothing to audit here
+_ep("oracle:graph_cut_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("graph_cut_gain", "auto"),
+    args=(_f32(_NC, _NC), _f32(_NC))))
+
+_ep("select:graph_cut_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select("graph_cut_gain", "auto"),
+    args=(_f32(_NC, _NC), _f32(_NC), _f32(_NC))))
+
+_ep("oracle:pairwise", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("pairwise", "auto"),
+    args=(_f32(_AB, _D), _f32(_NC, _D))))
+
+_ep("oracle:bound_update", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("bound_update", "auto"),
+    args=(_f32(_AB, _D), _f32(_NE, _D), _f32(_AB), _f32(_NE)),
+    mask_args=(2, 3), row_sizes=(_AB, _NE)))
+
+# sieve admission is per-item (a scan over the chunk); its row-axis work is
+# gather/scatter bookkeeping, not reductions, so only the taint roots matter
+_ep("oracle:sieve_update", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve("sieve_update", "auto"),
+    args=(_f32(_AB, _D), _f32(_AB), _i32(_AB),
+          jax.ShapeDtypeStruct((_AB,), jnp.bool_), _f32(4),
+          _i32(4, 8), _f32(4, 8), _f32(4, 8, _D), _i32(4)),
+    mask_args=(2, 3)))
+
+_ep("oracle:flash_attention", lambda: dispatch.TraceSpec(
+    fn=flash_attention, args=(_f32(1, 2, 64, _D), _f32(1, 2, 64, _D),
+                              _f32(1, 2, 64, _D))))

@@ -276,6 +276,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
   else:
     fn, args, in_sh, out_sh = build_cell(arch, shape, mesh)
   with mesh:
+    # repro: allow(R4): dry-run lowering tool -- each cell is compiled exactly once per invocation, by design
     jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
     lowered = jitted.lower(*args)
     compiled = lowered.compile()
@@ -297,6 +298,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool,
       # ignoring the unroll switch (verified on a minimal case).
       fresh = lambda *a: fn(*a)  # noqa: E731
       with unroll_scans(), mesh:
+        # repro: allow(R4): fresh jit is REQUIRED here -- reusing the cached one would ignore the unroll switch (see comment above)
         lo_u = jax.jit(fresh, in_shardings=in_sh, out_shardings=out_sh
                        ).lower(*args)
       cost_unrolled = lo_u.cost_analysis() or {}

@@ -57,7 +57,7 @@ def main() -> None:
                   help="run the multi-epoch SelectionService for this many "
                   "epochs (mesh mode only)")
   ap.add_argument("--objective", default="facility",
-                  choices=["facility", "saturated_coverage"],
+                  choices=["facility", "saturated_coverage", "info_gain"],
                   help="service mode: selection objective; warm starts "
                   "engage for any objective with a registered "
                   "BoundMaintainer (core/objectives.py)")

@@ -27,6 +27,21 @@ def make_serve_fns(model: Model, par: Parallelism = Parallelism()):
   return prefill_fn, decode_fn
 
 
+# Jitted serve fns are cached per (model, par) identity so repeated
+# generate() calls reuse the same executables instead of re-jitting --
+# jax.jit caches on function identity, and a fresh closure per call is a
+# guaranteed cache miss (the R4 bug class, see docs/analysis.md).
+_SERVE_FN_CACHE: dict[tuple[int, int], tuple] = {}
+
+
+def _compile_serve_fns(model: Model, par: Parallelism):
+  key = (id(model), id(par))
+  if key not in _SERVE_FN_CACHE:
+    prefill_fn, decode_fn = make_serve_fns(model, par)
+    _SERVE_FN_CACHE[key] = (jax.jit(prefill_fn), jax.jit(decode_fn))
+  return _SERVE_FN_CACHE[key]
+
+
 def generate(model: Model, params, batch: dict, *, steps: int,
              max_len: int | None = None, temperature: float = 0.0,
              rng: Array | None = None,
@@ -38,9 +53,7 @@ def generate(model: Model, params, batch: dict, *, steps: int,
   memory = model._memory(params, batch, par)
   caches = model.init_cache(b, max_len, memory=memory)
 
-  prefill_fn, decode_fn = make_serve_fns(model, par)
-  prefill_fn = jax.jit(prefill_fn)
-  decode_fn = jax.jit(decode_fn)
+  prefill_fn, decode_fn = _compile_serve_fns(model, par)
 
   logits, caches = prefill_fn(params, batch, caches)
   rng = rng if rng is not None else jax.random.PRNGKey(0)

@@ -84,7 +84,9 @@ _BOUND_SLACK_REL = 1e-3
 _BOUND_SLACK_ABS = 1e-6
 
 # named service objectives; any instance exposing the protocol surface of
-# core/greedi.py (init/gains/update/value/partial_stats) works too
+# core/greedi.py (init/gains/update/value/partial_stats) works too.
+# "info_gain" is constructed specially (its state carries a fixed-size
+# Cholesky factor, so it needs the service's step budget as k_max).
 _OBJECTIVES = {
     "facility": O.FacilityLocation,
     "saturated_coverage": O.SaturatedCoverage,
@@ -177,11 +179,19 @@ class SelectionService:
     self._mode = mode
     self._deadline = deadline
     if isinstance(objective, str):
-      if objective not in _OBJECTIVES:
+      if objective == "info_gain":
+        # one state instance serves round 1 (kappa steps) and round 2 /
+        # the A_max replay (k_final and kappa steps respectively)
+        objective = O.InformationGain(k_max=max(kappa, k_final),
+                                      kernel=kernel,
+                                      kernel_kwargs=kernel_kwargs)
+      elif objective in _OBJECTIVES:
+        objective = _OBJECTIVES[objective](kernel=kernel,
+                                           kernel_kwargs=kernel_kwargs)
+      else:
         raise ValueError(f"objective {objective!r} not in "
-                         f"{sorted(_OBJECTIVES)} (or pass an instance)")
-      objective = _OBJECTIVES[objective](kernel=kernel,
-                                         kernel_kwargs=kernel_kwargs)
+                         f"{sorted(_OBJECTIVES) + ['info_gain']} "
+                         "(or pass an instance)")
     self._objective = objective
     # the store's bound pass and the epoch protocol must match the
     # objective's configuration: similarity kernel AND oracle backend.  A
@@ -249,6 +259,9 @@ class SelectionService:
           rng=r_run, backend=self._backend, gids=gids_sh, mode=self._mode,
           warm_bounds=wb, liveness_age=ages, liveness_deadline=deadline)
 
+    # the raw (unjitted) epoch body is the analyzer's traceable entry point
+    # (repro.analysis.entries traces it with jax.make_jaxpr at store shapes)
+    self._epoch_raw = _epoch
     self._epoch_fn = jax.jit(_epoch)
 
   # ---- public surface ------------------------------------------------------

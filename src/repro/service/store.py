@@ -222,6 +222,7 @@ class CorpusStore:
       widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
       return jnp.pad(x, widths, constant_values=fill)
 
+    # repro: allow(R4): growth migration is a sanctioned O(log n) recompile -- a fresh jit per capacity doubling, never per append
     mig = jax.jit(_pad, static_argnums=(1,), out_shardings=self._sharding)
     self._feats = mig(self._feats, 0)
     self._gids = mig(self._gids, -1)
@@ -314,7 +315,13 @@ class CorpusStore:
         add, sums_part = maintainer.append_update(
             rows, lfeats, rvalid, lvalid, kernel=kernel, h=h,
             backend=backend)
-        sums = jax.lax.psum(sums_part, ax)
+        if getattr(maintainer, "sums_global", False):
+          # data-independent maintainers (e.g. the info-gain prior bound)
+          # compute each new row's COMPLETE bound identically on every
+          # shard -- a psum here would multiply it by the mesh size
+          sums = sums_part
+        else:
+          sums = jax.lax.psum(sums_part, ax)
         lhi, llo = _df_add(lhi, llo, add)
         lhi = lhi.at[widx].set(sums, mode="drop")
         llo = llo.at[widx].set(jnp.zeros((ab,), jnp.float32), mode="drop")
@@ -334,7 +341,9 @@ class CorpusStore:
           out_specs=(P(ax),) * n_state)(*arrays_and_chunk)
 
     # outputs pinned to the store's row sharding: the resident block must
-    # stay mesh-sharded across appends no matter what GSPMD would infer
+    # stay mesh-sharded across appends no matter what GSPMD would infer.
+    # The raw body is kept for the analyzer (repro.analysis.entries).
+    self._append_raw = write
     self._append_fn = jax.jit(write, donate_argnums=tuple(range(n_state)),
                               out_shardings=(self._sharding,) * n_state)
 
@@ -497,6 +506,8 @@ class CorpusStore:
       _, _, out_g, out_s = jax.lax.fori_loop(0, k, step, init)
       return out_g, out_s
 
+    # raw body kept for the analyzer (repro.analysis.entries)
+    self._query_raw = merge
     self._query_fn = jax.jit(merge)
 
   def query_sieves(self):

@@ -1,0 +1,32 @@
+"""Fixture: the per-call-jit bug class (R4).
+
+A jit created inside the request path is a guaranteed compile-cache miss on
+every call -- jax.jit caches on function identity and each closure here is a
+fresh object.  This is a minimal repro of the serve_step.generate() bug.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def make_step(scale):
+
+  def step(x):
+    return x * scale
+
+  return step
+
+
+def handle_request(x):
+  step = jax.jit(make_step(2.0))  # BUG: fresh jit per request
+  return step(x)
+
+
+def _compile_step():
+  # allowed: _compile* methods are the sanctioned hoist point
+  return jax.jit(make_step(2.0))
+
+
+def main():
+  # allowed: process entry points jit once per process
+  fn = jax.jit(lambda x: x + 1)
+  return fn(jnp.ones((4,)))

@@ -1,0 +1,37 @@
+"""Fixture: the sort-in-loop-under-shard_map bug class (R1/R5).
+
+On XLA CPU with multiple devices, a ``sort`` primitive inside a while/scan
+body under shard_map could return another shard's output (the PR 4 bug).
+``top1_by_priority`` below reproduces the hazardous structure: a fori_loop
+whose body argsorts per-shard priorities, run under a multi-device
+shard_map.  The AST layer flags the bare ``jnp.argsort`` lexically (R5,
+this module uses shard_map); the jaxpr layer flags the traced ``sort``
+primitive inside the loop semantically (R1).
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def top1_by_priority(feats, mesh):
+  """Repeatedly argsort per-shard priorities inside a loop, under shard_map."""
+
+  def shard_body(local):
+    def body(_, carry):
+      pri = jnp.sum(local * carry[None, :], axis=-1)
+      order = jnp.argsort(-pri)  # BUG: sort primitive in loop under shard_map
+      best = local[order[0]]
+      return carry + best
+    acc = jax.lax.fori_loop(0, 4, body, jnp.zeros((local.shape[1],)))
+    return jax.lax.psum(acc, "data")
+
+  f = shard_map(shard_body, mesh=mesh, in_specs=P("data", None),
+                out_specs=P())
+  return f(feats)
+
+
+def build(n_devices):
+  mesh = Mesh(jax.devices()[:n_devices], ("data",))
+  feats = jax.ShapeDtypeStruct((64, 8), jnp.float32)
+  return lambda x: top1_by_priority(x, mesh), (feats,)

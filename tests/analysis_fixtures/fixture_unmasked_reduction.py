@@ -1,0 +1,22 @@
+"""Fixture: masked-reduction-without-mask bug class (R3).
+
+Pad-and-mask blocks carry a gid column whose sign encodes row validity
+(gid >= 0).  A row reduction that ignores it silently counts padding rows.
+``bad_total_gain`` drops the mask; ``good_total_gain`` is the masked twin
+that consumes the gid-validity taint and must NOT be flagged.
+"""
+import jax.numpy as jnp
+
+N_ROWS = 48  # the pad-and-mask row size the analyzer is told about
+D = 16
+
+
+def bad_total_gain(feats, gids, weights):
+  gains = feats @ weights  # (N_ROWS,)
+  return jnp.sum(gains)  # BUG: reduces over padding rows too
+
+
+def good_total_gain(feats, gids, weights):
+  gains = feats @ weights
+  valid = (gids >= 0).astype(gains.dtype)
+  return jnp.sum(gains * valid)  # masked twin: consumes the validity taint

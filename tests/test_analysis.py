@@ -1,0 +1,180 @@
+"""Tests for the repro.analysis hazard analyzer (rules R1-R6).
+
+Each seeded fixture in tests/analysis_fixtures/ must trip exactly its own
+rule, the masked twins must stay clean, and the committed source tree must
+have zero unsuppressed findings (the same gate CI enforces).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import ast_lint
+from repro.analysis import findings as F
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = REPO / "tests" / "analysis_fixtures"
+
+
+def _lint(path: Path):
+  return ast_lint.lint_file(path, REPO)
+
+
+# ---------------------------------------------------------------- AST layer
+
+
+def test_per_call_jit_fixture_trips_only_r4():
+  found = _lint(FIXTURES / "fixture_per_call_jit.py")
+  assert [f.rule for f in found] == ["R4"]
+  (f,) = found
+  # the bug is in handle_request; _compile_step and main are allowlisted
+  assert "handle_request" in f.msg
+  src = (FIXTURES / "fixture_per_call_jit.py").read_text().splitlines()
+  assert "BUG" in src[f.line - 1]
+
+
+def test_sort_fixture_trips_r5_lexically():
+  found = _lint(FIXTURES / "fixture_sort_in_loop.py")
+  assert [f.rule for f in found] == ["R5"]
+  src = (FIXTURES / "fixture_sort_in_loop.py").read_text().splitlines()
+  assert "BUG" in src[found[0].line - 1]
+
+
+def test_unmasked_reduction_fixture_is_ast_clean():
+  # R3 is a jaxpr-layer rule; the AST layer must not flag this file
+  assert _lint(FIXTURES / "fixture_unmasked_reduction.py") == []
+
+
+def test_r6_flags_branch_on_traced_param(tmp_path):
+  p = tmp_path / "mod.py"
+  p.write_text(
+      "import jax\n"
+      "import functools\n"
+      "@jax.jit\n"
+      "def f(x, n):\n"
+      "    if n > 0:\n"
+      "        return x * n\n"
+      "    return x\n"
+      "@functools.partial(jax.jit, static_argnames=('n',))\n"
+      "def g(x, n):\n"
+      "    if n > 0:\n"
+      "        return x * n\n"
+      "    return x\n")
+  found = ast_lint.lint_file(p, tmp_path)
+  assert [f.rule for f in found] == ["R6"]
+  assert "'f'" in found[0].msg and "n" in found[0].msg
+
+
+def test_r5_ignored_outside_shard_map_modules(tmp_path):
+  p = tmp_path / "plain.py"
+  p.write_text("import jax.numpy as jnp\n"
+               "def top(x):\n"
+               "    return jnp.argsort(x)\n")
+  assert ast_lint.lint_file(p, tmp_path) == []
+
+
+# ------------------------------------------------------------- suppressions
+
+
+def test_suppression_requires_justification(tmp_path):
+  p = tmp_path / "mod.py"
+  p.write_text(
+      "import jax\n"
+      "def handler(x):\n"
+      "    f = jax.jit(lambda y: y)  # repro: allow(R4)\n"
+      "    g = jax.jit(lambda y: y)  # repro: allow(R4): one-shot tool\n"
+      "    return f(x) + g(x)\n")
+  active, suppressed = F.apply_suppressions(
+      ast_lint.lint_file(p, tmp_path), tmp_path)
+  assert len(suppressed) == 1 and suppressed[0].line == 4
+  assert len(active) == 1 and active[0].line == 3
+  assert "justification missing" in active[0].hint
+
+
+def test_suppression_line_above_and_wrong_rule(tmp_path):
+  p = tmp_path / "mod.py"
+  p.write_text(
+      "import jax\n"
+      "def handler(x):\n"
+      "    # repro: allow(R4): benchmarked, jit is intentional here\n"
+      "    f = jax.jit(lambda y: y)\n"
+      "    # repro: allow(R5): wrong rule, must not suppress R4\n"
+      "    g = jax.jit(lambda y: y)\n"
+      "    return f(x) + g(x)\n")
+  active, suppressed = F.apply_suppressions(
+      ast_lint.lint_file(p, tmp_path), tmp_path)
+  assert [f.line for f in suppressed] == [4]
+  assert [f.line for f in active] == [6]
+
+
+def test_baseline_round_trip(tmp_path):
+  f1 = F.Finding(rule="R4", file="a.py", line=3, msg="m1")
+  f2 = F.Finding(rule="R5", file="b.py", line=7, msg="m2")
+  bp = tmp_path / "base.json"
+  F.write_baseline(bp, [f1])
+  base = F.load_baseline(bp)
+  assert F.new_findings([f1, f2], base) == [f2]
+
+
+# -------------------------------------------------------------- jaxpr layer
+
+
+def test_r3_flags_unmasked_reduction_and_spares_masked_twin():
+  import jax
+  import jax.numpy as jnp
+  from repro.analysis import check_entry
+  from tests.analysis_fixtures import fixture_unmasked_reduction as fx
+
+  args = (jax.ShapeDtypeStruct((fx.N_ROWS, fx.D), jnp.float32),
+          jax.ShapeDtypeStruct((fx.N_ROWS,), jnp.int32),
+          jax.ShapeDtypeStruct((fx.D,), jnp.float32))
+  bad = check_entry(fx.bad_total_gain, args, entry="fx:bad",
+                    mask_positions=(1,), row_sizes=(fx.N_ROWS,),
+                    repo_root=REPO)
+  assert {f.rule for f in bad} == {"R3"}
+  good = check_entry(fx.good_total_gain, args, entry="fx:good",
+                     mask_positions=(1,), row_sizes=(fx.N_ROWS,),
+                     repo_root=REPO)
+  assert good == []
+
+
+def test_r1_flags_sort_in_loop_under_shard_map(subrun):
+  out = subrun("""
+      import jax
+      from pathlib import Path
+      import sys
+      sys.path.insert(0, {repo!r})
+      from repro.analysis import check_entry
+      from tests.analysis_fixtures import fixture_sort_in_loop as fx
+
+      fn, args = fx.build(4)
+      found = check_entry(fn, args, entry="fx:sort", mask_positions=(),
+                          row_sizes=(), repo_root=Path({repo!r}))
+      rules = sorted({{f.rule for f in found}})
+      print("RULES", rules)
+      assert rules == ["R1"], found
+      # and the finding points into the fixture, at the BUG line
+      (f,) = [f for f in found if f.rule == "R1"]
+      src = Path({repo!r}, f.file).read_text().splitlines()
+      assert "BUG" in src[f.line - 1], (f.file, f.line)
+      print("OK")
+      """.format(repo=str(REPO)), 4)
+  assert "OK" in out
+
+
+# ------------------------------------------------------------------ CI gate
+
+
+def test_src_has_zero_unsuppressed_findings():
+  """The same gate the CI analysis job runs: full AST + jaxpr sweep."""
+  env = dict(os.environ)
+  env["PYTHONPATH"] = str(REPO / "src")
+  env.pop("XLA_FLAGS", None)  # the CLI forces its own device count
+  out = subprocess.run(
+      [sys.executable, "-m", "repro.analysis", "src",
+       "--baseline", "analysis_baseline.json"],
+      cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+  assert out.returncode == 0, f"\n{out.stdout}\n{out.stderr}"
+  assert "0 new finding(s)" in out.stdout

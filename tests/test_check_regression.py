@@ -1,0 +1,112 @@
+"""Unit tests for the benchmark regression gate (benchmarks/check_regression.py).
+
+The gate is a CI guard: its own failure modes (missing keys, empty shared
+set, malformed inputs) must produce clear diagnoses, not tracebacks or
+silent passes.
+"""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "check_regression", REPO / "benchmarks" / "check_regression.py")
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+
+def _payload(**ratios):
+  return {"results": [{"name": f"{k}_speedup", "us_per_call": v}
+                      for k, v in ratios.items()]}
+
+
+def test_ok_within_tolerance():
+  code, lines = cr.check(_payload(fused=2.0), _payload(fused=1.6), tol=0.25)
+  assert code == 0
+  assert any(l.startswith("OK:") for l in lines)
+
+
+def test_regression_below_floor():
+  code, lines = cr.check(_payload(fused=2.0), _payload(fused=1.4), tol=0.25)
+  assert code == 1
+  assert any("REGRESSED" in l for l in lines)
+
+
+def test_missing_baseline_key_fails_and_names_it():
+  """A BENCH key in the baseline but not the fresh run must fail with the
+  key named, even while other shared entries pass."""
+  code, lines = cr.check(_payload(fused=2.0, lazy=3.0), _payload(fused=2.0))
+  assert code == 1
+  (miss,) = [l for l in lines if "absent from the fresh run" in l]
+  assert miss.startswith("FAIL") and "lazy_speedup" in miss
+
+
+def test_missing_key_named_even_when_no_shared_entries():
+  """Regression: with a fully-disjoint sweep the old gate reported only
+  'no shared entries' -- the missing names are the actual diagnosis."""
+  code, lines = cr.check(_payload(lazy=3.0), _payload(other=1.0))
+  assert code == 1
+  assert any("absent from the fresh run" in l and "lazy_speedup" in l
+             for l in lines)
+  assert any("no shared speedup entries" in l for l in lines)
+
+
+def test_allow_missing_downgrades_to_note():
+  code, lines = cr.check(_payload(fused=2.0, lazy=3.0), _payload(fused=2.0),
+                         allow_missing=True)
+  assert code == 0
+  assert any(l.startswith("note:") and "lazy_speedup" in l for l in lines)
+
+
+def test_new_ungated_entries_noted():
+  code, lines = cr.check(_payload(fused=2.0), _payload(fused=2.0, novel=5.0))
+  assert code == 0
+  assert any("not in the baseline" in l and "novel_speedup" in l
+             for l in lines)
+
+
+def test_suite_failures_fail_first():
+  new = _payload(fused=2.0)
+  new["failures"] = ["select_step[lazy]"]
+  code, lines = cr.check(_payload(fused=2.0), new)
+  assert code == 1 and "suite failures" in lines[0]
+
+
+def _run_cli(*argv):
+  return subprocess.run(
+      [sys.executable, str(REPO / "benchmarks" / "check_regression.py"),
+       *argv], capture_output=True, text=True, timeout=60)
+
+
+def test_cli_missing_file_is_clean_error(tmp_path):
+  new = tmp_path / "new.json"
+  new.write_text(json.dumps(_payload(fused=2.0)))
+  out = _run_cli("--baseline", str(tmp_path / "nope.json"), "--new", str(new))
+  assert out.returncode != 0
+  assert "not found" in (out.stdout + out.stderr)
+  assert "Traceback" not in out.stderr
+
+
+def test_cli_malformed_json_is_clean_error(tmp_path):
+  bad = tmp_path / "bad.json"
+  bad.write_text("{not json")
+  good = tmp_path / "good.json"
+  good.write_text(json.dumps(_payload(fused=2.0)))
+  out = _run_cli("--baseline", str(bad), "--new", str(good))
+  assert out.returncode != 0
+  assert "malformed JSON" in (out.stdout + out.stderr)
+  assert "Traceback" not in out.stderr
+
+
+def test_cli_end_to_end_ok(tmp_path):
+  base = tmp_path / "base.json"
+  base.write_text(json.dumps(_payload(fused=2.0)))
+  new = tmp_path / "new.json"
+  new.write_text(json.dumps(_payload(fused=2.1)))
+  out = _run_cli("--baseline", str(base), "--new", str(new))
+  assert out.returncode == 0, out.stdout + out.stderr
+  assert "OK:" in out.stdout

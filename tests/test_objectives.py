@@ -159,3 +159,62 @@ def test_incremental_value_matches_replay():
                         jnp.ones((3,), bool))
   np.testing.assert_allclose(float(obj.value(st)), float(obj.value(st2)),
                              rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Info-gain prior bound maintainer (warm-start table, ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", ["rbf", "linear"])
+@pytest.mark.parametrize("sigma", [1.0, 0.7])
+def test_info_gain_prior_bound_is_exact_empty_set_gain(kernel, sigma):
+  """The maintained bound 0.5*log1p(k_vv/sigma^2) must equal the objective's
+  actual empty-set gain -- it is not just an upper bound, it is exact."""
+  obj = O.InformationGain(k_max=4, kernel=kernel, sigma=sigma)
+  m = O.bound_maintainer_for(obj)
+  assert m is not None and m.sigma == sigma  # for_objective bound the noise
+  assert m.sums_global and not m.supports_sieve
+
+  rng = np.random.default_rng(0)
+  rows = jnp.asarray(rng.normal(size=(5, D)).astype(np.float32))
+  block = jnp.asarray(rng.normal(size=(7, D)).astype(np.float32))
+  valid = jnp.ones((5,), jnp.float32)
+  add, sums = m.append_update(rows, block, valid, jnp.ones((7,), jnp.float32),
+                              kernel=kernel, h=0.75)
+  assert np.all(np.asarray(add) == 0.0)  # prior moves nobody else's bound
+  want = obj.gains(obj.init_d(D), rows)  # gains at the empty set
+  np.testing.assert_allclose(np.asarray(sums), np.asarray(want), rtol=1e-5)
+  # epoch_bounds is the identity: the prior is per-item, never sum-form
+  np.testing.assert_allclose(np.asarray(m.epoch_bounds(sums, 13.0)),
+                             np.asarray(sums))
+  # invalid rows get bound 0 (padding never looks selectable)
+  _, s0 = m.append_update(rows, block, jnp.zeros((5,), jnp.float32),
+                          jnp.ones((7,), jnp.float32), kernel=kernel, h=0.75)
+  assert np.all(np.asarray(s0) == 0.0)
+
+
+def test_info_gain_maintainer_unsupported_kernel_runs_cold():
+  obj = O.InformationGain(k_max=4, kernel="neg_sq_dist")
+  assert O.bound_maintainer_for(obj) is None
+
+
+def test_info_gain_shard_state_partial_stats_weighting():
+  """partial_stats must weight the (eval-independent) gains by the shard's
+  live count so the engine's psum-weighted mean reproduces them exactly."""
+  obj = O.InformationGain(k_max=4, kernel="linear", kernel_kwargs=())
+  feats = _feats(7)
+  mask = jnp.arange(N) < 10
+  st = obj.init(feats, mask)
+  assert float(st.n_live) == 10.0
+  cands = feats[:5]
+  part, n_live = obj.partial_stats(st, cands)
+  np.testing.assert_allclose(np.asarray(part),
+                             np.asarray(obj.gains(st, cands)) * 10.0,
+                             rtol=1e-6)
+  assert float(n_live) == 10.0
+  # update threads the wrapper: selection state advances, live mass sticks
+  st2 = obj.update(st, cands[0])
+  assert isinstance(st2, type(st)) and float(st2.n_live) == 10.0
+  assert int(st2.inner.count) == 1
+  assert float(obj.value(st2)) > 0.0

@@ -490,3 +490,54 @@ assert r2.stats.alive.tolist() == [True] * 4, r2.stats.alive
 print("REVIVAL_OK")
 """, n_devices=4)
   assert "REVIVAL_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-7 satellite: info-gain objective warm-starts via the prior bound
+# ---------------------------------------------------------------------------
+
+
+def test_service_info_gain_warm_equals_cold_every_epoch():
+  """The prior bound 0.5*log1p(k_vv/sigma^2) is the EXACT empty-set gain, so
+  warm lazy epochs must select bit-identically to cold ones."""
+  f = np.asarray(_feats(4, 500, 16))
+  sels, stats = {}, {}
+  for warm in (True, False):
+    svc = _service(seed=7, warm_start=warm, objective="info_gain")
+    svc.append(f[:256])
+    out = [svc.epoch().sel_gids.tolist()]
+    svc.append(f[256:])
+    r = [svc.epoch() for _ in range(2)]
+    out += [x.sel_gids.tolist() for x in r]
+    sels[warm], stats[warm] = out, r[-1].stats
+  assert sels[True] == sels[False]
+  # parity must not be trivially cold==cold: the warm service really ran warm
+  assert stats[True].warm and not stats[False].warm
+
+
+def test_service_info_gain_warm_parity_sharded(subrun):
+  """Same parity on a real 4-shard mesh: the maintainer's complete
+  (non-psummed) sums must survive the sharded append path (sums_global)."""
+  subrun("""
+      import numpy as np
+      from repro.service import SelectionService
+      from repro.util import make_mesh
+
+      f = np.random.default_rng(0).normal(size=(500, 16)).astype(np.float32)
+      sels = {}
+      for warm in (True, False):
+        svc = SelectionService(make_mesh((4,), ("data",)), d=16, kappa=8,
+                               k_final=8, capacity=256, append_block=128,
+                               objective="info_gain", seed=7,
+                               warm_start=warm)
+        svc.append(f[:256])
+        out = [svc.epoch().sel_gids.tolist()]
+        svc.append(f[256:])
+        rs = [svc.epoch() for _ in range(2)]
+        out += [r.sel_gids.tolist() for r in rs]
+        sels[warm] = out
+        if warm:
+          assert rs[-1].stats.warm
+      assert sels[True] == sels[False], sels
+      print("PARITY_OK")
+      """, 4)

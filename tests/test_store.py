@@ -177,9 +177,14 @@ def test_bound_maintainer_registry_gates():
   assert O.bound_maintainer_for(O.FacilityLocation(baseline=-0.5)) is None
   # a non-negative baseline keeps relu(sim - b) <= relu(sim): still valid
   assert O.bound_maintainer_for(O.FacilityLocation(baseline=0.2)) is not None
+  # info-gain has its own prior-bound maintainer, sigma-bound per instance
+  ig = O.bound_maintainer_for(O.InformationGain(k_max=4, sigma=0.5))
+  assert ig is not None and ig.sigma == 0.5
+  # ...but only for kernels whose k(v,v) is row-computable
+  assert O.bound_maintainer_for(
+      O.InformationGain(k_max=4, kernel="neg_sq_dist")) is None
   # unregistered objective types have no maintainer
   assert O.bound_maintainer_for(O.GraphCut()) is None
-  assert O.bound_maintainer_for(O.InformationGain(k_max=4)) is None
   assert O.bound_maintainer_for(O.Modular()) is None
 
 
