@@ -1,0 +1,148 @@
+"""Multi-tenant batched query serving: one scan answers a whole batch
+(the BENCH_7.json trajectory of ISSUE 8).
+
+One service ingests a near-duplicate corpus, runs an epoch, then streams
+more rows so the standing sieves hold a fresh answer.  A batch of B
+heterogeneous tenant requests (varying k, tie-break seed, and per-tenant
+gid exclusion lists) is then answered two ways:
+
+  * ``sequential`` -- B separate ``query()`` calls, one device merge each;
+  * ``batched``    -- ONE ``query_batch()`` call: the same merge vmapped
+    over the per-query parameters, sieve state shared across lanes, so a
+    single scan of the standing summaries serves every tenant.
+
+Selections must be identical request-for-request (the batched merge is
+the same body vmapped; value estimates agree to ~ulp -- different XLA
+executables may round the d-dim reductions differently), and the whole
+run must hold the compiled-once transfer contract: ``query_trace_count``
+and ``query_batch_trace_count`` both stay 1 no matter how heterogeneous
+the stream is.
+
+A ``QueryBatcher`` pass measures the serving loop end to end: requests
+submitted one at a time, drained through accumulate-until-B-or-deadline
+micro-batches, with per-request submit-to-result latency percentiles.
+
+Emitted entries (gated ones contain "speedup"; check_regression.py):
+
+  * ``query_serving/seq_qps_n*`` / ``query_serving/batch_qps_n*`` --
+    requests per second, sequential vs batched;
+  * ``query_serving/speedup_batch_vs_seq_n*`` -- the dimensionless
+    machine-portable throughput ratio the CI gate watches;
+  * ``query_serving/seq_p50_us_n*`` / ``seq_p95_us_n*`` -- per-request
+    latency percentiles of the sequential loop;
+  * ``query_serving/batcher_p50_us_n*`` / ``batcher_p95_us_n*`` --
+    submit-to-result latency percentiles through the micro-batcher.
+
+The run also asserts the ISSUE-8 acceptance bound: batched throughput
+>= 5x sequential at n=16384 with B=64 on the CPU container.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, near_dup_corpus
+
+D, KAPPA, K_FINAL, B, REPS = 32, 16, 16, 64, 5
+
+
+def _make_requests(svc, b: int):
+  """B heterogeneous tenant requests: every k in (0, k_final], four
+  tie-break seeds, and rotating exclusion lists drawn from live gids."""
+  from repro.service import QueryRequest
+  base = svc.query()
+  reqs = []
+  for i in range(b):
+    excl = tuple(int(g) for g in base.sel_gids[:i % 4] if g >= 0)
+    reqs.append(QueryRequest(k=1 + (i % K_FINAL), seed=i % 4,
+                             exclude_gids=excl))
+  return reqs
+
+
+def _run_sequential(svc, reqs):
+  lat, out = [], []
+  for r in reqs:
+    t0 = time.perf_counter()
+    out.append(svc.query(r.k, seed=r.seed,
+                         exclude_gids=r.exclude_gids or None))
+    lat.append(time.perf_counter() - t0)
+  return out, lat
+
+
+def run(quick: bool = False) -> None:
+  from repro.service import QueryBatcher, SelectionService
+  from repro.util import make_mesh
+
+  mesh = make_mesh((1,), ("data",))
+  ns = (4096,) if quick else (4096, 16384)
+  for n in ns:
+    feats = np.asarray(near_dup_corpus(n, D, seed=0))
+    n0 = n // 2
+    svc = SelectionService(mesh, d=D, kappa=KAPPA, k_final=K_FINAL,
+                           capacity=n, seed=0)
+    svc.append(feats[:n0])
+    svc.epoch()
+    svc.append(feats[n0:])  # stale epoch -> every request is a sieve merge
+    reqs = _make_requests(svc, B)
+    shapes = {"n": n, "d": D, "kappa": KAPPA, "k_final": K_FINAL, "b": B,
+              "mask_cap": svc.store.query_mask_cap,
+              "tile": svc.store.query_batch_tile}
+
+    svc.query_batch(reqs)                  # compile both paths before timing
+    seq_res, _ = _run_sequential(svc, reqs)
+
+    t_seq, seq_lat = np.inf, None
+    for _ in range(REPS):
+      out, lat = _run_sequential(svc, reqs)
+      if sum(lat) < t_seq:
+        t_seq, seq_lat = sum(lat), lat
+    t_batch = np.inf
+    for _ in range(REPS):
+      t0 = time.perf_counter()
+      batch_res = svc.query_batch(reqs)
+      t_batch = min(t_batch, time.perf_counter() - t0)
+
+    # request-for-request parity: identical selections, ~ulp-equal values
+    for i, (rb, rs) in enumerate(zip(batch_res, seq_res)):
+      assert np.array_equal(rb.sel_gids, rs.sel_gids), (n, i, rb, rs)
+      assert np.isclose(rb.value_estimate, rs.value_estimate,
+                        rtol=1e-5, atol=1e-7), (n, i, rb, rs)
+    # compiled-once transfer contract across the whole heterogeneous run
+    assert svc.store.query_trace_count == 1, svc.store.query_trace_count
+    assert svc.store.query_batch_trace_count == 1, (
+        svc.store.query_batch_trace_count)
+
+    speedup = t_seq / t_batch
+    if n >= 16384:  # the ISSUE-8 acceptance bound at the full size
+      assert speedup >= 5.0, (n, speedup)
+
+    # serving loop end to end: submit one at a time, drain in micro-batches
+    with QueryBatcher(svc, max_batch=B, max_delay_s=0.005) as qb:
+      t0s, futs = [], []
+      for r in reqs:
+        t0s.append(time.perf_counter())
+        futs.append(qb.submit(r))
+      b_lat = [time.perf_counter() - t0
+               for t0, f in zip(t0s, futs) if f.result() is not None]
+      stats = qb.stats
+    assert stats.served == B and stats.batches >= 1, stats
+
+    emit(f"query_serving/seq_qps_n{n}", B / t_seq,
+         derived="requests_per_s", shapes=shapes)
+    emit(f"query_serving/batch_qps_n{n}", B / t_batch,
+         derived="requests_per_s", shapes=shapes)
+    emit(f"query_serving/speedup_batch_vs_seq_n{n}", speedup,
+         derived="x_seq_wall_over_batch_wall", shapes=shapes)
+    emit(f"query_serving/seq_p50_us_n{n}",
+         float(np.percentile(seq_lat, 50)) * 1e6, derived="us", shapes=shapes)
+    emit(f"query_serving/seq_p95_us_n{n}",
+         float(np.percentile(seq_lat, 95)) * 1e6, derived="us", shapes=shapes)
+    emit(f"query_serving/batcher_p50_us_n{n}",
+         float(np.percentile(b_lat, 50)) * 1e6, derived="us", shapes=shapes)
+    emit(f"query_serving/batcher_p95_us_n{n}",
+         float(np.percentile(b_lat, 95)) * 1e6, derived="us", shapes=shapes)
+    print(f"# n={n}: {B} requests sequential {t_seq*1e3:.1f}ms vs batched "
+          f"{t_batch*1e3:.1f}ms (x{speedup:.1f}); batcher "
+          f"{stats.batches} drain(s), mean occupancy "
+          f"{stats.mean_occupancy:.1f}")

@@ -22,8 +22,9 @@ def main() -> None:
 
   from benchmarks import (common, fig4_exemplar, fig6_active_set,
                           fig8_speedup, fig9_maxcut, fig10_coverage,
-                          kernels_bench, roofline, select_step,
-                          service_epochs, sieve_query, store_transfer)
+                          kernels_bench, query_serving, roofline,
+                          select_step, service_epochs, sieve_query,
+                          store_transfer)
 
   if args.json:
     common.start_collection()
@@ -38,6 +39,7 @@ def main() -> None:
       "roofline": lambda: roofline.run(quick=args.quick),
       "select_step": lambda: select_step.run(quick=args.quick),
       "service_epochs": lambda: service_epochs.run(quick=args.quick),
+      "query_serving": lambda: query_serving.run(quick=args.quick),
       "sieve_query": lambda: sieve_query.run(quick=args.quick),
       "store_transfer": lambda: store_transfer.run(quick=args.quick),
   }

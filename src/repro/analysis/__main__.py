@@ -27,6 +27,27 @@ def _force_devices(n: int) -> None:
         f"{flags} --xla_force_host_platform_device_count={n}".strip())
 
 
+def _changed_files(ref: str | None, explicit: list[str] | None,
+                   root: Path) -> list[Path]:
+  """The change set of a --diff run: an explicit file list, or the git diff
+  of the working tree vs ``ref`` plus untracked files (so the mode sees
+  exactly what a PR would ship)."""
+  out: list[Path] = []
+  if explicit is not None:
+    out.extend((root / f) if not Path(f).is_absolute() else Path(f)
+               for f in explicit)
+  if ref is not None:
+    import subprocess
+    for cmd in (["git", "diff", "--name-only", ref],
+                ["git", "ls-files", "--others", "--exclude-standard"]):
+      res = subprocess.run(cmd, cwd=root, capture_output=True, text=True)
+      if res.returncode != 0:
+        raise SystemExit(f"--diff: {' '.join(cmd)} failed: "
+                         f"{res.stderr.strip()}")
+      out.extend(root / line for line in res.stdout.splitlines() if line)
+  return out
+
+
 def main(argv: list[str] | None = None) -> int:
   ap = argparse.ArgumentParser(
       prog="python -m repro.analysis",
@@ -42,6 +63,14 @@ def main(argv: list[str] | None = None) -> int:
   ap.add_argument("--ast-only", action="store_true",
                   help="skip the jaxpr layer (no tracing, no jax import)")
   ap.add_argument("--repo-root", type=Path, default=Path.cwd())
+  ap.add_argument("--diff", metavar="REF", default=None,
+                  help="O(PR) mode: AST-lint only files changed vs the git "
+                  "ref (working tree + untracked included) and trace only "
+                  "entry points whose import closure reaches a changed "
+                  "module (repro.analysis.modgraph)")
+  ap.add_argument("--diff-files", nargs="*", default=None, metavar="FILE",
+                  help="like --diff but with an explicit changed-file list "
+                  "(no git needed; used by the CI harness and tests)")
   args = ap.parse_args(argv)
 
   if not args.ast_only:
@@ -57,6 +86,22 @@ def main(argv: list[str] | None = None) -> int:
       files.extend(pp.rglob("*.py"))
     elif pp.suffix == ".py":
       files.append(pp)
+
+  # --diff: restrict the whole run to the change set.  The AST layer lints
+  # only changed files; the jaxpr layer prunes entry points through the
+  # static import graph (an entry whose closure misses every changed module
+  # cannot trace differently than it did on the base ref).
+  changed_modules: set[str] | None = None
+  diff_pruned: list[str] = []
+  if args.diff is not None or args.diff_files is not None:
+    from repro.analysis import modgraph
+    changed = _changed_files(args.diff, args.diff_files, root)
+    changed_set = {p.resolve() for p in changed}
+    files = [f for f in files if f.resolve() in changed_set]
+    src_root = root / "src"
+    changed_modules = {
+        m for m in (modgraph.module_name(p, src_root) for p in changed)
+        if m is not None}
   all_findings = ast_lint.lint_paths(files, root)
 
   skipped: list[str] = []
@@ -69,7 +114,16 @@ def main(argv: list[str] | None = None) -> int:
 
     n_dev = jax.device_count()
     seen = {f.key() for f in all_findings}
+    affected = None
+    if changed_modules is not None:
+      from repro.analysis import modgraph
+      affected = modgraph.affected_entries(
+          {ep.name: ep.roots for ep in dispatch.entry_points()},
+          changed_modules, root / "src")
     for ep in dispatch.entry_points():
+      if affected is not None and not affected.get(ep.name, True):
+        diff_pruned.append(ep.name)
+        continue
       if ep.needs_devices > n_dev:
         skipped.append(f"{ep.name} (needs {ep.needs_devices} devices, "
                        f"have {n_dev})")
@@ -108,6 +162,9 @@ def main(argv: list[str] | None = None) -> int:
           f"{len(suppressed)} suppressed")
   if skipped:
     tail += f"; {len(skipped)} entry point(s) skipped: {', '.join(skipped)}"
+  if diff_pruned:
+    tail += (f"; {len(diff_pruned)} entry point(s) unreachable from the "
+             f"diff: {', '.join(diff_pruned)}")
   print(tail)
   return 1 if new else 0
 

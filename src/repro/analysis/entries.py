@@ -134,10 +134,38 @@ def _store_query_spec() -> dispatch.TraceSpec:
   store = svc.store
   store._compile_query()
   t, k, m = store.sieve_thresholds, store.sieve_k, store._m
+  mc = store.query_mask_cap
+  # per-query runtime args: requested k, the -1-padded exclusion list (a
+  # second taint root -- it masks candidates), and the tie-break seed
   return dispatch.TraceSpec(
       fn=store._query_raw,
-      args=(_i32(m * t, k), _f32(m * t, k), _f32(m * t, k, _D)),
-      mask_args=(0,), row_sizes=(m * t * k,))
+      args=(_i32(m * t, k), _f32(m * t, k), _f32(m * t, k, _D),
+            _i32(), _i32(mc), _i32()),
+      mask_args=(0, 4), row_sizes=(m * t * k,))
+
+
+def _store_query_batch_spec() -> dispatch.TraceSpec:
+  svc = _service("facility")
+  store = svc.store
+  store._compile_query_batch()
+  t, k, m = store.sieve_thresholds, store.sieve_k, store._m
+  mc, bq = store.query_mask_cap, store.query_batch_tile
+  return dispatch.TraceSpec(
+      fn=store._query_batch_raw,
+      args=(_i32(m * t, k), _f32(m * t, k), _f32(m * t, k, _D),
+            _i32(bq), _i32(bq, mc), _i32(bq)),
+      mask_args=(0, 4), row_sizes=(m * t * k,))
+
+
+def _store_query_exact_spec() -> dispatch.TraceSpec:
+  svc = _service("facility")
+  store = svc.store
+  store._compile_query_exact(_KF)
+  mc, bq = store.query_mask_cap, store.query_batch_tile
+  return dispatch.TraceSpec(
+      fn=store._query_exact_raw,
+      args=(_f32(_N, _D), _i32(_N), _i32(bq), _i32(bq, mc)),
+      mask_args=(1, 3), row_sizes=(_N,))
 
 
 def register_all() -> None:
@@ -152,6 +180,8 @@ def register_all() -> None:
   ep("service:epoch_info_gain", lambda: _service_epoch_spec("info_gain"))
   ep("service:store_append", _store_append_spec)
   ep("service:store_query", _store_query_spec)
+  ep("service:store_query_batch", _store_query_batch_spec)
+  ep("service:store_query_exact", _store_query_exact_spec)
 
 
 register_all()

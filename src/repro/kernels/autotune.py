@@ -91,3 +91,23 @@ def lazy_tile(n: int, d: int, backend: str | None = None) -> int:
   backend = backend or default_backend()
   key = (backend if backend == "tpu" else "cpu", _bucket_d(d))
   return floor_pow2(n, cap=_LAZY_TILE.get(key, 512))
+
+
+# backend -> query-batch tile of the multi-tenant batched query path
+# (service/store.py).  The tile is the compiled batch width B of the vmapped
+# sieve merge / batched select oracles: ragged request batches pad up to it
+# (so they never retrace) and bigger batches chunk through it.  TPU lanes
+# want a wider tile to fill the VPU; on CPU the vmapped merge is a batched
+# matmul whose win saturates around 64 concurrent queries.
+_QUERY_TILE: dict[str, int] = {
+    "tpu": 128,
+    "cpu": 64,
+}
+_DEFAULT_QUERY_TILE = 64
+
+
+def query_tile(backend: str | None = None) -> int:
+  """Compiled batch width of the batched query path on ``backend``."""
+  backend = backend or default_backend()
+  key = backend if backend == "tpu" else "cpu"
+  return _QUERY_TILE.get(key, _DEFAULT_QUERY_TILE)

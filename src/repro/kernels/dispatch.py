@@ -44,6 +44,14 @@ registry carries two more families:
     best_idx) directly, so the greedy select step is one kernel pass with no
     (nc,) gains round-trip through HBM.  Registered under the same stable
     names as their gain counterparts.
+  * ``select_batched`` oracles (``register_select_batched``/
+    ``resolve_select_batched``) -- the same fused top-1 reductions vmapped
+    over a leading query axis: per-query state (coverage, masks, selection
+    factors) carries a ``(B, ...)`` batch dimension while the corpus operands
+    are shared, so ONE scan of the candidate block answers B concurrent
+    selection requests (the multi-tenant query-serving path,
+    service/store.py; batch width from ``kernels/autotune.query_tile``).
+    Registered under the same stable names as their top-1 counterparts.
 
 Adding a fused oracle for a new objective (see docs/kernels.md):
 
@@ -77,6 +85,7 @@ class Oracle(NamedTuple):
 
 _REGISTRY: dict[str, Oracle] = {}
 _SELECT: dict[str, Oracle] = {}
+_SELECT_BATCHED: dict[str, Oracle] = {}
 
 
 def register(name: str, *, pallas: Callable, ref: Callable) -> None:
@@ -87,6 +96,12 @@ def register(name: str, *, pallas: Callable, ref: Callable) -> None:
 def register_select(name: str, *, pallas: Callable, ref: Callable) -> None:
   """Register (or replace) a fused top-1 select oracle."""
   _SELECT[name] = Oracle(name, pallas, ref)
+
+
+def register_select_batched(name: str, *, pallas: Callable,
+                            ref: Callable) -> None:
+  """Register (or replace) a query-batched fused top-1 select oracle."""
+  _SELECT_BATCHED[name] = Oracle(name, pallas, ref)
 
 
 def _ensure_registered() -> None:
@@ -106,6 +121,11 @@ def select_names() -> tuple[str, ...]:
   return tuple(sorted(_SELECT))
 
 
+def select_batched_names() -> tuple[str, ...]:
+  _ensure_registered()
+  return tuple(sorted(_SELECT_BATCHED))
+
+
 def get(name: str) -> Oracle:
   _ensure_registered()
   if name not in _REGISTRY:
@@ -118,6 +138,14 @@ def get_select(name: str) -> Oracle:
   if name not in _SELECT:
     raise KeyError(f"no select oracle {name!r}; registered: {sorted(_SELECT)}")
   return _SELECT[name]
+
+
+def get_select_batched(name: str) -> Oracle:
+  _ensure_registered()
+  if name not in _SELECT_BATCHED:
+    raise KeyError(f"no batched select oracle {name!r}; registered: "
+                   f"{sorted(_SELECT_BATCHED)}")
+  return _SELECT_BATCHED[name]
 
 
 @functools.lru_cache(maxsize=None)
@@ -142,6 +170,11 @@ def resolve(name: str, backend: str = "auto") -> Callable:
 def resolve_select(name: str, backend: str = "auto") -> Callable:
   """Map (select-oracle name, backend) to the implementation to call."""
   return _pick(get_select(name), backend)
+
+
+def resolve_select_batched(name: str, backend: str = "auto") -> Callable:
+  """Map (batched select-oracle name, backend) to the implementation."""
+  return _pick(get_select_batched(name), backend)
 
 
 # ---------------------------------------------------------------------------
@@ -176,15 +209,26 @@ class EntryPoint(NamedTuple):
   name: str
   build: Callable[[], TraceSpec]
   needs_devices: int = 1  # minimum device count for a faithful trace
+  roots: tuple[str, ...] = ()  # module roots of the traced code, for the
+                               # analyzer's --diff reachability pruning
 
 
 _ENTRY_POINTS: dict[str, EntryPoint] = {}
 
 
 def register_entry_point(name: str, build: Callable[[], TraceSpec],
-                         *, needs_devices: int = 1) -> None:
-  """Register (or replace) a traceable entry point for the analyzer."""
-  _ENTRY_POINTS[name] = EntryPoint(name, build, needs_devices)
+                         *, needs_devices: int = 1,
+                         roots: tuple[str, ...] | None = None) -> None:
+  """Register (or replace) a traceable entry point for the analyzer.
+
+  ``roots`` names the modules whose import closure covers the code this
+  entry traces (``repro.analysis.modgraph`` expands it); it defaults to the
+  builder's own module, which is correct whenever the builder lives next to
+  the code it traces.
+  """
+  if roots is None:
+    roots = (getattr(build, "__module__", "") or "",)
+  _ENTRY_POINTS[name] = EntryPoint(name, build, needs_devices, tuple(roots))
 
 
 def entry_points() -> tuple[EntryPoint, ...]:

@@ -234,6 +234,91 @@ def graph_cut_select(w: Array, in_s: Array, node_ok: Array, *,
                                  interpret=_interpret())
 
 
+# ---------------------------------------------------------------------------
+# query-batched select oracles: the fused top-1 reductions vmapped over a
+# leading query axis.  The corpus-side operands (feature blocks, adjacency)
+# are SHARED across the batch -- vmap in_axes=None -- so one scan of the
+# candidate block serves B concurrent selection requests; only the per-query
+# selection state (coverage, masks, Cholesky factors) carries the (B, ...)
+# batch dimension.  Batch width comes from kernels/autotune.query_tile via
+# the callers (service/store.py pads ragged batches up to it).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
+                                             "block_n", "force_xla"))
+def facility_select_batched(eval_feats: Array, cand_feats: Array, cov: Array,
+                            eval_mask: Array, cand_ok: Array, *,
+                            kernel: str = "linear", h: float = 0.75,
+                            block_m: int | None = None,
+                            block_n: int | None = None,
+                            force_xla: bool = False):
+  """Query-batched fused top-1 facility gain -> ((B,) best, (B,) idx).
+
+  ``cov``/``eval_mask``/``cand_ok`` are (B, ne)/(B, ne)/(B, nc) per-query
+  state; ``eval_feats``/``cand_feats`` are shared across the batch.
+  """
+  fn = functools.partial(facility_select, kernel=kernel, h=h,
+                         block_m=block_m, block_n=block_n,
+                         force_xla=force_xla)
+  return jax.vmap(fn, in_axes=(None, None, 0, 0, 0))(
+      eval_feats, cand_feats, cov, eval_mask, cand_ok)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "block_m",
+                                             "block_n", "force_xla"))
+def coverage_select_batched(eval_feats: Array, cand_feats: Array,
+                            cover: Array, cap: Array, eval_mask: Array,
+                            cand_ok: Array, *, kernel: str = "linear",
+                            h: float = 0.75, block_m: int | None = None,
+                            block_n: int | None = None,
+                            force_xla: bool = False):
+  """Query-batched fused top-1 saturated-coverage gain -> ((B,), (B,)).
+
+  Per-query state: ``cover`` (B, ne), ``eval_mask`` (B, ne), ``cand_ok``
+  (B, nc); the saturation caps and feature blocks are shared.
+  """
+  fn = functools.partial(coverage_select, kernel=kernel, h=h,
+                         block_m=block_m, block_n=block_n,
+                         force_xla=force_xla)
+  return jax.vmap(fn, in_axes=(None, None, 0, None, 0, 0))(
+      eval_feats, cand_feats, cover, cap, eval_mask, cand_ok)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "h", "ridge",
+                                             "block_n", "force_xla"))
+def info_select_batched(sel_feats: Array, linv: Array, cand_feats: Array,
+                        cand_ok: Array, *, kernel: str = "rbf",
+                        h: float = 0.75, ridge: float = 1.0,
+                        block_n: int | None = None, force_xla: bool = False):
+  """Query-batched fused top-1 conditional variance -> ((B,), (B,)).
+
+  Per-query state: the selection block ``sel_feats`` (B, k, d), its inverse
+  Cholesky factor ``linv`` (B, k, k), and ``cand_ok`` (B, nc); the candidate
+  block is shared across the batch.
+  """
+  fn = functools.partial(info_select, kernel=kernel, h=h, ridge=ridge,
+                         block_n=block_n, force_xla=force_xla)
+  return jax.vmap(fn, in_axes=(0, 0, None, 0))(
+      sel_feats, linv, cand_feats, cand_ok)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "force_xla"))
+def graph_cut_select_batched(w: Array, in_s: Array, node_ok: Array, *,
+                             block_m: int | None = None,
+                             block_n: int | None = None,
+                             force_xla: bool = False):
+  """Query-batched fused top-1 node cut gain -> ((B,), (B,)).
+
+  Per-query state: the selection indicator ``in_s`` (B, n) and ``node_ok``
+  (B, n); the adjacency is shared across the batch.
+  """
+  fn = functools.partial(graph_cut_select, block_m=block_m, block_n=block_n,
+                         force_xla=force_xla)
+  return jax.vmap(fn, in_axes=(None, 0, 0))(w, in_s, node_ok)
+
+
 @functools.partial(jax.jit, static_argnames=("kernel", "h", "block_x",
                                              "block_y", "force_xla"))
 def pairwise(x: Array, y: Array, *, kernel: str = "rbf", h: float = 0.75,
@@ -412,6 +497,21 @@ dispatch.register_select("graph_cut_gain", pallas=graph_cut_select,
                          ref=functools.partial(graph_cut_select,
                                                force_xla=True))
 
+# query-batched select oracles (the multi-tenant serving path): one corpus
+# scan answers a whole query batch -- same stable names, vmapped semantics
+dispatch.register_select_batched(
+    "facility_gain", pallas=facility_select_batched,
+    ref=functools.partial(facility_select_batched, force_xla=True))
+dispatch.register_select_batched(
+    "info_gain_cond", pallas=info_select_batched,
+    ref=functools.partial(info_select_batched, force_xla=True))
+dispatch.register_select_batched(
+    "coverage_gain", pallas=coverage_select_batched,
+    ref=functools.partial(coverage_select_batched, force_xla=True))
+dispatch.register_select_batched(
+    "graph_cut_gain", pallas=graph_cut_select_batched,
+    ref=functools.partial(graph_cut_select_batched, force_xla=True))
+
 
 # ---------------------------------------------------------------------------
 # traceable entry points (repro.analysis): every oracle family above at
@@ -477,6 +577,32 @@ _ep("oracle:graph_cut_gain", lambda: dispatch.TraceSpec(
 _ep("select:graph_cut_gain", lambda: dispatch.TraceSpec(
     fn=dispatch.resolve_select("graph_cut_gain", "auto"),
     args=(_f32(_NC, _NC), _f32(_NC), _f32(_NC))))
+
+# the query-batched select family: per-query state carries a leading batch
+# axis (_B distinct from every row size so a match means "the query axis");
+# the row-axis reductions and mask roots are the unbatched oracles', vmapped
+_B = 3
+
+_ep("select_batched:facility_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select_batched("facility_gain", "auto"),
+    args=(_f32(_NE, _D), _f32(_NC, _D), _f32(_B, _NE), _f32(_B, _NE),
+          _f32(_B, _NC)),
+    mask_args=(3, 4), row_sizes=(_NE, _NC)))
+
+_ep("select_batched:coverage_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select_batched("coverage_gain", "auto"),
+    args=(_f32(_NE, _D), _f32(_NC, _D), _f32(_B, _NE), _f32(_NE),
+          _f32(_B, _NE), _f32(_B, _NC)),
+    mask_args=(4, 5), row_sizes=(_NE, _NC)))
+
+_ep("select_batched:info_gain_cond", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select_batched("info_gain_cond", "auto"),
+    args=(_f32(_B, 8, _D), _f32(_B, 8, 8), _f32(_NC, _D), _f32(_B, _NC)),
+    mask_args=(3,), row_sizes=(_NC,)))
+
+_ep("select_batched:graph_cut_gain", lambda: dispatch.TraceSpec(
+    fn=dispatch.resolve_select_batched("graph_cut_gain", "auto"),
+    args=(_f32(_NC, _NC), _f32(_B, _NC), _f32(_B, _NC))))
 
 _ep("oracle:pairwise", lambda: dispatch.TraceSpec(
     fn=dispatch.resolve("pairwise", "auto"),

@@ -15,7 +15,10 @@ With --epochs E (mesh mode) the long-lived SelectionService runs instead:
 the corpus streams in (--append-frac held back and appended after the
 first epoch), each epoch re-randomizes the partition and re-selects with
 warm-started lazy bounds (--cold disables), and per-epoch stats print as
-they stream.  --out then holds the LAST epoch's selection:
+they stream.  --query-batch B additionally drives the multi-tenant path
+(append -> query_batch -> epoch -> query_batch) with a batched-vs-
+sequential parity assertion, so the CI smoke job only needs the exit
+code.  --out then holds the LAST epoch's selection:
 
     PYTHONPATH=src python -m repro.launch.select \\
         --n 4096 --k 16 --mesh 4 --epochs 3 --append-frac 0.25
@@ -34,6 +37,48 @@ def _force_host_devices(n: int) -> None:
   existing = os.environ.get("XLA_FLAGS", "")
   if "--xla_force_host_platform_device_count" not in existing:
     os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
+
+def _query_batch_cycle(svc, b: int, k: int, stage: str) -> None:
+  """Answer ``b`` heterogeneous tenant requests through one
+  ``query_batch`` call, then replay them sequentially through ``query()``
+  and fail loudly unless the selections are bit-identical -- the CI smoke
+  job relies on the exit code alone."""
+  import time
+
+  import numpy as np
+
+  from repro.service import QueryRequest
+
+  mc = svc.store.query_mask_cap
+  base = svc.query()  # known-live gids for the exclusion lists
+  reqs = []
+  for i in range(b):
+    excl = tuple(int(g) for g in base.sel_gids[:min(i % 3, mc)] if g >= 0)
+    reqs.append(QueryRequest(k=1 + (i % k), seed=i % 4, exclude_gids=excl))
+  t0 = time.time()
+  batched = svc.query_batch(reqs)
+  t_batch = time.time() - t0
+  t0 = time.time()
+  seq = [svc.query(r.k, seed=r.seed, exclude_gids=r.exclude_gids)
+         for r in reqs]
+  t_seq = time.time() - t0
+  for i, (rb, rs) in enumerate(zip(batched, seq)):
+    # selections must match exactly; value estimates only to ~ulp (the
+    # batched and single merges are different XLA executables, which may
+    # round their d-dim reductions differently)
+    if (not np.array_equal(rb.sel_gids, rs.sel_gids) or not np.isclose(
+        rb.value_estimate, rs.value_estimate, rtol=1e-5, atol=1e-7)):
+      raise SystemExit(f"[select] query_batch parity FAILED ({stage}, "
+                       f"request {i}): batched={rb.sel_gids} "
+                       f"(v={rb.value_estimate!r}) sequential="
+                       f"{rs.sel_gids} (v={rs.value_estimate!r})")
+  ratio = t_seq / t_batch if t_batch > 0 else float("inf")
+  print(f"[select] query_batch[{stage}]: {b} requests in "
+        f"{t_batch * 1e3:.1f}ms ({b / max(t_batch, 1e-9):.0f} qps, "
+        f"sequential {t_seq * 1e3:.1f}ms, x{ratio:.1f}), parity OK, "
+        f"query_traces={svc.store.query_trace_count}, "
+        f"batch_traces={svc.store.query_batch_trace_count}")
 
 
 def main() -> None:
@@ -69,6 +114,13 @@ def main() -> None:
                   "rows in blocks of this size and run service.query() "
                   "after each block (the standing-sieve select-on-append "
                   "path), printing per-query latency and value")
+  ap.add_argument("--query-batch", type=int, default=0,
+                  help="service mode: after the first append (pre-epoch) and "
+                  "again after the last epoch, answer this many "
+                  "heterogeneous tenant requests (varying k / seed / "
+                  "exclusions) through one query_batch call, assert "
+                  "bit-identical to sequential query() calls, and print "
+                  "throughput (exit 1 on parity failure)")
   ap.add_argument("--cold", action="store_true",
                   help="service mode: disable warm-started lazy bounds")
   ap.add_argument("--deadline", type=float, default=None,
@@ -108,6 +160,8 @@ def main() -> None:
     if args.objective == "saturated_coverage":
       feats_np = np.abs(feats_np)  # nonneg coverage mass (Lin & Bilmes)
     svc.append(feats_np[:n0])
+    if args.query_batch:
+      _query_batch_cycle(svc, args.query_batch, args.k, "pre-epoch")
     res = None
     for e in range(args.epochs):
       svc.board.beat()   # all in-process shards are alive by construction
@@ -133,6 +187,8 @@ def main() -> None:
         else:
           svc.append(feats_np[n0:])
         print(f"[select] appended {args.n - n0} docs mid-stream")
+    if args.query_batch:
+      _query_batch_cycle(svc, args.query_batch, args.k, "post-epoch")
     sel = res.sel_gids
     # the coverage baseline below must score the features selection ran on
     # (saturated coverage selects over the abs-mapped corpus)

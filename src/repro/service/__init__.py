@@ -1,6 +1,9 @@
+from repro.service.batching import BatcherStats, QueryBatcher
 from repro.service.heartbeat import HeartbeatBoard
-from repro.service.service import EpochResult, EpochStats, SelectionService
+from repro.service.service import (EpochResult, EpochStats, QueryRequest,
+                                   QueryResult, SelectionService)
 from repro.service.store import CorpusStore
 
-__all__ = ["CorpusStore", "HeartbeatBoard", "SelectionService", "EpochResult",
+__all__ = ["BatcherStats", "CorpusStore", "HeartbeatBoard", "QueryBatcher",
+           "QueryRequest", "QueryResult", "SelectionService", "EpochResult",
            "EpochStats"]

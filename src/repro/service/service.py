@@ -123,12 +123,30 @@ class QueryResult(NamedTuple):
   """
   sel_gids: np.ndarray  # selected ids, filtered (no -1 padding)
   value_estimate: float  # sieve surrogate value (see above); exact f for
-                         # ``source == "epoch"`` answers
+                         # ``source == "epoch"`` / ``"exact"`` answers
   source: str            # "sieve" (standing buckets) | "epoch" (last epoch)
+                         # | "exact" (batched greedy over the corpus block)
   appends_since_epoch: int  # appends since the last epoch refinement: a
                          # "sieve" answer folds them in at sieve fidelity,
                          # an "epoch" answer does not reflect them at all
-  wall_s: float          # host wall-clock of the query
+  wall_s: float          # host wall-clock of the query (for ``query_batch``
+                         # answers: of the whole drained batch -- that IS
+                         # each request's latency)
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+  """One tenant's request for ``SelectionService.query_batch``.
+
+  ``k`` is the coreset size (None -> the service ``k_final``); ``seed``
+  decorrelates tie-breaks between tenants (0 keeps the deterministic
+  merge -- a default request is bitwise identical to ``query()``);
+  ``exclude_gids`` is the tenant's visibility filter: document ids this
+  query must never return (up to ``store.query_mask_cap`` of them).
+  """
+  k: int | None = None
+  seed: int = 0
+  exclude_gids: tuple = ()
 
 
 class SelectionService:
@@ -160,6 +178,9 @@ class SelectionService:
     append_block: append chunk size; the store's row writer and bound pass
       are compiled for this fixed shape so appends never re-trace (bigger
       appends are chunked).
+    query_mask_cap / query_batch_tile: multi-tenant query knobs, forwarded
+      to the store -- the fixed per-query exclusion-list capacity and the
+      compiled batch width of ``query_batch`` (None = autotuned).
   """
 
   def __init__(self, mesh, *, d: int, kappa: int, k_final: int,
@@ -169,7 +190,8 @@ class SelectionService:
                warm_start: bool = True, deadline: float | None = None,
                seed: int = 0, append_block: int = 1024,
                feat_dtype=np.float32, objective: str | Any = "facility",
-               sieve: bool = True):
+               sieve: bool = True, query_mask_cap: int = 16,
+               query_batch_tile: int | None = None):
     self.mesh = mesh
     self._axis_names = axis_names
     self._m = GD._mesh_size(mesh, axis_names)
@@ -215,7 +237,8 @@ class SelectionService:
         mesh, d=d, capacity=capacity, append_block=append_block,
         axis_names=axis_names, kernel=kernel, kernel_kwargs=kernel_kwargs,
         backend=backend, maintainer=self._maintainer,
-        sieve_k=k_final if sieve else 0, feat_dtype=feat_dtype)
+        sieve_k=k_final if sieve else 0, feat_dtype=feat_dtype,
+        query_mask_cap=query_mask_cap, query_batch_tile=query_batch_tile)
     self.board = HeartbeatBoard(self._m)
     self._compile()
 
@@ -319,7 +342,34 @@ class SelectionService:
     if self.store.n_docs > n_before:
       self._appends_since_epoch += 1
 
-  def query(self, k: int | None = None) -> QueryResult:
+  def _norm_k(self, k: int | None) -> int:
+    k = self._k_final if k is None else int(k)
+    if not 0 < k <= self._k_final:
+      raise ValueError(f"k must be in (0, {self._k_final}], got {k}")
+    return k
+
+  def _norm_excl(self, exclude_gids) -> np.ndarray | None:
+    """Tenant exclusion list -> fixed (query_mask_cap,) -1-padded int32
+    array (None when the filter is empty).  The fixed pad shape is what
+    keeps heterogeneously-masked queries on the one compiled merge."""
+    if exclude_gids is None:
+      return None
+    a = np.asarray(exclude_gids, np.int32).ravel()
+    if a.size == 0:
+      return None
+    if (a < 0).any():
+      raise ValueError("exclude_gids must be >= 0")
+    mc = self.store.query_mask_cap
+    if a.size > mc:
+      raise ValueError(
+          f"at most {mc} excluded gids per query (store query_mask_cap; "
+          f"got {a.size})")
+    out = np.full((mc,), -1, np.int32)
+    out[:a.size] = a
+    return out
+
+  def query(self, k: int | None = None, *, seed: int = 0,
+            exclude_gids=None) -> QueryResult:
     """Answer "give me k representatives NOW" without running the protocol.
 
     Freshness contract (docs/service.md): with the standing sieve enabled
@@ -331,13 +381,21 @@ class SelectionService:
     sieve the last epoch's selection is the best available answer (stale by
     ``appends_since_epoch`` appends).  Greedy prefixes are nested, so any
     ``k <= k_final`` reuses the same compiled merge.
+
+    Multi-tenant parameters (docs/service.md "Multi-tenant serving"):
+    ``exclude_gids`` hides up to ``store.query_mask_cap`` document ids from
+    this query (per-tenant visibility filter); ``seed != 0`` decorrelates
+    tie-breaks between tenants with a ~1e-4 relative score jitter.  Either
+    one forces the sieve path (the cached epoch answer can't apply a
+    filter), and both are runtime arguments of the one compiled merge --
+    ``store.query_trace_count`` stays 1 no matter how heterogeneous the
+    query stream is.
     """
-    k = self._k_final if k is None else int(k)
-    if not 0 < k <= self._k_final:
-      raise ValueError(f"k must be in (0, {self._k_final}], got {k}")
+    k = self._norm_k(k)
     t0 = time.perf_counter()
+    excl = self._norm_excl(exclude_gids)
     stale = self._appends_since_epoch
-    if self._last_epoch is not None and (
+    if excl is None and seed == 0 and self._last_epoch is not None and (
         stale == 0 or not self.store.sieve_enabled):
       le = self._last_epoch
       return QueryResult(le.sel_gids[:k], float(le.stats.value), "epoch",
@@ -345,12 +403,100 @@ class SelectionService:
     if not self.store.sieve_enabled:
       raise RuntimeError(
           "query() needs a standing sieve (an objective with a sum-form "
-          "BoundMaintainer) or at least one completed epoch")
-    gids, scores = self.store.query_sieves()
-    sel = gids[:k]
-    sel = sel[sel >= 0]
-    val = float(scores[:k].sum()) / max(self.store.n_docs, 1)
+          "BoundMaintainer) or at least one completed epoch (and masked / "
+          "seeded queries always need the sieve)")
+    gids, scores = self.store.query_sieves(k=k, exclude_gids=excl, seed=seed)
+    slots = gids[:k]
+    sel = slots[slots >= 0]
+    # only live winner slots count: a slot with gid -1 is empty, and its
+    # score must not pollute the estimate (k can exceed the live winners)
+    val = float(scores[:k][slots >= 0].sum()) / max(self.store.n_docs, 1)
     return QueryResult(sel, val, "sieve", stale, time.perf_counter() - t0)
+
+  def query_batch(self, requests, tier: str = "sieve") -> list[QueryResult]:
+    """Answer a whole batch of tenant requests: one device call per query
+    tile instead of one per request.
+
+    ``requests`` is a sequence of ``QueryRequest`` (plain ints are accepted
+    as a k-only shorthand; None means "all defaults").  Per-request routing
+    mirrors ``query()`` exactly -- default requests short-circuit to the
+    cached epoch answer when nothing is stale, everything else drains
+    through the batched sieve merge -- so batched answers select exactly
+    what the same requests issued one-by-one select (tested; value
+    estimates agree to ~ulp, the batched merge being a separate XLA
+    executable of the same body).  Each result's
+    ``wall_s`` is the whole drained batch's wall clock: that IS the latency
+    every request in the batch observed.
+
+    ``tier="exact"`` routes every request through the exact tier instead: a
+    batched greedy facility-location pass over the resident corpus block
+    (one corpus scan per pick serves all B tenants), exact per-tenant
+    values over each tenant's visible rows.  Facility-location objectives
+    with a fused kernel only; capacity growth retraces this tier.
+    """
+    if tier not in ("sieve", "exact"):
+      raise ValueError(f"tier must be 'sieve' or 'exact', got {tier!r}")
+    reqs = [r if isinstance(r, QueryRequest)
+            else QueryRequest() if r is None else QueryRequest(k=int(r))
+            for r in requests]
+    t0 = time.perf_counter()
+    stale = self._appends_since_epoch
+    norm = [(self._norm_k(r.k), self._norm_excl(r.exclude_gids or None),
+             int(r.seed)) for r in reqs]
+    mc = self.store.query_mask_cap
+
+    def _pack_excl(sub):
+      return np.stack([e if e is not None else np.full((mc,), -1, np.int32)
+                       for e in sub]) if sub else np.zeros((0, mc), np.int32)
+
+    if tier == "exact":
+      if not isinstance(self._objective, O.FacilityLocation):
+        raise ValueError(
+            "tier='exact' currently supports the facility-location "
+            f"objective only (got {type(self._objective).__name__})")
+      from repro.kernels.dispatch import FUSED_SIMS
+      if getattr(self._objective, "kernel", None) not in FUSED_SIMS:
+        raise ValueError("tier='exact' needs a fused similarity kernel "
+                         f"({FUSED_SIMS})")
+      ks = np.array([k for k, _, _ in norm], np.int32)
+      ex = _pack_excl([e for _, e, _ in norm])
+      g, s, nvis = self.store.query_exact_batch(ks, ex, k_cap=self._k_final)
+      wall = time.perf_counter() - t0
+      out = []
+      for i, (k, _, _) in enumerate(norm):
+        slots = g[i, :k]
+        val = float(s[i, :k][slots >= 0].sum()) / max(float(nvis[i]), 1.0)
+        out.append(QueryResult(slots[slots >= 0], val, "exact", stale, wall))
+      return out
+
+    answers: list = [None] * len(reqs)
+    batch_idx = []
+    for i, (k, excl, seed) in enumerate(norm):
+      if excl is None and seed == 0 and self._last_epoch is not None and (
+          stale == 0 or not self.store.sieve_enabled):
+        le = self._last_epoch
+        answers[i] = ("epoch", le.sel_gids[:k], float(le.stats.value))
+      elif not self.store.sieve_enabled:
+        raise RuntimeError(
+            "query_batch() needs a standing sieve (an objective with a "
+            "sum-form BoundMaintainer) or at least one completed epoch "
+            "(and masked / seeded requests always need the sieve)")
+      else:
+        batch_idx.append(i)
+    if batch_idx:
+      ks = np.array([norm[i][0] for i in batch_idx], np.int32)
+      ex = _pack_excl([norm[i][1] for i in batch_idx])
+      sd = np.array([norm[i][2] for i in batch_idx], np.int32)
+      g, s = self.store.query_sieves_batch(ks, ex, sd)
+      nd = max(self.store.n_docs, 1)
+      for j, i in enumerate(batch_idx):
+        k = norm[i][0]
+        slots = g[j, :k]
+        val = float(s[j, :k][slots >= 0].sum()) / nd
+        answers[i] = ("sieve", slots[slots >= 0], val)
+    wall = time.perf_counter() - t0
+    return [QueryResult(sel, val, src, stale, wall)
+            for src, sel, val in answers]
 
   def epoch(self, rng: Array | None = None) -> EpochResult:
     """Run one selection epoch: re-partition, select, stream ids + stats.

@@ -26,6 +26,11 @@ Transfer accounting (what actually crosses H2D; docs/service.md):
     capacity-independent shape and migrates bit-exactly for free (tested).
   * ``query``   -- nothing from the corpus block: the standing sieve state
     merges on device and only the (k,) winners + scores cross D2H.
+  * ``query_batch`` -- one batched merge call per query tile: the per-query
+    (k, exclusion list, seed) triples cross H2D (O(B * query_mask_cap)
+    ints) and the (B, k) winners + scores cross D2H; the sieve state is
+    shared across all lanes of the vmapped merge.  The exact tier
+    additionally reads the resident block (still zero H2D for it).
 
 Select-on-append (the sieve): when the maintainer supports it (sum-form
 relu tables, ``supports_sieve``), each shard additionally keeps
@@ -67,13 +72,17 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.greedi import _combined_index, _mesh_size
 from repro.core.objectives import _kernel_h
-from repro.kernels import dispatch
+from repro.kernels import autotune, dispatch
 from repro.util import shard_map as _shard_map
 
 Array = jax.Array
 
 _NEG = -1e30   # masked-score floor of the query merge (kernels/ref.NEG)
 _JTOP_COLD = -(1 << 30)  # sieve grid sentinel: no positive gain seen yet
+# relative tie-break jitter of seeded queries: big enough to decorrelate
+# near-equal candidates across tenants, small enough to never reorder
+# admission scores with a real gap
+_QUERY_JITTER = 1e-4
 
 
 def _sieve_n_thresholds(sieve_k: int, eps: float) -> int:
@@ -129,6 +138,13 @@ class CorpusStore:
       0 disables the sieve.  Requires a maintainer with ``supports_sieve``
       (the sum-form machinery supplies the admission gains).
     sieve_eps: geometric grid ratio of the threshold sieve (1 + eps).
+    query_mask_cap: fixed per-query exclusion-list capacity of the batched
+      query path (tenant visibility filters pad up to it with -1, so masked
+      queries never retrace).
+    query_batch_tile: compiled batch width of the batched query merge;
+      None consults ``kernels/autotune.query_tile``.  Ragged batches pad up
+      to it and bigger batches chunk through it, so the batched merge
+      compiles exactly once for the store lifetime.
     feat_dtype: storage dtype of the feature rows.
   """
 
@@ -138,6 +154,8 @@ class CorpusStore:
                kernel: str = "linear", kernel_kwargs: tuple = (),
                backend: str | None = None, maintainer=None,
                sieve_k: int = 0, sieve_eps: float = 0.5,
+               query_mask_cap: int = 16,
+               query_batch_tile: int | None = None,
                feat_dtype=np.float32):
     self._mesh = mesh
     self._axis_names = axis_names
@@ -174,6 +192,16 @@ class CorpusStore:
     self._query_fn = None
     self._query_trace_count = 0
     self._query_count = 0
+    self._mask_cap = int(query_mask_cap)
+    self._qb_tile = (int(query_batch_tile) if query_batch_tile
+                     else autotune.query_tile())
+    self._query_batch_fn = None
+    self._query_batch_trace_count = 0
+    self._query_batch_calls = 0
+    self._query_batch_queries = 0
+    self._query_exact_fn = None
+    self._query_exact_key = None
+    self._query_exact_trace_count = 0
 
     self._alloc(self._cap)
     self._alloc_sieve()
@@ -448,6 +476,39 @@ class CorpusStore:
   def query_count(self) -> int:
     return self._query_count
 
+  @property
+  def query_batch_trace_count(self) -> int:
+    """Batched-merge traces so far (1 total: the compiled batch shape is the
+    fixed query tile and capacity-independent, so neither ragged batches nor
+    growth ever re-trace the batched query path)."""
+    return self._query_batch_trace_count
+
+  @property
+  def query_batch_calls(self) -> int:
+    """Batched-merge device calls so far (1 per drained query tile)."""
+    return self._query_batch_calls
+
+  @property
+  def query_batch_queries(self) -> int:
+    """Requests answered through the batched sieve merge so far."""
+    return self._query_batch_queries
+
+  @property
+  def query_exact_trace_count(self) -> int:
+    """Exact-tier traces so far (1 per (capacity, k_cap): this tier scans
+    the resident block, so growth legitimately retraces it)."""
+    return self._query_exact_trace_count
+
+  @property
+  def query_mask_cap(self) -> int:
+    """Fixed per-query exclusion-list capacity of the masked query paths."""
+    return self._mask_cap
+
+  @property
+  def query_batch_tile(self) -> int:
+    """Compiled batch width of the batched query paths (autotuned)."""
+    return self._qb_tile
+
   def sieve_state_host(self):
     """Host pull of (gid, gain, feat, count, delta, jtop) -- tests only."""
     assert self._sieve_k, "sieve disabled"
@@ -457,39 +518,64 @@ class CorpusStore:
 
   def _compile_query(self) -> None:
     """One jit for the device-side sieve merge.  Input shapes depend only on
-    (mesh, T, k, d) -- never on capacity -- so this compiles exactly once
-    per store.  Every bucket of every shard pools into one candidate set
-    (N = m * T * k) and a k-step greedy MMR pass re-applies the admission
-    score (redundancy-discounted standing gain) over the pool -- at least
-    as good as the best single threshold bucket, which carries the sieve
-    guarantee.  Redundancy updates one pooled column per pick, so no (N, N)
-    matrix is ever materialized.  A gid admitted into several buckets
-    dedupes itself: its second copy is fully redundant with the first
-    (red == 1 -> score == 0).  Greedy picks are nested, so a caller wanting
-    k' < k representatives takes the first k' outputs.  Only the (k,)
-    winners + scores leave the device."""
+    (mesh, T, k, d, query_mask_cap) -- never on capacity -- so this compiles
+    exactly once per store.  Every bucket of every shard pools into one
+    candidate set (N = m * T * k) and a k-step greedy MMR pass re-applies
+    the admission score (redundancy-discounted standing gain) over the pool
+    -- at least as good as the best single threshold bucket, which carries
+    the sieve guarantee.  Redundancy updates one pooled column per pick, so
+    no (N, N) matrix is ever materialized.  A gid admitted into several
+    buckets dedupes itself twice over: the second copy is fully redundant
+    with the first (red == 1 -> score == 0) AND explicitly masked by gid
+    against the picks so far -- the explicit mask is what makes dedup
+    rounding-independent (see the step body).  Greedy picks are nested, so
+    a caller
+    wanting k' < k representatives takes the first k' outputs.  Only the
+    (k,) winners + scores leave the device.
+
+    Per-query parameters (all runtime arguments, so they never retrace):
+
+      * ``kq``   -- requested coreset size; picks past it are masked to -1,
+        which equals host-side slicing because greedy prefixes are nested.
+      * ``excl`` -- (query_mask_cap,) int32 gid exclusion list, -1-padded
+        (the tenant visibility filter; -1 pad slots only ever match hole
+        candidates, which the validity mask already drops).
+      * ``seed`` -- tie-break decorrelation: seed != 0 multiplies scores by
+        (1 + ~1e-4 * uniform), reordering only near-equal candidates.
+        seed == 0 multiplies by exactly 1.0, so default queries stay
+        bitwise identical to the unseeded merge.
+    """
     t, k, m = self._sieve_T, self._sieve_k, self._m
     kernel = self._kernel
     h = _kernel_h(self._kernel_kwargs)
     pairwise = dispatch.resolve("pairwise", self._backend or "auto")
     n = m * t * k
 
-    def merge(sgid, sgain, sfeat):
-      self._query_trace_count += 1  # python side effect: counts traces
+    def merge_one(sgid, sgain, sfeat, kq, excl, seed):
       gt = sgid.reshape(n)
       wt = sgain.reshape(n)
       ft = sfeat.reshape(n, self._d).astype(jnp.float32)
       if kernel == "linear":
         nsq = jnp.maximum(jnp.sum(ft * ft, -1), 1e-12)
-      ok = gt >= 0
+      ok = (gt >= 0) & ~jnp.any(gt[:, None] == excl[None, :], axis=1)
+      u = jax.random.uniform(jax.random.PRNGKey(seed), (n,), jnp.float32)
+      mult = jnp.where(seed != 0, 1.0 + _QUERY_JITTER * u, 1.0)
 
       def step(i, c):
         picked, redmax, out_g, out_s = c
-        score = wt * jnp.maximum(1.0 - redmax, 0.0)
-        score = jnp.where(ok & ~picked, score, _NEG)
+        score = wt * jnp.maximum(1.0 - redmax, 0.0) * mult
+        # gid-level dedup of already-picked documents: a doc admitted into
+        # several buckets must not be returned twice.  The redundancy
+        # discount alone is not enough -- red == 1 can round to 1 +/- ulp,
+        # and under seed jitter a leftover ~ulp score re-picks the copy
+        # (and does so differently in the single vs vmapped executable).
+        # -1 slots of out_g never match: hole candidates are already
+        # dropped by ``ok``.
+        dup = jnp.any(gt[:, None] == out_g[None, :], axis=1)
+        score = jnp.where(ok & ~picked & ~dup, score, _NEG)
         j = jnp.argmax(score).astype(jnp.int32)
         s = score[j]
-        take = s > 0.0
+        take = (s > 0.0) & (i < kq)
         out_g = out_g.at[i].set(jnp.where(take, gt[j], -1))
         out_s = out_s.at[i].set(jnp.where(take, s, 0.0))
         picked = picked | (take & (jnp.arange(n) == j))
@@ -506,22 +592,203 @@ class CorpusStore:
       _, _, out_g, out_s = jax.lax.fori_loop(0, k, step, init)
       return out_g, out_s
 
-    # raw body kept for the analyzer (repro.analysis.entries)
+    def merge(sgid, sgain, sfeat, kq, excl, seed):
+      self._query_trace_count += 1  # python side effect: counts traces
+      return merge_one(sgid, sgain, sfeat, kq, excl, seed)
+
+    # raw bodies kept for the analyzer (repro.analysis.entries) and for the
+    # batched compile (the batched merge is the SAME body vmapped over the
+    # per-query arguments, sieve state shared)
+    self._merge_one = merge_one
     self._query_raw = merge
     self._query_fn = jax.jit(merge)
 
-  def query_sieves(self):
+  def _compile_query_batch(self) -> None:
+    """One jit for the BATCHED sieve merge: ``merge_one`` vmapped over the
+    per-query (kq, excl, seed) triple with the sieve state shared across
+    lanes, so one scan of the standing summaries answers a whole query
+    batch.  The compiled batch width is the fixed ``query_batch_tile``
+    (ragged batches pad, bigger batches chunk), and shapes stay
+    capacity-independent -- the batched merge traces exactly once for the
+    store lifetime (``query_batch_trace_count``)."""
+    if self._query_fn is None:
+      self._compile_query()
+    merge_one = self._merge_one
+
+    def merge_batch(sgid, sgain, sfeat, kq, excl, seeds):
+      self._query_batch_trace_count += 1  # python side effect: trace count
+      return jax.vmap(merge_one, in_axes=(None, None, None, 0, 0, 0))(
+          sgid, sgain, sfeat, kq, excl, seeds)
+
+    # raw body kept for the analyzer (repro.analysis.entries)
+    self._query_batch_raw = merge_batch
+    self._query_batch_fn = jax.jit(merge_batch)
+
+  def _full_excl(self, b: int | None = None) -> np.ndarray:
+    """All -1 exclusion list(s): the 'no tenant filter' argument."""
+    shape = (self._mask_cap,) if b is None else (b, self._mask_cap)
+    return np.full(shape, -1, np.int32)
+
+  def query_sieves(self, k: int | None = None, exclude_gids=None,
+                   seed: int = 0):
     """Merge the standing sieves into a (sieve_k,) coreset: (gids, scores)
     as host arrays, gid -1 past the end.  O(k) D2H and no corpus-block
     access -- the merge reads ONLY the fixed-shape sieve state (tested by
-    poisoning the feature block)."""
+    poisoning the feature block).
+
+    ``k`` masks picks past the requested size (equal to slicing, prefixes
+    are nested); ``exclude_gids`` is a pre-normalized (query_mask_cap,)
+    int32 -1-padded exclusion list (tenant visibility filter); ``seed``
+    applies tie-break jitter when nonzero.  All three are runtime
+    arguments of the one compiled merge -- heterogeneous queries never
+    retrace."""
     assert self._sieve_k, "sieve disabled on this store"
     if self._query_fn is None:
       self._compile_query()
+    kq = self._sieve_k if k is None else int(k)
+    excl = (self._full_excl() if exclude_gids is None
+            else np.asarray(exclude_gids, np.int32))
+    assert excl.shape == (self._mask_cap,), excl.shape
     gids, scores = self._query_fn(self._sieve_gid, self._sieve_gain,
-                                  self._sieve_feat)
+                                  self._sieve_feat, jnp.int32(kq),
+                                  jnp.asarray(excl), jnp.int32(seed))
     self._query_count += 1
     return np.asarray(gids), np.asarray(scores)
+
+  def query_sieves_batch(self, ks, exclude, seeds):
+    """Batched sieve merge: one device call per query tile answers a whole
+    heterogeneous request batch.
+
+    Args:
+      ks: (B,) int32 per-query coreset sizes.
+      exclude: (B, query_mask_cap) int32 -1-padded per-query exclusion
+        lists (tenant visibility filters).
+      seeds: (B,) int32 per-query tie-break seeds (0 = deterministic).
+
+    Ragged batches pad up to the compiled ``query_batch_tile`` with inert
+    k=0 lanes; larger batches chunk through it.  Either way the compiled
+    batch shape is fixed and capacity-independent, so the batched merge
+    traces exactly once for the store lifetime.  Returns host
+    (B, sieve_k) gids / scores; each lane selects exactly what the
+    single-query merge selects at the same (k, excl, seed) -- scores agree
+    to ~ulp only, because the vmapped and single merges are different XLA
+    executables and may round the d-dim reductions differently (selection
+    parity survives that because near-equal candidates are either the same
+    gid, deduped exactly, or decorrelated by the seed jitter).
+    """
+    assert self._sieve_k, "sieve disabled on this store"
+    if self._query_batch_fn is None:
+      self._compile_query_batch()
+    ks = np.asarray(ks, np.int32)
+    exclude = np.asarray(exclude, np.int32)
+    seeds = np.asarray(seeds, np.int32)
+    b = ks.shape[0]
+    assert exclude.shape == (b, self._mask_cap), exclude.shape
+    assert seeds.shape == (b,), seeds.shape
+    bq = self._qb_tile
+    out_g, out_s = [], []
+    for off in range(0, b, bq):
+      kc = ks[off:off + bq]
+      nb = kc.shape[0]
+      pad = bq - nb
+      if pad:
+        kc = np.pad(kc, (0, pad))  # k = 0: padding lanes pick nothing
+        ec = np.pad(exclude[off:off + bq], ((0, pad), (0, 0)),
+                    constant_values=-1)
+        sc = np.pad(seeds[off:off + bq], (0, pad))
+      else:
+        ec = exclude[off:off + bq]
+        sc = seeds[off:off + bq]
+      g, s = self._query_batch_fn(self._sieve_gid, self._sieve_gain,
+                                  self._sieve_feat, jnp.asarray(kc),
+                                  jnp.asarray(ec), jnp.asarray(sc))
+      out_g.append(np.asarray(g)[:nb])
+      out_s.append(np.asarray(s)[:nb])
+      self._query_batch_calls += 1
+    self._query_batch_queries += b
+    return np.concatenate(out_g), np.concatenate(out_s)
+
+  def _compile_query_exact(self, k_cap: int) -> None:
+    """Exact-tier batched query: a batched greedy facility-location pass
+    over the RESIDENT corpus block.  Each greedy step is ONE scan of the
+    block through the ``select_batched`` facility oracle -- per-query
+    coverage/visibility ride the batch axis, the feature block is shared --
+    so B tenants pay one corpus scan per pick instead of B.  Shapes depend
+    on (capacity, k_cap), so growth retraces this tier (its own counter;
+    the sieve tier is the capacity-independent one)."""
+    kernel = self._kernel
+    h = _kernel_h(self._kernel_kwargs)
+    backend = self._backend or "auto"
+    sel_b = dispatch.resolve_select_batched("facility_gain", backend)
+    pair = dispatch.resolve("pairwise", backend)
+
+    def exact(feats, gids, kq, excl):
+      self._query_exact_trace_count += 1  # python side effect: trace count
+      cap = feats.shape[0]
+      b = kq.shape[0]
+      f32 = feats.astype(jnp.float32)
+      valid = gids >= 0
+      hidden = jnp.any(gids[None, :, None] == excl[:, None, :], axis=-1)
+      vis = (valid[None, :] & ~hidden).astype(jnp.float32)   # (b, cap)
+      nvis = jnp.sum(vis, axis=1)
+
+      def step(i, c):
+        cov, okf, out_g, out_s = c
+        best, idx = sel_b(f32, f32, cov, vis, okf, kernel=kernel, h=h)
+        take = (best > 0.0) & (i < kq)
+        sim = pair(f32[idx], f32, kernel=kernel, h=h)        # (b, cap)
+        cov = jnp.where(take[:, None], jnp.maximum(cov, sim), cov)
+        picked = jnp.arange(cap)[None, :] == idx[:, None]
+        okf = jnp.where(take[:, None] & picked, 0.0, okf)
+        out_g = out_g.at[:, i].set(jnp.where(take, gids[idx], -1))
+        out_s = out_s.at[:, i].set(jnp.where(take, best, 0.0))
+        return cov, okf, out_g, out_s
+
+      init = (jnp.zeros((b, cap), jnp.float32), vis,
+              jnp.full((b, k_cap), -1, jnp.int32),
+              jnp.zeros((b, k_cap), jnp.float32))
+      _, _, out_g, out_s = jax.lax.fori_loop(0, k_cap, step, init)
+      return out_g, out_s, nvis
+
+    # raw body kept for the analyzer (repro.analysis.entries)
+    self._query_exact_raw = exact
+    self._query_exact_fn = jax.jit(exact)
+    self._query_exact_key = (int(k_cap), self._cap)
+
+  def query_exact_batch(self, ks, exclude, k_cap: int):
+    """Exact-tier batched query over the resident block (facility location).
+
+    Same request surface as ``query_sieves_batch`` minus seeds (the exact
+    greedy is deterministic); returns host (B, k_cap) gids / scores plus
+    the (B,) per-query visible-row counts (the value normalizer).  The
+    cumulative scores are the exact greedy facility gains over each
+    tenant's visible rows."""
+    key = (int(k_cap), self._cap)
+    if self._query_exact_fn is None or self._query_exact_key != key:
+      self._compile_query_exact(int(k_cap))
+    ks = np.asarray(ks, np.int32)
+    exclude = np.asarray(exclude, np.int32)
+    b = ks.shape[0]
+    assert exclude.shape == (b, self._mask_cap), exclude.shape
+    bq = self._qb_tile
+    out_g, out_s, out_n = [], [], []
+    for off in range(0, b, bq):
+      kc = ks[off:off + bq]
+      nb = kc.shape[0]
+      pad = bq - nb
+      if pad:
+        kc = np.pad(kc, (0, pad))
+        ec = np.pad(exclude[off:off + bq], ((0, pad), (0, 0)),
+                    constant_values=-1)
+      else:
+        ec = exclude[off:off + bq]
+      g, s, nv = self._query_exact_fn(self._feats, self._gids,
+                                      jnp.asarray(kc), jnp.asarray(ec))
+      out_g.append(np.asarray(g)[:nb])
+      out_s.append(np.asarray(s)[:nb])
+      out_n.append(np.asarray(nv)[:nb])
+    return (np.concatenate(out_g), np.concatenate(out_s),
+            np.concatenate(out_n))
 
   def reset_sieves(self, sel_feats=None, sel_gids=None) -> None:
     """Epoch hand-off: clear the sieves and re-grid from the current table.

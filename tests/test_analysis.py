@@ -178,3 +178,64 @@ def test_src_has_zero_unsuppressed_findings():
       cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
   assert out.returncode == 0, f"\n{out.stdout}\n{out.stderr}"
   assert "0 new finding(s)" in out.stdout
+
+
+# ----------------------------------------------------------- O(PR) --diff
+
+
+def test_modgraph_reachability_and_affected():
+  """Static import closure: sound direction (importers reach imports, not
+  vice versa) and the conservative unknown-root fallback."""
+  from repro.analysis import modgraph
+  src = REPO / "src"
+  g = modgraph.build_graph(src)
+  r = modgraph.reachable(g, ["repro.service.store"])
+  assert "repro.kernels.dispatch" in r        # store -> kernels
+  assert "repro.analysis.entries" not in r    # imports are one-way
+  assert "repro.kernels.select_top1" in modgraph.reachable(
+      g, ["repro.kernels.ops"])
+  aff = modgraph.affected_entries(
+      {"kernels": ("repro.kernels.ops",), "unknown": ("not.a.module",)},
+      {"repro.service.store"}, src)
+  # ops does not import the store; an unresolvable root can't be pruned
+  assert aff == {"kernels": False, "unknown": True}
+
+
+def test_diff_mode_prunes_unreachable_entries():
+  """A serve/-only change set must trace NO entry point (every registered
+  entry's import closure misses it) and still exit 0 against the
+  baseline -- the O(PR) CI mode."""
+  env = dict(os.environ)
+  env["PYTHONPATH"] = str(REPO / "src")
+  env.pop("XLA_FLAGS", None)
+  out = subprocess.run(
+      [sys.executable, "-m", "repro.analysis", "src",
+       "--baseline", "analysis_baseline.json",
+       "--diff-files", "src/repro/serve/serve_step.py"],
+      cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+  assert out.returncode == 0, f"\n{out.stdout}\n{out.stderr}"
+  assert "unreachable from the diff" in out.stdout
+  for name in ("service:store_query_batch", "select_batched:facility_gain",
+               "greedi:hierarchical"):
+    assert name in out.stdout, out.stdout
+
+
+def test_diff_mode_lints_only_changed_files(tmp_path):
+  """The AST layer must flag a changed file's finding and skip identical
+  hazards in files outside the change set."""
+  buggy = ("import jax\n"
+           "def handle_request(x):\n"
+           "    return jax.jit(lambda v: v * 2)(x)\n")
+  (tmp_path / "changed.py").write_text(buggy)
+  (tmp_path / "unchanged.py").write_text(buggy.replace("handle_request",
+                                                       "other_request"))
+  env = dict(os.environ)
+  env["PYTHONPATH"] = str(REPO / "src")
+  out = subprocess.run(
+      [sys.executable, "-m", "repro.analysis", str(tmp_path), "--ast-only",
+       "--repo-root", str(tmp_path),
+       "--diff-files", str(tmp_path / "changed.py")],
+      cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+  assert out.returncode == 1, f"\n{out.stdout}\n{out.stderr}"
+  assert "handle_request" in out.stdout
+  assert "other_request" not in out.stdout
