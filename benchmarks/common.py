@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 # machine-readable result collection (run.py --json): None = print-only
 _COLLECT: list[dict] | None = None
 
@@ -35,6 +37,9 @@ def write_json(path: str, **meta) -> None:
   payload = dict(meta)
   payload["backend"] = jax.default_backend()
   payload["results"] = collected()
+  # always-on registry counters (repro.obs) ride along with every --json
+  # collection: corpus/append/query totals measured DURING the benchmark run
+  payload["metrics"] = obs.REGISTRY.snapshot()
   with open(path, "w") as f:
     json.dump(payload, f, indent=2, sort_keys=True)
     f.write("\n")

@@ -7,7 +7,9 @@ Two layers (rule catalog in docs/analysis.md):
   R1 sort-in-loop under multi-device shard_map on non-TPU backends,
   R2 collective axis-name / cond-branch hazards,
   R3 row reductions over pad-and-mask blocks that never consume the
-  gid-validity taint.
+  gid-validity taint,
+  R7 psum of a shard-invariant (replicated) operand inside a multi-device
+  shard_map (the sum multiplies it by the mesh size: double counting).
 - AST layer (``ast_lint``): pure-syntax checks, no jax import.
   R4 ``jax.jit`` inside function bodies, R5 bare ``jnp.sort``/``argsort``
   in shard_map files, R6 Python branching on traced params of ``@jit``

@@ -1,4 +1,4 @@
-"""Jaxpr-level hazard analysis (rules R1-R3) over traced entry points.
+"""Jaxpr-level hazard analysis (rules R1-R3, R7) over traced entry points.
 
 The analyzer traces a registered entry point (``kernels/dispatch.py``
 entry-point registry) with ``jax.make_jaxpr`` at representative shapes and
@@ -6,9 +6,14 @@ walks the closed jaxpr recursively, tracking three pieces of context:
 
 * whether the current equation sits inside a ``while``/``scan`` body,
 * the axis names and device count of every enclosing ``shard_map`` mesh,
-* a taint bit per variable, seeded from the entry's declared mask inputs
-  (gid-validity vectors of pad-and-mask blocks) and propagated forward
-  through every equation, with a fixpoint over loop carries.
+* a ``(mask_taint, shard_varying)`` pair per variable.  The taint bit is
+  seeded from the entry's declared mask inputs (gid-validity vectors of
+  pad-and-mask blocks); the varying bit says "this value can differ across
+  the shards of the enclosing shard_map" and is seeded from the
+  shard_map's ``in_names`` (a sharded input varies, a replicated one does
+  not), set by ``axis_index``, cleared by replicating collectives
+  (``psum``/``pmax``/``pmin``/``all_gather``), and otherwise propagated
+  forward through every equation with a fixpoint over loop carries.
 
 R1  ``sort`` primitive inside a loop body under a multi-device shard_map on
     a non-TPU backend.  This is the PR 4 bug verbatim: XLA CPU's sort inside
@@ -28,6 +33,14 @@ R3  mask discipline: a reduction over an axis whose size matches a declared
     pad-and-mask row count must consume (transitively) one of the declared
     validity masks.  Padded rows are zeroed *by* the mask; a reduction that
     never saw the mask is reading garbage rows.
+
+R7  psum double counting: ``psum`` of a shard-INVARIANT (replicated)
+    operand inside a multi-device shard_map.  Every shard contributes the
+    same value, so the sum is the true value scaled by the mesh size --
+    the classic "psum the replicated bias" bug.  An operand is replicated
+    when it derives only from replicated shard_map inputs (empty
+    ``in_names`` entry), literals/consts, or the outputs of replicating
+    collectives, and never mixes in a sharded input or ``axis_index``.
 """
 from __future__ import annotations
 
@@ -47,11 +60,29 @@ _REDUCE_PRIMS = {
     "reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
     "reduce_or", "reduce_and", "argmax", "argmin",
 }
-_AXES_COLLECTIVES = {"psum", "pmax", "pmin"}
+# psum2 is what shard_map's check_rep rewrite turns psum into (jax 0.4.x)
+_AXES_COLLECTIVES = {"psum", "psum2", "pmax", "pmin"}
 _NAME_COLLECTIVES = {
     "all_gather", "all_to_all", "ppermute", "pbroadcast", "axis_index",
     "reduce_scatter", "psum_scatter",
 }
+_PSUMS = {"psum", "psum2"}
+# collectives whose output is identical on every shard of the reduced axis
+# (their result clears the shard-varying bit; everything else keeps it).
+# pbroadcast is NOT here nor varying: it is a replication-type cast that
+# leaves per-shard values untouched, so it passes the bit through.
+_REPLICATING_COLLECTIVES = {"psum", "psum2", "pmax", "pmin", "all_gather"}
+
+# (mask_taint, shard_varying) abstract value; see module docstring
+_NOVAL = (False, False)
+
+
+def _join(a: tuple, b: tuple) -> tuple:
+  return (a[0] or b[0], a[1] or b[1])
+
+
+def _any_val(vals: list) -> tuple:
+  return (any(t for t, _ in vals), any(v for _, v in vals))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,47 +182,49 @@ class _Walker:
                                  hint=hint, entry=self.entry))
 
   # -- the walk --------------------------------------------------------
-  def walk(self, jaxpr, in_taints: list[bool], ctx: _Ctx) -> list[bool]:
+  def walk(self, jaxpr, in_vals: list[tuple], ctx: _Ctx) -> list[tuple]:
+    """Abstract-interpret one jaxpr; values are (taint, varying) pairs."""
     jaxpr = _unwrap(jaxpr)
     env: dict = {}
 
-    def read(atom) -> bool:
-      return env.get(atom, False) if hasattr(atom, "aval") and not hasattr(
-          atom, "val") else False
+    def read(atom) -> tuple:
+      return env.get(atom, _NOVAL) if hasattr(atom, "aval") and not hasattr(
+          atom, "val") else _NOVAL
 
-    if len(in_taints) != len(jaxpr.invars):
+    if len(in_vals) != len(jaxpr.invars):
       # arity mismatch from an unmodeled higher-order primitive: be
       # conservative (over-taint) rather than raise false R3 positives
-      in_taints = [any(in_taints)] * len(jaxpr.invars)
-    for v, t in zip(jaxpr.invars, in_taints):
-      env[v] = t
+      in_vals = [_any_val(in_vals)] * len(jaxpr.invars)
+    for v, val in zip(jaxpr.invars, in_vals):
+      env[v] = val
     for v in jaxpr.constvars:
-      env[v] = False
+      env[v] = _NOVAL
 
     for eqn in jaxpr.eqns:
-      tin = [read(x) for x in eqn.invars]
-      touts = self._eqn(eqn, tin, ctx)
-      if len(touts) != len(eqn.outvars):
-        touts = [any(tin)] * len(eqn.outvars)
-      for v, t in zip(eqn.outvars, touts):
-        env[v] = t
+      vin = [read(x) for x in eqn.invars]
+      vouts = self._eqn(eqn, vin, ctx)
+      if len(vouts) != len(eqn.outvars):
+        vouts = [_any_val(vin)] * len(eqn.outvars)
+      for v, val in zip(eqn.outvars, vouts):
+        env[v] = val
     return [read(v) for v in jaxpr.outvars]
 
-  def _eqn(self, eqn, tin: list[bool], ctx: _Ctx) -> list[bool]:
+  def _eqn(self, eqn, vin: list[tuple], ctx: _Ctx) -> list[tuple]:
     name = eqn.primitive.name
     p = eqn.params
+    tin = [t for t, _ in vin]
 
     if name == "pjit":
-      return self.walk(p["jaxpr"], tin, ctx)
+      return self.walk(p["jaxpr"], vin, ctx)
 
     if name == "while":
       cn, bn = p["cond_nconsts"], p["body_nconsts"]
-      cond_consts, body_consts = tin[:cn], tin[cn:cn + bn]
-      carry = list(tin[cn + bn:])
+      cond_consts, body_consts = vin[:cn], vin[cn:cn + bn]
+      carry = list(vin[cn + bn:])
       loop_ctx = dataclasses.replace(ctx, in_loop=True)
-      for _ in range(len(carry) + 1):
+      for _ in range(2 * len(carry) + 1):
         outs = self.walk(p["body_jaxpr"], body_consts + carry, loop_ctx)
-        new = [a or b for a, b in zip(carry, outs)]
+        new = [_join(a, b) for a, b in zip(carry, outs)]
         if new == carry:
           break
         carry = new
@@ -200,12 +233,12 @@ class _Walker:
 
     if name == "scan":
       nc, ncar = p["num_consts"], p["num_carry"]
-      consts, carry, xs = tin[:nc], list(tin[nc:nc + ncar]), tin[nc + ncar:]
+      consts, carry, xs = vin[:nc], list(vin[nc:nc + ncar]), vin[nc + ncar:]
       loop_ctx = dataclasses.replace(ctx, in_loop=True)
-      ys: list[bool] = []
-      for _ in range(len(carry) + 1):
+      ys: list[tuple] = []
+      for _ in range(2 * len(carry) + 1):
         outs = self.walk(p["jaxpr"], consts + carry + xs, loop_ctx)
-        new = [a or b for a, b in zip(carry, outs[:ncar])]
+        new = [_join(a, b) for a, b in zip(carry, outs[:ncar])]
         ys = outs[ncar:]
         if new == carry:
           break
@@ -214,7 +247,7 @@ class _Walker:
 
     if name == "cond":
       branches = p["branches"]
-      ops = tin[1:]
+      ops = vin[1:]
       sigs = {_collectives_signature(b) for b in branches}
       if len(sigs) > 1:
         self._add(
@@ -226,7 +259,7 @@ class _Walker:
       outs = None
       for b in branches:
         bouts = self.walk(b, list(ops), ctx)
-        outs = bouts if outs is None else [a or b_ for a, b_ in
+        outs = bouts if outs is None else [_join(a, b_) for a, b_ in
                                            zip(outs, bouts)]
       return outs or []
 
@@ -235,14 +268,21 @@ class _Walker:
       inner_ctx = dataclasses.replace(
           ctx, mesh_axes=ctx.mesh_axes | axes,
           mesh_devices=max(ctx.mesh_devices, size))
-      return self.walk(p["jaxpr"], tin, inner_ctx)
+      # seed the varying bit from in_names: an input split over a mesh axis
+      # (non-empty names dict) differs per shard; a replicated one does not
+      in_names = p.get("in_names")
+      if isinstance(in_names, (tuple, list)) and len(in_names) == len(vin):
+        seeded = [(t, bool(names)) for (t, _), names in zip(vin, in_names)]
+      else:
+        seeded = [(t, True) for t, _ in vin]  # unknown layout: assume varying
+      return self.walk(p["jaxpr"], seeded, inner_ctx)
 
     if name in ("custom_jvp_call", "custom_vjp_call", "remat", "checkpoint",
                 "closed_call", "core_call", "custom_vjp_call_jaxpr"):
       inner = p.get("call_jaxpr", p.get("jaxpr"))
       if inner is not None:
-        return self.walk(inner, tin, ctx)
-      return [any(tin)] * len(eqn.outvars)
+        return self.walk(inner, vin, ctx)
+      return [_any_val(vin)] * len(eqn.outvars)
 
     if name == "sort":
       if ctx.in_loop and ctx.mesh_devices > 1 and self.backend != "tpu":
@@ -253,7 +293,7 @@ class _Walker:
             "here can return another shard's output)",
             "route the sort through core/greedy._argsort_desc (bitonic "
             "network on multi-device non-TPU)")
-      return [any(tin)] * len(eqn.outvars)
+      return [_any_val(vin)] * len(eqn.outvars)
 
     if name in _AXES_COLLECTIVES or name in _NAME_COLLECTIVES:
       unbound = _axis_names(p, name) - ctx.mesh_axes
@@ -264,7 +304,31 @@ class _Walker:
             "shard_map mesh",
             "match the collective's axis name to the mesh axis the "
             "shard_map maps over")
-      return [any(tin)] * len(eqn.outvars)
+      if name in _PSUMS and ctx.mesh_devices > 1:
+        # R7: every shard feeds the same value into the sum, so the result
+        # is the true value multiplied by the mesh size.  Only psum is
+        # flagged -- pmax/pmin of a replicated value are idempotent.
+        for _, varying in vin:
+          if not varying:
+            self._add(
+                eqn, "R7",
+                f"psum of a shard-invariant (replicated) operand under a "
+                f"{ctx.mesh_devices}-device shard_map scales it by the mesh "
+                "size (double counting)",
+                "psum only shard-varying partial values; for a replicated "
+                "operand drop the collective or divide by "
+                "jax.lax.psum(1, axis)")
+            break
+      if name == "pbroadcast":
+        # replication-type cast, not a data movement: per-shard values are
+        # unchanged, so the varying bit passes straight through
+        return [(t, v) for t, v in vin]
+      # axis_index IS the per-shard coordinate; replicating collectives
+      # produce the same output on every shard; the rest (ppermute,
+      # all_to_all, *_scatter) stay shard-varying
+      varying_out = (name == "axis_index"
+                     or name not in _REPLICATING_COLLECTIVES)
+      return [(any(tin), varying_out)] * len(eqn.outvars)
 
     if name in _REDUCE_PRIMS:
       axes = p.get("axes", ())
@@ -277,7 +341,7 @@ class _Walker:
             "without consuming a validity mask",
             "mask the operand with the gid-validity vector (gids >= 0) "
             "before reducing")
-      return [tin[0]] * len(eqn.outvars)
+      return [(tin[0], vin[0][1])] * len(eqn.outvars)
 
     if name == "dot_general":
       (lc, rc), _ = p["dimension_numbers"]
@@ -290,14 +354,14 @@ class _Walker:
             f"{sorted(contracted & self.row_sizes)}) without a validity mask",
             "mask either operand with the gid-validity vector before the "
             "contraction")
-      return [tin[0] or tin[1]]
+      return [_join(vin[0], vin[1])]
 
     # default: sub-jaxprs of unmodeled primitives still get context checks
     for v in p.values():
       for sub in _iter_jaxprs(v):
         sub_j = _unwrap(sub)
-        self.walk(sub_j, [any(tin)] * len(sub_j.invars), ctx)
-    return [any(tin)] * len(eqn.outvars)
+        self.walk(sub_j, [_any_val(vin)] * len(sub_j.invars), ctx)
+    return [_any_val(vin)] * len(eqn.outvars)
 
 
 def check_closed_jaxpr(
@@ -308,9 +372,12 @@ def check_closed_jaxpr(
   repo_root = (repo_root or Path.cwd()).resolve()
   backend = backend or jax.default_backend()
   jaxpr = closed.jaxpr
-  taints = [i in set(mask_positions) for i in range(len(jaxpr.invars))]
+  # top-level inputs: taint from the declared mask positions; the varying
+  # bit is re-seeded at each shard_map boundary from its in_names
+  vals = [(i in set(mask_positions), False)
+          for i in range(len(jaxpr.invars))]
   w = _Walker(entry, frozenset(row_sizes), repo_root, backend)
-  w.walk(jaxpr, taints, _Ctx())
+  w.walk(jaxpr, vals, _Ctx())
   return w.findings
 
 

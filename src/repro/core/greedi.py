@@ -158,6 +158,9 @@ class GreediResult(NamedTuple):
   alive: Array          # (m,) bool: machines the protocol actually used
                         # (straggler_keep AND the liveness collective) --
                         # a protocol *output*, see docs/service.md
+  r1_rescans: Array     # (m,) int32 device-fed diagnostic: tiles rescanned
+                        # by each machine's round-1 lazy greedy (0 unless
+                        # mode="lazy"); see GreedyResult.rescans / repro.obs
 
 
 def _replicated_result_specs():
@@ -351,7 +354,8 @@ def greedi_reference(rng: Array, feats: Array, *, m: int, kappa: int,
   sel_gids = jnp.where(use_merged, r2_gids, alt_gids)
   value = jnp.maximum(v_merged, v_best_single)
   return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                      stage1_vals, sel_gids, jnp.ones((m,), bool))
+                      stage1_vals, sel_gids, jnp.ones((m,), bool),
+                      r1.rescans.astype(jnp.int32))
 
 
 def centralized_greedy(feats: Array, k: int, *, objective, init_for,
@@ -627,8 +631,11 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     sel_gids = jnp.where(use_merged, merged_gids,
                          _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
+    # per-machine lazy rescan counts: scalar -> (m,) replicated, ordered by
+    # the same combined shard index as every other per-machine output
+    rescans = jax.lax.all_gather(r1.rescans.astype(jnp.int32), axis_names)
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals, sel_gids, keep)
+                        stage1_vals, sel_gids, keep, rescans.reshape(m))
 
   shmapped = _shard_map(fn, mesh=mesh, in_specs=in_specs,
                         out_specs=out_specs)
@@ -774,8 +781,10 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     sel_gids = jnp.where(use_merged, merged_gids,
                          _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
+    # the fast path's round 1 is standard greedy -- no lazy rescans
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals, sel_gids, keep)
+                        stage1_vals, sel_gids, keep,
+                        jnp.zeros((m,), jnp.int32))
 
   shmapped = _shard_map(
       fn, mesh=mesh,
@@ -880,8 +889,9 @@ def greedi_hierarchical(feats: Array, *, mesh, kappa: int, k_final: int,
     sel_gids = jnp.where(use_glob, glob_g,
                          _take_k(pods_g[best_p], k_final, -1))
     value = jnp.maximum(glob_val, v_best_pod)
+    rescans = jax.lax.all_gather(r1.rescans.astype(jnp.int32), both)
     return GreediResult(sel_feats, sel_valid, value, glob_val, v_best_pod,
-                        pod_vals, sel_gids, keep)
+                        pod_vals, sel_gids, keep, rescans.reshape(m))
 
   out_specs = _replicated_result_specs()
   shmapped = _shard_map(

@@ -80,6 +80,11 @@ class GreedyResult(NamedTuple):
   gains: Array   # (k,) realized marginal gains
   state: Any     # final objective state
   values: Array  # (k,) f(S_t) trajectory
+  # () int32 device-fed diagnostic: total tiles rescanned by mode="lazy"
+  # across all steps (0 in every other mode, where each step scans all n).
+  # Lazy-pruning effectiveness = rescans / (steps * n_tiles); unconditional
+  # output so observability never changes the traced program (see repro.obs).
+  rescans: Array
 
 
 def _pad_to(x: Array, n: int, value) -> Array:
@@ -285,7 +290,8 @@ def greedy(objective, state0, cand_feats: Array, k_steps: int, *,
 
   c = _ufori(0, k_steps, body, carry0)
   values = objective.value(state0).astype(fdtype) + jnp.cumsum(c["gains"])
-  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values)
+  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values,
+                      jnp.int32(0))
 
 
 def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
@@ -367,17 +373,19 @@ def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
       feats=jnp.zeros((k_steps, d), cand_feats.dtype),
       gains=jnp.zeros((k_steps,), fdtype),
       stale=jnp.zeros((npad,), fdtype),
+      rescans=jnp.int32(0),
   )
   if k_steps == 0:
     return GreedyResult(carry0["idx"], carry0["feats"], carry0["gains"],
-                        state0, jnp.zeros((0,), fdtype))
+                        state0, jnp.zeros((0,), fdtype), jnp.int32(0))
 
   if warm_bounds is None:
     # ---- step 0: one full vectorized pass selects AND seeds the bounds ----
     feasible0 = mask_pad & constraint.mask(carry0["cstate"], meta_pad)
     g0 = objective.gains(state0, cand_pad).astype(fdtype)
     best0, bidx0 = masked_top1(g0, feasible0)
-    c = apply_choice(carry0, 0, best0, bidx0, feasible0, g0)
+    c = dict(apply_choice(carry0, 0, best0, bidx0, feasible0, g0),
+             rescans=jnp.int32(0))  # the full pass is not a tile rescan
     t_start = 1
   else:
     # warm start: carried bounds replace the step-0 full pass; step 0 is a
@@ -417,12 +425,15 @@ def _greedy_lazy(objective, state0, cand_feats: Array, k_steps: int, *,
       return (p + 1, best, bidx, stale)
 
     init = (jnp.int32(0), jnp.float32(-jnp.inf), int_max, c["stale"])
-    _, best, bidx, stale = jax.lax.while_loop(cond, rescan_tile, init)
-    return apply_choice(c, t, best, bidx, feasible, stale)
+    p_final, best, bidx, stale = jax.lax.while_loop(cond, rescan_tile, init)
+    # p_final = tiles refreshed this step: the lazy-pruning diagnostic
+    return dict(apply_choice(c, t, best, bidx, feasible, stale),
+                rescans=c["rescans"] + p_final)
 
   c = _ufori(t_start, k_steps, body, c)
   values = objective.value(state0).astype(fdtype) + jnp.cumsum(c["gains"])
-  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values)
+  return GreedyResult(c["idx"], c["feats"], c["gains"], c["state"], values,
+                      c["rescans"])
 
 
 def best_of_knapsack(objective, state0, cand_feats, k_steps, *, meta,

@@ -39,7 +39,7 @@ def _force_host_devices(n: int) -> None:
     os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
 
 
-def _query_batch_cycle(svc, b: int, k: int, stage: str) -> None:
+def _query_batch_cycle(svc, b: int, k: int, stage: str, emit) -> None:
   """Answer ``b`` heterogeneous tenant requests through one
   ``query_batch`` call, then replay them sequentially through ``query()``
   and fail loudly unless the selections are bit-identical -- the CI smoke
@@ -73,12 +73,11 @@ def _query_batch_cycle(svc, b: int, k: int, stage: str) -> None:
                        f"request {i}): batched={rb.sel_gids} "
                        f"(v={rb.value_estimate!r}) sequential="
                        f"{rs.sel_gids} (v={rs.value_estimate!r})")
-  ratio = t_seq / t_batch if t_batch > 0 else float("inf")
-  print(f"[select] query_batch[{stage}]: {b} requests in "
-        f"{t_batch * 1e3:.1f}ms ({b / max(t_batch, 1e-9):.0f} qps, "
-        f"sequential {t_seq * 1e3:.1f}ms, x{ratio:.1f}), parity OK, "
-        f"query_traces={svc.store.query_trace_count}, "
-        f"batch_traces={svc.store.query_batch_trace_count}")
+  emit("query_batch", stage=stage, requests=b, batch_ms=t_batch * 1e3,
+       qps=b / max(t_batch, 1e-9), seq_ms=t_seq * 1e3,
+       speedup=t_seq / t_batch if t_batch > 0 else float("inf"),
+       parity="ok", query_traces=svc.store.query_trace_count,
+       batch_traces=svc.store.query_batch_trace_count)
 
 
 def main() -> None:
@@ -130,6 +129,19 @@ def main() -> None:
   ap.add_argument("--no-coverage", action="store_true",
                   help="skip the centralized-greedy coverage baseline")
   ap.add_argument("--out", default=None, help="write selected indices (npy)")
+  ap.add_argument("--metrics-port", type=int, default=None,
+                  help="serve the obs sidecar (/metrics Prometheus text, "
+                  "/healthz liveness) on this port (0 = pick a free one); "
+                  "service mode wires POST /healthz beats into the "
+                  "heartbeat board")
+  ap.add_argument("--trace-out", default=None,
+                  help="write obs trace spans as JSONL to this path")
+  ap.add_argument("--stats-json", default=None,
+                  help="write every stats line plus a metrics-registry "
+                  "snapshot to this path as JSON (all modes)")
+  ap.add_argument("--linger", type=float, default=0.0,
+                  help="keep the sidecar serving this many seconds after "
+                  "the run (scrape window for smoke jobs)")
   args = ap.parse_args()
 
   if args.mesh:
@@ -138,10 +150,23 @@ def main() -> None:
   import jax
   import numpy as np
 
+  from repro import obs
   from repro.data.pipeline import EmbeddedCorpus
   from repro.data.selection import (coverage_ratio, greedi_select_indices,
                                     greedi_select_indices_sharded)
 
+  if (args.trace_out or args.stats_json or args.metrics_port is not None):
+    obs.enable(trace_out=args.trace_out)
+
+  records: list = []
+
+  def emit(event, **fields):
+    """The ONE stats format of every mode: an obs stats line to stdout plus
+    a record for --stats-json."""
+    print("[select] " + obs.stats_line(event, **fields))
+    records.append(dict(event=event, **fields))
+
+  sidecar = None
   kappa = args.kappa or args.k
   corpus = EmbeddedCorpus(n_docs=args.n, feat_dim=args.d, vocab=1024,
                           seq_len=8)
@@ -155,23 +180,27 @@ def main() -> None:
                            capacity=args.n, kernel=args.kernel,
                            backend=args.backend, warm_start=not args.cold,
                            deadline=args.deadline, objective=args.objective)
+    if args.metrics_port is not None:
+      # board wired in: POST /healthz beats feed the same HeartbeatBoard
+      # as in-process beats (the out-of-band liveness path)
+      sidecar = obs.Sidecar(board=svc.board, port=args.metrics_port)
+      emit("sidecar", url=sidecar.url)
     n0 = args.n - int(args.n * args.append_frac)
     feats_np = np.asarray(feats)
     if args.objective == "saturated_coverage":
       feats_np = np.abs(feats_np)  # nonneg coverage mass (Lin & Bilmes)
     svc.append(feats_np[:n0])
     if args.query_batch:
-      _query_batch_cycle(svc, args.query_batch, args.k, "pre-epoch")
+      _query_batch_cycle(svc, args.query_batch, args.k, "pre-epoch", emit)
     res = None
     for e in range(args.epochs):
       svc.board.beat()   # all in-process shards are alive by construction
       res = svc.epoch()
       s = res.stats
-      print(f"[select] epoch {s.epoch}: {len(res.sel_gids)} docs from "
-            f"{s.n_live} live (cap {s.capacity}), f={s.value:.4f}, "
-            f"alive={int(s.alive.sum())}/{len(s.alive)}, "
-            f"{'warm' if s.warm else 'cold'}, {s.wall_s:.2f}s, "
-            f"traces={s.retraces}")
+      emit("epoch", epoch=s.epoch, docs=len(res.sel_gids), live=s.n_live,
+           cap=s.capacity, f=s.value, alive=int(s.alive.sum()),
+           shards=len(s.alive), warm=s.warm, wall_s=s.wall_s,
+           traces=s.retraces)
       if e == 0 and n0 < args.n:
         if args.query_every:
           # stream the held-back rows in blocks, answering "give me k NOW"
@@ -179,53 +208,68 @@ def main() -> None:
           for boff in range(n0, args.n, args.query_every):
             svc.append(feats_np[boff:boff + args.query_every])
             q = svc.query()
-            print(f"[select] query after {svc.n_docs} docs: "
-                  f"{len(q.sel_gids)} ids from {q.source}, "
-                  f"est={q.value_estimate:.4f}, "
-                  f"stale_appends={q.appends_since_epoch}, "
-                  f"{q.wall_s * 1e3:.1f}ms")
+            emit("query", docs=svc.n_docs, ids=len(q.sel_gids),
+                 source=q.source, est=q.value_estimate,
+                 stale_appends=q.appends_since_epoch,
+                 wall_ms=q.wall_s * 1e3)
         else:
           svc.append(feats_np[n0:])
-        print(f"[select] appended {args.n - n0} docs mid-stream")
+        emit("append", docs=args.n - n0)
     if args.query_batch:
-      _query_batch_cycle(svc, args.query_batch, args.k, "post-epoch")
+      _query_batch_cycle(svc, args.query_batch, args.k, "post-epoch", emit)
     sel = res.sel_gids
     # the coverage baseline below must score the features selection ran on
     # (saturated coverage selects over the abs-mapped corpus)
     feats = jax.numpy.asarray(feats_np)
-    label = (f"selection service (m={args.mesh}, {args.epochs} epochs, "
-             f"{args.objective})")
+    mode_fields = dict(mode="service", m=args.mesh, epochs=args.epochs,
+                       objective=args.objective)
   elif args.mesh:
     from repro.util import make_mesh  # jax imported post-env-setup
     mesh = make_mesh((args.mesh,), ("data",))
+    if args.metrics_port is not None:
+      sidecar = obs.Sidecar(port=args.metrics_port)
+      emit("sidecar", url=sidecar.url)
     sel = greedi_select_indices_sharded(
         jax.random.PRNGKey(0), feats, mesh=mesh, kappa=kappa,
         k_final=args.k, kernel=args.kernel, fast=not args.no_fast,
         backend=args.backend)
-    label = f"sharded GreeDi (m={args.mesh}, " \
-            f"{'generic' if args.no_fast else 'fast'})"
+    mode_fields = dict(mode="sharded", m=args.mesh,
+                       engine="generic" if args.no_fast else "fast")
   else:
+    if args.metrics_port is not None:
+      sidecar = obs.Sidecar(port=args.metrics_port)
+      emit("sidecar", url=sidecar.url)
     sel = greedi_select_indices(jax.random.PRNGKey(0), feats, m=args.m,
                                 kappa=kappa, k_final=args.k,
                                 kernel=args.kernel, backend=args.backend)
-    label = f"reference GreeDi (m={args.m})"
+    mode_fields = dict(mode="reference", m=args.m)
   t_sel = time.time() - t0
 
   # persist the coreset BEFORE the (expensive) coverage baseline so a
   # baseline OOM/timeout can't discard an already-computed selection
   if args.out:
     np.save(args.out, sel)
-    print(f"[select] wrote {args.out}")
-  msg = f"[select] {label} selected {len(sel)} docs"
+    emit("wrote", path=args.out)
+  done = dict(mode_fields, docs=len(sel), wall_s=t_sel)
   # the baseline is O(k * n^2) on the full ground set -- default it on only
   # at sizes where that is cheap, and let --coverage / --no-coverage override
   want_cov = args.coverage or (not args.no_coverage and args.n <= 16384)
   if want_cov:
-    cov = coverage_ratio(feats, sel, args.k, kernel=args.kernel)
-    msg += f"; coverage={cov:.4f} of centralized"
+    done["coverage"] = float(coverage_ratio(feats, sel, args.k,
+                                            kernel=args.kernel))
   elif not args.no_coverage:
-    msg += "; coverage skipped at this n (force with --coverage)"
-  print(f"{msg} ({t_sel:.1f}s)")
+    done["coverage"] = "skipped"
+  emit("done", **done)
+
+  if args.stats_json:
+    obs.write_stats_json(args.stats_json, records,
+                         tool="repro.launch.select", n=args.n, d=args.d,
+                         k=args.k, mesh=args.mesh, epochs=args.epochs)
+    print(f"[select] wrote {args.stats_json}")
+  if sidecar is not None:
+    if args.linger > 0:
+      time.sleep(args.linger)
+    sidecar.close()
 
 
 if __name__ == "__main__":

@@ -11,7 +11,11 @@ protocol output instead of an operator-supplied input.
 
 In a real deployment ``beat`` is driven by whatever health signal exists
 (per-host heartbeat RPCs, a k8s readiness probe, the trainer's data-fetch
-acks).  Tests inject a fake ``clock`` and call ``fail`` to kill shards
+acks).  The obs sidecar's ``POST /healthz`` is exactly such a signal: it
+calls ``beat(shard, source="sidecar")`` on the SAME board, so out-of-band
+HTTP beats and in-process fetch acks are indistinguishable to the liveness
+collective (``source`` only labels the ``repro_heartbeats_total`` counter).
+Tests inject a fake ``clock`` and call ``fail`` to kill shards
 deterministically.
 """
 from __future__ import annotations
@@ -19,6 +23,8 @@ from __future__ import annotations
 import time
 
 import numpy as np
+
+from repro.obs.metrics import REGISTRY
 
 
 class HeartbeatBoard:
@@ -32,17 +38,28 @@ class HeartbeatBoard:
   def m(self) -> int:
     return self._last.shape[0]
 
-  def beat(self, shard: int | None = None) -> None:
-    """Record a heartbeat for ``shard`` (None = all shards)."""
+  def beat(self, shard: int | None = None, source: str = "inproc") -> None:
+    """Record a heartbeat for ``shard`` (None = all shards).
+
+    ``source`` labels the heartbeat counter only ("inproc" for trainer
+    fetch acks, "sidecar" for HTTP /healthz beats) -- liveness treats all
+    sources identically.
+    """
     now = float(self._clock())
     if shard is None:
       self._last[:] = now
     else:
       self._last[shard] = now
+    REGISTRY.counter("repro_heartbeats_total",
+                     "heartbeats recorded per source").inc(
+                         source=source,
+                         shard="all" if shard is None else shard)
 
   def fail(self, shard: int) -> None:
     """Mark ``shard`` dead: its age is +inf until it beats again."""
     self._last[shard] = -np.inf
+    REGISTRY.counter("repro_heartbeat_failures_total",
+                     "shards explicitly marked dead").inc(shard=shard)
 
   def ages(self, now: float | None = None) -> np.ndarray:
     """(m,) seconds since each shard's last heartbeat (>= 0; inf = dead)."""

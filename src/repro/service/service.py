@@ -60,13 +60,13 @@ candidate it returns by rescanning its tile.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import greedi as GD
 from repro.core import objectives as O
 from repro.core.objectives import NEG
@@ -276,11 +276,17 @@ class SelectionService:
         wb = maintainer.epoch_bounds(wb, jnp.repeat(nv, npp))
         # slack keeps the bounds valid under f32 summation-order noise
         wb = wb * (1.0 + _BOUND_SLACK_REL) + _BOUND_SLACK_ABS
-      return GD.greedi_sharded(
+      result = GD.greedi_sharded(
           feats_sh, mesh=self.mesh, kappa=self._kappa,
           k_final=self._k_final, objective=obj, axis_names=axis_names,
           rng=r_run, backend=self._backend, gids=gids_sh, mode=self._mode,
           warm_bounds=wb, liveness_age=ages, liveness_deadline=deadline)
+      # device-fed diagnostic, UNCONDITIONAL extra output (the no-retrace
+      # contract of repro.obs): per-shard live evaluation mass under this
+      # epoch's partition.  The host only device_gets it when obs is enabled.
+      eval_mass = jnp.sum((gids_sh >= 0).reshape(m, npp).astype(jnp.int32),
+                          axis=1)
+      return result, eval_mass
 
     # the raw (unjitted) epoch body is the analyzer's traceable entry point
     # (repro.analysis.entries traces it with jax.make_jaxpr at store shapes)
@@ -392,26 +398,30 @@ class SelectionService:
     query stream is.
     """
     k = self._norm_k(k)
-    t0 = time.perf_counter()
-    excl = self._norm_excl(exclude_gids)
-    stale = self._appends_since_epoch
-    if excl is None and seed == 0 and self._last_epoch is not None and (
-        stale == 0 or not self.store.sieve_enabled):
-      le = self._last_epoch
-      return QueryResult(le.sel_gids[:k], float(le.stats.value), "epoch",
-                         stale, time.perf_counter() - t0)
-    if not self.store.sieve_enabled:
-      raise RuntimeError(
-          "query() needs a standing sieve (an objective with a sum-form "
-          "BoundMaintainer) or at least one completed epoch (and masked / "
-          "seeded queries always need the sieve)")
-    gids, scores = self.store.query_sieves(k=k, exclude_gids=excl, seed=seed)
-    slots = gids[:k]
-    sel = slots[slots >= 0]
-    # only live winner slots count: a slot with gid -1 is empty, and its
-    # score must not pollute the estimate (k can exceed the live winners)
-    val = float(scores[:k][slots >= 0].sum()) / max(self.store.n_docs, 1)
-    return QueryResult(sel, val, "sieve", stale, time.perf_counter() - t0)
+    with obs.span("service.query", k=k) as sp:
+      excl = self._norm_excl(exclude_gids)
+      stale = self._appends_since_epoch
+      if excl is None and seed == 0 and self._last_epoch is not None and (
+          stale == 0 or not self.store.sieve_enabled):
+        le = self._last_epoch
+        src, sel, val = "epoch", le.sel_gids[:k], float(le.stats.value)
+      else:
+        if not self.store.sieve_enabled:
+          raise RuntimeError(
+              "query() needs a standing sieve (an objective with a sum-form "
+              "BoundMaintainer) or at least one completed epoch (and masked "
+              "/ seeded queries always need the sieve)")
+        gids, scores = self.store.query_sieves(k=k, exclude_gids=excl,
+                                               seed=seed)
+        slots = gids[:k]
+        sel = slots[slots >= 0]
+        # only live winner slots count: a slot with gid -1 is empty, and its
+        # score must not pollute the estimate (k can exceed the live winners)
+        val = float(scores[:k][slots >= 0].sum()) / max(self.store.n_docs, 1)
+        src = "sieve"
+      sp.add(tier=src, stale=stale)
+    self._feed_query_metrics(src, 1, stale, sp.wall_s, path="single")
+    return QueryResult(sel, val, src, stale, sp.wall_s)
 
   def query_batch(self, requests, tier: str = "sieve") -> list[QueryResult]:
     """Answer a whole batch of tenant requests: one device call per query
@@ -439,63 +449,64 @@ class SelectionService:
     reqs = [r if isinstance(r, QueryRequest)
             else QueryRequest() if r is None else QueryRequest(k=int(r))
             for r in requests]
-    t0 = time.perf_counter()
-    stale = self._appends_since_epoch
-    norm = [(self._norm_k(r.k), self._norm_excl(r.exclude_gids or None),
-             int(r.seed)) for r in reqs]
-    mc = self.store.query_mask_cap
+    with obs.span("service.query_batch", tier=tier, batch=len(reqs)) as sp:
+      stale = self._appends_since_epoch
+      sp.add(stale=stale)
+      norm = [(self._norm_k(r.k), self._norm_excl(r.exclude_gids or None),
+               int(r.seed)) for r in reqs]
+      mc = self.store.query_mask_cap
 
-    def _pack_excl(sub):
-      return np.stack([e if e is not None else np.full((mc,), -1, np.int32)
-                       for e in sub]) if sub else np.zeros((0, mc), np.int32)
+      def _pack_excl(sub):
+        return np.stack([e if e is not None else np.full((mc,), -1, np.int32)
+                         for e in sub]) if sub else np.zeros((0, mc), np.int32)
 
-    if tier == "exact":
-      if not isinstance(self._objective, O.FacilityLocation):
-        raise ValueError(
-            "tier='exact' currently supports the facility-location "
-            f"objective only (got {type(self._objective).__name__})")
-      from repro.kernels.dispatch import FUSED_SIMS
-      if getattr(self._objective, "kernel", None) not in FUSED_SIMS:
-        raise ValueError("tier='exact' needs a fused similarity kernel "
-                         f"({FUSED_SIMS})")
-      ks = np.array([k for k, _, _ in norm], np.int32)
-      ex = _pack_excl([e for _, e, _ in norm])
-      g, s, nvis = self.store.query_exact_batch(ks, ex, k_cap=self._k_final)
-      wall = time.perf_counter() - t0
-      out = []
-      for i, (k, _, _) in enumerate(norm):
-        slots = g[i, :k]
-        val = float(s[i, :k][slots >= 0].sum()) / max(float(nvis[i]), 1.0)
-        out.append(QueryResult(slots[slots >= 0], val, "exact", stale, wall))
-      return out
-
-    answers: list = [None] * len(reqs)
-    batch_idx = []
-    for i, (k, excl, seed) in enumerate(norm):
-      if excl is None and seed == 0 and self._last_epoch is not None and (
-          stale == 0 or not self.store.sieve_enabled):
-        le = self._last_epoch
-        answers[i] = ("epoch", le.sel_gids[:k], float(le.stats.value))
-      elif not self.store.sieve_enabled:
-        raise RuntimeError(
-            "query_batch() needs a standing sieve (an objective with a "
-            "sum-form BoundMaintainer) or at least one completed epoch "
-            "(and masked / seeded requests always need the sieve)")
+      if tier == "exact":
+        if not isinstance(self._objective, O.FacilityLocation):
+          raise ValueError(
+              "tier='exact' currently supports the facility-location "
+              f"objective only (got {type(self._objective).__name__})")
+        from repro.kernels.dispatch import FUSED_SIMS
+        if getattr(self._objective, "kernel", None) not in FUSED_SIMS:
+          raise ValueError("tier='exact' needs a fused similarity kernel "
+                           f"({FUSED_SIMS})")
+        ks = np.array([k for k, _, _ in norm], np.int32)
+        ex = _pack_excl([e for _, e, _ in norm])
+        g, s, nvis = self.store.query_exact_batch(ks, ex, k_cap=self._k_final)
+        answers = []
+        for i, (k, _, _) in enumerate(norm):
+          slots = g[i, :k]
+          val = float(s[i, :k][slots >= 0].sum()) / max(float(nvis[i]), 1.0)
+          answers.append(("exact", slots[slots >= 0], val))
       else:
-        batch_idx.append(i)
-    if batch_idx:
-      ks = np.array([norm[i][0] for i in batch_idx], np.int32)
-      ex = _pack_excl([norm[i][1] for i in batch_idx])
-      sd = np.array([norm[i][2] for i in batch_idx], np.int32)
-      g, s = self.store.query_sieves_batch(ks, ex, sd)
-      nd = max(self.store.n_docs, 1)
-      for j, i in enumerate(batch_idx):
-        k = norm[i][0]
-        slots = g[j, :k]
-        val = float(s[j, :k][slots >= 0].sum()) / nd
-        answers[i] = ("sieve", slots[slots >= 0], val)
-    wall = time.perf_counter() - t0
-    return [QueryResult(sel, val, src, stale, wall)
+        answers = [None] * len(reqs)
+        batch_idx = []
+        for i, (k, excl, seed) in enumerate(norm):
+          if excl is None and seed == 0 and self._last_epoch is not None and (
+              stale == 0 or not self.store.sieve_enabled):
+            le = self._last_epoch
+            answers[i] = ("epoch", le.sel_gids[:k], float(le.stats.value))
+          elif not self.store.sieve_enabled:
+            raise RuntimeError(
+                "query_batch() needs a standing sieve (an objective with a "
+                "sum-form BoundMaintainer) or at least one completed epoch "
+                "(and masked / seeded requests always need the sieve)")
+          else:
+            batch_idx.append(i)
+        if batch_idx:
+          ks = np.array([norm[i][0] for i in batch_idx], np.int32)
+          ex = _pack_excl([norm[i][1] for i in batch_idx])
+          sd = np.array([norm[i][2] for i in batch_idx], np.int32)
+          g, s = self.store.query_sieves_batch(ks, ex, sd)
+          nd = max(self.store.n_docs, 1)
+          for j, i in enumerate(batch_idx):
+            k = norm[i][0]
+            slots = g[j, :k]
+            val = float(s[j, :k][slots >= 0].sum()) / nd
+            answers[i] = ("sieve", slots[slots >= 0], val)
+    for src in set(a[0] for a in answers):
+      self._feed_query_metrics(src, sum(1 for a in answers if a[0] == src),
+                               stale, sp.wall_s, path="batch")
+    return [QueryResult(sel, val, src, stale, sp.wall_s)
             for src, sel, val in answers]
 
   def epoch(self, rng: Array | None = None) -> EpochResult:
@@ -516,11 +527,13 @@ class SelectionService:
     # zero corpus) ran this epoch effectively cold -- report that, so
     # dashboards don't misread cold epochs as warm
     warm_eff = self._warm and self.store.bounds_populated
-    t0 = time.perf_counter()
-    r = self._epoch_fn(self.store.feats, self.store.gids,
-                       self.store.ubound_device, ages, deadline, rng)
-    jax.block_until_ready(r)
-    wall = time.perf_counter() - t0
+    with obs.span("service.epoch", epoch=self._epoch_idx,
+                  warm=warm_eff) as sp:
+      r, eval_mass = self._epoch_fn(self.store.feats, self.store.gids,
+                                    self.store.ubound_device, ages, deadline,
+                                    rng)
+      jax.block_until_ready((r, eval_mass))
+    wall = sp.wall_s
     sv = np.asarray(r.sel_valid)
     sel = np.asarray(r.sel_gids)[sv]
     sel_feats = np.asarray(r.sel_feats)[sv]
@@ -530,6 +543,7 @@ class SelectionService:
                        capacity=self.store.capacity, value=float(r.value),
                        alive=np.asarray(r.alive), warm=warm_eff,
                        wall_s=wall, retraces=self._trace_count)
+    self._feed_epoch_metrics(stats, r, eval_mass)
     self._epoch_idx += 1
     result = EpochResult(sel, stats, r)
     # epoch output seeds the fresh sieve grid: queries between epochs start
@@ -539,6 +553,54 @@ class SelectionService:
     self._appends_since_epoch = 0
     self._last_epoch = result
     return result
+
+  def _feed_query_metrics(self, tier: str, n: int, stale: int, wall_s: float,
+                          path: str) -> None:
+    reg = obs.REGISTRY
+    reg.counter("repro_queries_total",
+                "queries answered, by serving tier").inc(n, tier=tier)
+    reg.gauge("repro_query_staleness_appends",
+              "appends since the last epoch at answer time").set(stale)
+    reg.histogram("repro_query_wall_seconds",
+                  "query wall clock (batch: whole drained batch)").observe(
+                      wall_s, path=path)
+
+  def _feed_epoch_metrics(self, stats: EpochStats, r, eval_mass) -> None:
+    """Feed the metrics registry after an epoch (docs/observability.md).
+
+    Registry updates are always on (cheap host math over already-fetched
+    stats); the device-fed diagnostics -- per-shard eval mass and lazy tile
+    rescans -- cross D2H only when obs is enabled, so the disabled service
+    pays no extra transfers.
+    """
+    reg = obs.REGISTRY
+    reg.counter("repro_epochs_total", "selection epochs run").inc()
+    reg.histogram("repro_epoch_wall_seconds",
+                  "device-synced epoch wall clock").observe(stats.wall_s)
+    reg.gauge("repro_epoch_value", "f(selection) of the last epoch").set(
+        stats.value)
+    reg.gauge("repro_alive_shards",
+              "shards the liveness collective kept last epoch").set(
+                  int(stats.alive.sum()))
+    reg.gauge("repro_epoch_retraces",
+              "cumulative epoch-fn traces (1 per capacity)").set(
+                  stats.retraces)
+    reg.gauge("repro_corpus_live_docs", "live documents").set(stats.n_live)
+    reg.gauge("repro_corpus_capacity", "pad-and-mask capacity").set(
+        stats.capacity)
+    reg.gauge("repro_epoch_warm", "1 when warm bounds carried signal").set(
+        int(stats.warm))
+    if not obs.enabled():
+      return
+    em = np.asarray(eval_mass)
+    rescans = np.asarray(r.r1_rescans)
+    for i in range(em.shape[0]):
+      reg.gauge("repro_epoch_eval_mass",
+                "per-shard live evaluation rows (device-fed)").set(
+                    int(em[i]), shard=i)
+    reg.counter("repro_lazy_tile_rescans_total",
+                "round-1 lazy tiles rescanned (device-fed)").inc(
+                    int(rescans.sum()))
 
   def selections(self, n_epochs: int) -> Iterator[np.ndarray]:
     """Yield ``sel_gids`` for ``n_epochs`` epochs -- the iterator shape

@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.greedi import _combined_index, _mesh_size
 from repro.core.objectives import _kernel_h
 from repro.kernels import autotune, dispatch
@@ -314,12 +315,18 @@ class CorpusStore:
       expo = (jtop_new - (sieve_t - 1)
               + jnp.arange(sieve_t)).astype(jnp.float32)
       tau = jnp.exp(expo * log1pe)
+      cnt_before = jnp.sum(lscnt)
       lsgid, lsgain, lsfeat, lscnt = sieve_op(
           rows, sums, rgids, mine & has, tau, lsgid, lsgain, lsfeat, lscnt,
           kernel=kernel, h=h)
       ldelta = jnp.full_like(ldelta, delta_new)
       ljtop = jnp.full_like(ljtop, jtop_new)
-      return lsgid, lsgain, lsfeat, lscnt, ldelta, ljtop
+      # device-fed diagnostics (repro.obs): rows this shard offered to its
+      # sieves and net bucket-count growth (admissions) this chunk
+      considered = jnp.sum(mine & has).astype(jnp.int32)
+      admitted = (jnp.sum(lscnt) - cnt_before).astype(jnp.int32)
+      return (lsgid, lsgain, lsfeat, lscnt, ldelta, ljtop), admitted, \
+          considered
 
     def body(lfeats, lgids, lhi, llo, *rest):
       sieve_state, (rows, rgids, rvalid, off) = rest[:-4], rest[-4:]
@@ -353,27 +360,38 @@ class CorpusStore:
         lhi, llo = _df_add(lhi, llo, add)
         lhi = lhi.at[widx].set(sums, mode="drop")
         llo = llo.at[widx].set(jnp.zeros((ab,), jnp.float32), mode="drop")
-        if sieve_state:
-          # ---- standing-sieve admission rides the same pass: the psum'd
-          # sums ARE the admission gains, so the sieve adds no collectives
-          sieve_state = sieve_body(sieve_state, rows, rgids, mine, sums)
-      return (lfeats, lgids, lhi, llo) + tuple(sieve_state)
+      # device-fed diagnostics, UNCONDITIONAL extra (1,)-per-shard outputs
+      # (the no-retrace contract of repro.obs); host reads them only when
+      # obs is enabled
+      admitted = jnp.zeros((1,), jnp.int32)
+      considered = jnp.zeros((1,), jnp.int32)
+      if maintainer is not None and sieve_state:
+        # ---- standing-sieve admission rides the same pass: the psum'd
+        # sums ARE the admission gains, so the sieve adds no collectives
+        sieve_state, adm, cons = sieve_body(sieve_state, rows, rgids, mine,
+                                            sums)
+        admitted = adm.reshape(1)
+        considered = cons.reshape(1)
+      return (lfeats, lgids, lhi, llo) + tuple(sieve_state) + (admitted,
+                                                               considered)
 
     n_state = 4 + (6 if self._sieve_k else 0)
+    self._n_state = n_state
 
     def write(*arrays_and_chunk):
       self._write_trace_count += 1  # python side effect: counts (re-)traces
       return _shard_map(
           body, mesh=mesh,
           in_specs=(P(ax),) * n_state + (P(), P(), P(), P()),
-          out_specs=(P(ax),) * n_state)(*arrays_and_chunk)
+          out_specs=(P(ax),) * (n_state + 2))(*arrays_and_chunk)
 
     # outputs pinned to the store's row sharding: the resident block must
     # stay mesh-sharded across appends no matter what GSPMD would infer.
     # The raw body is kept for the analyzer (repro.analysis.entries).
     self._append_raw = write
-    self._append_fn = jax.jit(write, donate_argnums=tuple(range(n_state)),
-                              out_shardings=(self._sharding,) * n_state)
+    self._append_fn = jax.jit(
+        write, donate_argnums=tuple(range(n_state)),
+        out_shardings=(self._sharding,) * (n_state + 2))
 
     def gather(gids_blk, hi, q):
       eq = gids_blk[None, :] == q[:, None]          # (kq, capacity)
@@ -856,6 +874,38 @@ class CorpusStore:
     while n_total > self._cap:
       self._grow()
 
+  def _feed_append_metrics(self, rows_written: int, diag) -> None:
+    """Feed the registry after one append chunk (docs/observability.md).
+
+    The chunk/row counters are always on (host ints).  ``diag`` is the
+    append pass's device-fed tail -- per-shard (m,) sieve admission and
+    consideration counts -- and crosses D2H only when obs is enabled, as
+    does the sieve grid-level read.
+    """
+    reg = obs.REGISTRY
+    reg.counter("repro_append_chunks_total",
+                "fixed-shape append chunks written").inc()
+    reg.counter("repro_append_rows_total",
+                "document rows appended").inc(rows_written)
+    reg.gauge("repro_store_growths", "capacity doublings so far").set(
+        self._growths)
+    if not obs.enabled():
+      return
+    admitted = int(np.asarray(diag[0]).sum())
+    considered = int(np.asarray(diag[1]).sum())
+    reg.counter("repro_sieve_admissions_total",
+                "sieve bucket admissions (device-fed)").inc(
+                    max(admitted, 0))
+    reg.counter("repro_sieve_rejections_total",
+                "sieve rows considered but not admitted (device-fed)").inc(
+                    max(considered - admitted, 0))
+    if self._sieve_k:
+      jtop = int(np.asarray(self._sieve_jtop)[0])
+      if jtop != _JTOP_COLD:
+        reg.gauge("repro_sieve_grid_level",
+                  "sieve threshold-grid top exponent jtop (device-fed)").set(
+                      jtop)
+
   def append(self, feats, gids=None) -> None:
     """Write documents into the resident block (chunked, fixed shapes).
 
@@ -923,8 +973,10 @@ class CorpusStore:
       self._feats, self._gids, self._ub_hi, self._ub_lo = out[:4]
       if self._sieve_k:
         (self._sieve_gid, self._sieve_gain, self._sieve_feat,
-         self._sieve_cnt, self._sieve_delta, self._sieve_jtop) = out[4:]
+         self._sieve_cnt, self._sieve_delta,
+         self._sieve_jtop) = out[4:self._n_state]
       self._n += cb
+      self._feed_append_metrics(cb, out[self._n_state:])
 
     # every chunk landed: commit the id bookkeeping
     if auto:

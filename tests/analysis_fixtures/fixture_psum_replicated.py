@@ -1,0 +1,59 @@
+"""Fixture: the psum-of-replicated-operand bug class (R7).
+
+A ``psum`` inside shard_map sums one contribution PER SHARD.  When the
+operand is replicated (same value on every shard -- a broadcast input, a
+constant, or the output of an earlier psum), the collective multiplies it
+by the mesh size instead of reducing anything.  ``bad_regularized_score``
+below psums a penalty derived only from the replicated weights;
+``good_regularized_score`` is the sharded twin: every psum operand derives
+from the shard's own slice of the data and must NOT be flagged.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def bad_regularized_score(feats, weights, mesh):
+  """Score with a weight penalty -- psum'd although it is replicated."""
+
+  def shard_body(local, w):
+    partial = jnp.sum(local @ w)          # shard-varying: local slice
+    penalty = 0.5 * jnp.sum(w * w)        # replicated: same w everywhere
+    score = jax.lax.psum(partial, "data")
+    score = score - jax.lax.psum(penalty, "data")  # BUG: penalty * n_shards
+    return score
+
+  f = shard_map(shard_body, mesh=mesh, in_specs=(P("data", None), P()),
+                out_specs=P())
+  return f(feats, weights)
+
+
+def good_regularized_score(feats, weights, mesh):
+  """Sharded twin: every psum operand varies per shard."""
+
+  def shard_body(local, w):
+    partial = jnp.sum(local @ w)
+    # fold the penalty into ONE shard's partial so the collective sums it
+    # exactly once
+    shard = jax.lax.axis_index("data")
+    penalty = jnp.where(shard == 0, 0.5 * jnp.sum(w * w), 0.0)
+    return jax.lax.psum(partial - penalty, "data")
+
+  f = shard_map(shard_body, mesh=mesh, in_specs=(P("data", None), P()),
+                out_specs=P())
+  return f(feats, weights)
+
+
+def build(n_devices):
+  mesh = Mesh(jax.devices()[:n_devices], ("data",))
+  feats = jax.ShapeDtypeStruct((64, 8), jnp.float32)
+  weights = jax.ShapeDtypeStruct((8,), jnp.float32)
+  return (lambda x, w: bad_regularized_score(x, w, mesh), (feats, weights))
+
+
+def build_good(n_devices):
+  mesh = Mesh(jax.devices()[:n_devices], ("data",))
+  feats = jax.ShapeDtypeStruct((64, 8), jnp.float32)
+  weights = jax.ShapeDtypeStruct((8,), jnp.float32)
+  return (lambda x, w: good_regularized_score(x, w, mesh), (feats, weights))

@@ -1,4 +1,4 @@
-"""Tests for the repro.analysis hazard analyzer (rules R1-R6).
+"""Tests for the repro.analysis hazard analyzer (rules R1-R7).
 
 Each seeded fixture in tests/analysis_fixtures/ must trip exactly its own
 rule, the masked twins must stay clean, and the committed source tree must
@@ -162,6 +162,60 @@ def test_r1_flags_sort_in_loop_under_shard_map(subrun):
       print("OK")
       """.format(repo=str(REPO)), 4)
   assert "OK" in out
+
+
+def test_r7_flags_psum_of_replicated_and_spares_sharded_twin(subrun):
+  out = subrun("""
+      from pathlib import Path
+      import sys
+      sys.path.insert(0, {repo!r})
+      from repro.analysis import check_entry
+      from tests.analysis_fixtures import fixture_psum_replicated as fx
+
+      fn, args = fx.build(4)
+      found = check_entry(fn, args, entry="fx:psum_replicated",
+                          mask_positions=(), row_sizes=(),
+                          repo_root=Path({repo!r}))
+      rules = sorted({{f.rule for f in found}})
+      print("RULES", rules)
+      assert rules == ["R7"], found
+      # exactly one finding, on the BUG line of the fixture
+      (f,) = found
+      src = Path({repo!r}, f.file).read_text().splitlines()
+      assert "BUG" in src[f.line - 1], (f.file, f.line)
+
+      fn, args = fx.build_good(4)
+      good = check_entry(fn, args, entry="fx:psum_sharded_twin",
+                         mask_positions=(), row_sizes=(),
+                         repo_root=Path({repo!r}))
+      assert good == [], good
+      print("OK")
+      """.format(repo=str(REPO)), 4)
+  assert "OK" in out
+
+
+def test_r7_single_device_mesh_is_exempt(subrun):
+  """On a 1-device mesh psum of anything is the identity -- no hazard."""
+  out = subrun("""
+      from pathlib import Path
+      import sys
+      sys.path.insert(0, {repo!r})
+      from repro.analysis import check_entry
+      from tests.analysis_fixtures import fixture_psum_replicated as fx
+
+      fn, args = fx.build(1)
+      found = check_entry(fn, args, entry="fx:psum_1dev",
+                          mask_positions=(), row_sizes=(),
+                          repo_root=Path({repo!r}))
+      assert found == [], found
+      print("OK")
+      """.format(repo=str(REPO)), 1)
+  assert "OK" in out
+
+
+def test_psum_replicated_fixture_is_ast_clean():
+  # R7 is a jaxpr-layer rule; the AST layer must not flag this file
+  assert _lint(FIXTURES / "fixture_psum_replicated.py") == []
 
 
 # ------------------------------------------------------------------ CI gate
