@@ -24,7 +24,7 @@ def main() -> None:
                           fig8_speedup, fig9_maxcut, fig10_coverage,
                           kernels_bench, query_serving, roofline,
                           select_step, service_epochs, sieve_query,
-                          store_transfer)
+                          store_transfer, tree_merge)
 
   if args.json:
     common.start_collection()
@@ -42,6 +42,7 @@ def main() -> None:
       "query_serving": lambda: query_serving.run(quick=args.quick),
       "sieve_query": lambda: sieve_query.run(quick=args.quick),
       "store_transfer": lambda: store_transfer.run(quick=args.quick),
+      "tree_merge": lambda: tree_merge.run(quick=args.quick),
   }
   names = [args.only] if args.only else list(suites)
   failures = []

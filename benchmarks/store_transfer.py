@@ -82,8 +82,9 @@ def _child(ns: tuple[int, ...]) -> None:
     ages = jnp.zeros((NDEV,), jnp.float32)
     dl = jnp.asarray(np.inf, jnp.float32)
     key = jax.random.PRNGKey(7)
-    r_dev = svc._epoch_fn(st.feats, st.gids, st.ubound_device, ages, dl, key)
-    r_host = svc._epoch_fn(fh, gh, uh, ages, dl, key)
+    r_dev, _, _ = svc._epoch_fn(st.feats, st.gids, st.ubound_device, ages,
+                                dl, key)
+    r_host, _, _ = svc._epoch_fn(fh, gh, uh, ages, dl, key)
     np.testing.assert_array_equal(np.asarray(r_dev.sel_gids),
                                   np.asarray(r_host.sel_gids))
 

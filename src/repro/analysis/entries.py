@@ -80,6 +80,35 @@ def _greedi_fast_spec() -> dispatch.TraceSpec:
       mask_args=(1,), row_sizes=_ROWS)
 
 
+def _greedi_tree_spec(fast: bool) -> dispatch.TraceSpec:
+  mesh = _mesh()
+  # merge="tree" with tree_branch=2 on the 4-device mesh: two levels of
+  # 2-child merges.  kappa=12 (not the module default 8) for the same
+  # reason as the hierarchical spec: 2*8 == _D would make every legitimate
+  # d-contraction pattern-match R3's row sizes.
+  kappa = 12
+
+  if fast:
+    # mode="lazy" so the sweep also covers the cached-column lazy round 1
+    # (sorted-order dynamic slices inside a while_loop -- R5 territory)
+    def run(feats, gids, ages):
+      return GD.greedi_sharded_fast(
+          feats, mesh=mesh, kappa=kappa, k_final=_KF, kernel="linear",
+          gids=gids, liveness_age=ages, liveness_deadline=5.0,
+          mode="lazy", merge="tree", tree_branch=2)
+  else:
+    def run(feats, gids, ages):
+      obj = O.FacilityLocation(kernel="linear")
+      return GD.greedi_sharded(
+          feats, mesh=mesh, kappa=kappa, k_final=_KF, objective=obj,
+          gids=gids, liveness_age=ages, liveness_deadline=5.0,
+          merge="tree", tree_branch=2)
+
+  return dispatch.TraceSpec(
+      fn=run, args=(_f32(_N, _D), _i32(_N), _f32(_M)),
+      mask_args=(1,), row_sizes=(_N, _NPP, 2 * kappa))
+
+
 def _greedi_hier_spec() -> dispatch.TraceSpec:
   mesh = make_mesh((2, 2), ("pod", "data"))
   obj = O.FacilityLocation(kernel="linear")
@@ -112,6 +141,20 @@ def _service_epoch_spec(objective: str = "facility") -> dispatch.TraceSpec:
       fn=svc._epoch_raw,
       args=(_f32(_N, _D), _i32(_N), _f32(_N), _f32(_M), _f32(), key),
       mask_args=(1,), row_sizes=_ROWS)
+
+
+def _service_tree_epoch_spec() -> dispatch.TraceSpec:
+  from repro.service.service import SelectionService
+  kappa = 12   # 2-child levels: 2*8 == _D would collide with R3 row sizes
+  svc = SelectionService(
+      _mesh(), d=_D, kappa=kappa, k_final=_KF, capacity=_N,
+      append_block=_AB, objective="facility", seed=0,
+      merge="tree", tree_branch=2)
+  key = jax.ShapeDtypeStruct(jax.random.PRNGKey(0).shape, jnp.uint32)
+  return dispatch.TraceSpec(
+      fn=svc._epoch_raw,
+      args=(_f32(_N, _D), _i32(_N), _f32(_N), _f32(_M), _f32(), key),
+      mask_args=(1,), row_sizes=(_N, _NPP, 2 * kappa))
 
 
 def _store_append_spec() -> dispatch.TraceSpec:
@@ -175,8 +218,11 @@ def register_all() -> None:
   ep("greedi:sharded_standard", lambda: _greedi_spec("standard", False))
   ep("greedi:sharded_lazy_warm", lambda: _greedi_spec("lazy", True))
   ep("greedi:sharded_fast", _greedi_fast_spec)
+  ep("greedi:sharded_tree", lambda: _greedi_tree_spec(False))
+  ep("greedi:sharded_fast_tree_lazy", lambda: _greedi_tree_spec(True))
   ep("greedi:hierarchical", _greedi_hier_spec)
   ep("service:epoch_facility", lambda: _service_epoch_spec("facility"))
+  ep("service:epoch_tree", _service_tree_epoch_spec)
   ep("service:epoch_info_gain", lambda: _service_epoch_spec("info_gain"))
   ep("service:store_append", _store_append_spec)
   ep("service:store_query", _store_query_spec)

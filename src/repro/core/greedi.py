@@ -62,10 +62,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.greedy import GreedyResult, greedy, with_backend
+from repro.core.greedy import (GreedyResult, _argsort_desc, _pad_to, greedy,
+                               with_backend)
 from repro.core.objectives import NEG, _kernel_h, masked_top1
 from repro.core.partition import random_partition
-from repro.kernels import dispatch
+from repro.kernels import autotune, dispatch
 from repro.util import fori as _ufori
 from repro.util import shard_map as _shard_map
 
@@ -494,6 +495,166 @@ def _liveness_collective(my_bit: Array, me: Array, m: int, axis_names):
   return jax.lax.psum(row, axis_names) > 0.0
 
 
+# ---------------------------------------------------------------------------
+# accumulation-tree merge (merge="tree"): level structure helpers
+# ---------------------------------------------------------------------------
+
+
+def _norm_branch(m: int, tree_branch: int | None) -> int:
+  """Normalize the tree branching factor: default 8 (a comfortable gathered
+  block), clamped to the mesh size (b >= m is the flat-equivalent one-level
+  tree, the degenerate case the bit-exactness contract is stated over)."""
+  b = 8 if tree_branch is None else int(tree_branch)
+  if b < 2 and m > 1:
+    raise ValueError(f"tree_branch must be >= 2, got {b}")
+  return max(min(b, m), 1)
+
+
+def _tree_factors(m: int, b: int) -> tuple[int, ...]:
+  """Inner-to-outer child counts of the accumulation tree over ``m`` shards:
+  ``b`` children at every level with one final (possibly smaller) outer
+  factor, so the product is exactly m and the depth is ceil(log_b m)."""
+  factors = []
+  rem = m
+  while rem > b:
+    if rem % b:
+      raise ValueError(
+          f"mesh size {m} does not factor into tree_branch={b} levels "
+          f"(need m = b^t * c with c <= b); pick a branch factor whose "
+          "powers divide the mesh, or use merge='flat'")
+    factors.append(b)
+    rem //= b
+  factors.append(rem)
+  return tuple(factors)
+
+
+def _tree_mesh(mesh, factors: tuple[int, ...]):
+  """Re-view the caller's devices as one mesh axis per tree level
+  (outer -> inner, row-major): the flat combined shard index -- and with it
+  the row layout, liveness indexing, and gid threading -- is unchanged, and
+  each merge level becomes an all_gather over ONE named axis with psums over
+  the axis suffix (its subtree), i.e. ``greedi_hierarchical``'s pod step
+  run once per level.  Returns (mesh, axis_names)."""
+  shape = tuple(reversed(factors))
+  names = tuple(f"tree{i}" for i in range(len(shape)))
+  devs = mesh.devices.reshape(shape)
+  axis_type = getattr(jax.sharding, "AxisType", None)
+  if axis_type is not None:
+    try:
+      return jax.sharding.Mesh(
+          devs, names, axis_types=(axis_type.Auto,) * len(names)), names
+    except TypeError:
+      pass
+  return jax.sharding.Mesh(devs, names), names
+
+
+def _resolve_merge_mesh(mesh, axis_names, m: int, merge: str,
+                        tree_branch: int | None):
+  """Validate the merge knob and, for merge="tree", swap the caller's mesh
+  for its accumulation-tree re-view (same devices, same order)."""
+  if merge == "flat":
+    return mesh, axis_names
+  if merge != "tree":
+    raise ValueError(f"merge must be 'flat' or 'tree', got {merge!r}")
+  if mesh.devices.size != m:
+    raise ValueError(
+        "merge='tree' re-views the mesh devices as tree levels and needs "
+        f"the merge axes {axis_names} to cover the whole mesh "
+        f"(axes span {m} of {mesh.devices.size} devices)")
+  return _tree_mesh(mesh, _tree_factors(m, _norm_branch(m, tree_branch)))
+
+
+def merge_peak_rows(m: int, kappa: int, *, merge: str = "flat",
+                    tree_branch: int | None = None) -> int:
+  """Peak per-shard merged-candidate rows under the chosen merge strategy:
+  the largest gathered block any single merge level materializes.  Flat
+  gathers all m kappa-blocks at once (m * kappa rows); the tree gathers at
+  most the widest level's child count (<= tree_branch) worth of blocks.
+  This is the static counterpart of the ``repro_merge_peak_*`` live metrics
+  the service feeds from its epoch outputs (docs/service.md)."""
+  if merge == "flat":
+    return m * kappa
+  if merge != "tree":
+    raise ValueError(f"merge must be 'flat' or 'tree', got {merge!r}")
+  return max(_tree_factors(m, _norm_branch(m, tree_branch))) * kappa
+
+
+def _fast_r1_lazy(s11: Array, local_valid: Array, kappa: int, d: int):
+  """Round 1 of ``greedi_sharded_fast`` with tile-bound lazy pruning over
+  the CACHED similarity matrix (``mode="lazy"``).
+
+  Mirrors core/greedy._greedy_lazy on bound-sorted masked *columns* of
+  ``s11`` instead of feature rows: ``stale[j]`` holds column j's last
+  computed coverage gain sum_i relu(s11[i, j] - cov[i]) -- a valid upper
+  bound by submodularity -- and each step rescans bound-sorted column tiles
+  (one (nl, tile) gather + relu-reduce each) until the next head bound
+  cannot beat the running best.  Rescanning while ``head >= best`` plus the
+  lowest-column-index tie preference reproduces the standard full-column
+  scan's ``masked_top1`` selection bit-for-bit, so the kappa-fold FLOP cut
+  of the cached similarities composes with lazy pruning.  Returns
+  (sel_idx (kappa,) int32, took (kappa,) bool, rescans () int32).
+  """
+  n_local = s11.shape[0]
+  if kappa == 0:
+    return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), bool), jnp.int32(0))
+  tile = autotune.lazy_tile(n_local, d)
+  tile = max(min(tile, autotune.floor_pow2(n_local, cap=tile)), 1)
+  npad = -(-n_local // tile) * tile
+  nt = npad // tile
+  int_max = jnp.int32(jnp.iinfo(jnp.int32).max)
+  valid_pad = _pad_to(local_valid, npad, False)
+
+  # step 0: one full column pass both selects and seeds the bounds, at the
+  # exact expression the standard path evaluates (bit-parity of the sums)
+  cov0 = jnp.zeros((n_local,), jnp.float32)
+  g0 = jnp.sum(jnp.maximum(s11 - cov0[:, None], 0.0), axis=0)
+  _, j0 = masked_top1(g0, local_valid)
+  take0 = jnp.any(local_valid)
+  cov = jnp.where(take0, jnp.maximum(cov0, s11[:, j0]), cov0)
+  selmask = jnp.zeros((npad,), bool).at[j0].set(take0)
+  carry0 = (cov, selmask, _pad_to(g0, npad, NEG),
+            jnp.zeros((kappa,), jnp.int32).at[0].set(j0),
+            jnp.zeros((kappa,), bool).at[0].set(take0), jnp.int32(0))
+
+  def body(t, c):
+    cov, selmask, stale, sel_idx, took, resc = c
+    feasible = (~selmask) & valid_pad
+    pri = jnp.where(feasible, stale, NEG)
+    # bound ties keep column order; NOT jnp.argsort -- see _argsort_desc for
+    # the multi-device CPU sort hazard this sidesteps
+    sorted_pri, order = _argsort_desc(pri)
+
+    def cond(s):
+      p, best, _, _ = s
+      head = sorted_pri[jnp.minimum(p * tile, npad - 1)]
+      return (p < nt) & (head >= best)
+
+    def rescan_tile(s):
+      p, best, bidx, st = s
+      ids = jax.lax.dynamic_slice(order, (p * tile,), (tile,))
+      idc = jnp.minimum(ids, n_local - 1)   # pad slots: clipped, infeasible
+      g = jnp.sum(jnp.maximum(s11[:, idc] - cov[:, None], 0.0), axis=0)
+      st = st.at[ids].set(g)
+      gm = jnp.where(feasible[ids], g, NEG)
+      tb = jnp.max(gm)
+      gi = jnp.min(jnp.where(gm == tb, ids, int_max))  # lowest column index
+      better = (tb > best) | ((tb == best) & (gi < bidx))
+      return (p + 1, jnp.where(better, tb, best),
+              jnp.where(better, gi, bidx), st)
+
+    init = (jnp.int32(0), jnp.float32(-jnp.inf), int_max, stale)
+    p_fin, _, bidx, stale = jax.lax.while_loop(cond, rescan_tile, init)
+    take = jnp.any(feasible)
+    j = jnp.where(take, jnp.clip(bidx, 0, n_local - 1), 0)
+    cov = jnp.where(take, jnp.maximum(cov, s11[:, j]), cov)
+    selmask = selmask.at[j].set(jnp.where(take, True, selmask[j]))
+    return (cov, selmask, stale, sel_idx.at[t].set(j),
+            took.at[t].set(take), resc + p_fin)
+
+  _, _, _, sel_idx, took, rescans = _ufori(1, kappa, body, carry0)
+  return sel_idx, took, rescans
+
+
 def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    objective, axis_names: tuple[str, ...] = ("data",),
                    straggler_keep: Array | None = None,
@@ -504,7 +665,9 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
                    mode: str = "standard",
                    warm_bounds: Array | None = None,
                    liveness_age: Array | None = None,
-                   liveness_deadline: float | None = None):
+                   liveness_deadline: float | None = None,
+                   merge: str = "flat",
+                   tree_branch: int | None = None):
   """GreeDi over a device mesh; round-2 gains are psum-reduced partial sums.
 
   Args:
@@ -547,11 +710,22 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
       ``straggler_keep``) is used everywhere and returned as
       ``GreediResult.alive``.
     liveness_deadline: deadline in the same units as ``liveness_age``.
+    merge: "flat" (one all_gather of all m kappa-blocks, merged once) or
+      "tree" (accumulation tree: r = ceil(log_b m) levels of b-child
+      sub-mesh merges, peak per-shard gathered block (b*kappa, d) instead
+      of (m*kappa, d) -- see docs/greedi.md).  ``tree_branch = m`` (or any
+      b >= m) is a one-level tree and reduces to the flat merge
+      bit-exactly; ``stage1_values`` is then per-machine as usual, else
+      per *root child* (one entry per top-level subtree).
+    tree_branch: children per tree node (merge="tree" only; default 8).
+      ``m`` must factor as b^t * c with c <= b.
 
   Returns a GreediResult (replicated on every shard).
   """
   objective = with_backend(objective, backend)
   m = _mesh_size(mesh, axis_names)
+  mesh, axis_names = _resolve_merge_mesh(mesh, axis_names, m, merge,
+                                         tree_branch)
   n, d = feats.shape
   assert n % m == 0, (n, m)
   if straggler_keep is None:
@@ -587,39 +761,94 @@ def greedi_sharded(feats: Array, *, mesh, kappa: int, k_final: int,
     valid = (r1.idx >= 0) & my_keep
     gsel = jnp.where(r1.idx >= 0, local_gids[jnp.maximum(r1.idx, 0)], -1)
 
-    # ---- merge: one all_gather of the candidate blocks -------------------
-    B = jax.lax.all_gather(sel, axis_names)          # (m, kappa, d)
-    Bvalid = jax.lax.all_gather(valid, axis_names)   # (m, kappa)
-    Bgids = jax.lax.all_gather(gsel, axis_names)     # (m, kappa)
-    Bflat = B.reshape(m * kappa, d)
-    Bmask = Bvalid.reshape(m * kappa)
-    Bgflat = Bgids.reshape(m * kappa)
+    if merge == "flat":
+      # ---- merge: one all_gather of the candidate blocks -----------------
+      B = jax.lax.all_gather(sel, axis_names)          # (m, kappa, d)
+      Bvalid = jax.lax.all_gather(valid, axis_names)   # (m, kappa)
+      Bgids = jax.lax.all_gather(gsel, axis_names)     # (m, kappa)
+      Bflat = B.reshape(m * kappa, d)
+      Bmask = Bvalid.reshape(m * kappa)
+      Bgflat = Bgids.reshape(m * kappa)
 
-    # evaluation weight of this shard: full-set eval or the Thm-10 U subset
-    # held by the first ALIVE shard, and zero for dead machines -- their
-    # data carries no evaluation mass
-    u_holder = jnp.argmax(keep)                      # first alive shard
-    w = jnp.where(u_subset_eval, (me == u_holder).astype(jnp.float32), 1.0)
-    w = w * my_keep.astype(jnp.float32)
-    denom = _psum(n_live * w, axis_names)
-    denom = jnp.maximum(denom, 1.0)
+      # evaluation weight of this shard: full-set eval or the Thm-10 U
+      # subset held by the first ALIVE shard, and zero for dead machines --
+      # their data carries no evaluation mass
+      u_holder = jnp.argmax(keep)                      # first alive shard
+      w = jnp.where(u_subset_eval, (me == u_holder).astype(jnp.float32), 1.0)
+      w = w * my_keep.astype(jnp.float32)
+      denom = _psum(n_live * w, axis_names)
+      denom = jnp.maximum(denom, 1.0)
 
-    # ---- A_max: value of each machine's solution under final eval --------
-    def value_of(sel_i, valid_i):
-      st = set_value_feats(objective, objective.init(local_feats, evalw),
-                           sel_i, valid_i)
-      # local mean * local live count -> psum-able sum
-      return objective.value(st) * n_live * w
-    part_vals = jax.vmap(value_of)(B, Bvalid)        # (m,)
-    stage1_vals = _psum(part_vals, axis_names) / denom
-    stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
-    best_i = jnp.argmax(stage1_vals)
+      # ---- A_max: value of each machine's solution under final eval ------
+      def value_of(sel_i, valid_i):
+        st = set_value_feats(objective, objective.init(local_feats, evalw),
+                             sel_i, valid_i)
+        # local mean * local live count -> psum-able sum
+        return objective.value(st) * n_live * w
+      part_vals = jax.vmap(value_of)(B, Bvalid)        # (m,)
+      stage1_vals = _psum(part_vals, axis_names) / denom
+      stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
+      best_i = jnp.argmax(stage1_vals)
 
-    # ---- round 2: distributed greedy over B ------------------------------
-    engine = _objective_engine(objective, local_feats, Bflat, Bmask, Bgflat,
-                               eval_mask=evalw)
-    merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
-        engine, k_final, axis_names, w, denom, feats.dtype)
+      # ---- round 2: distributed greedy over B ----------------------------
+      engine = _objective_engine(objective, local_feats, Bflat, Bmask,
+                                 Bgflat, eval_mask=evalw)
+      merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
+          engine, k_final, axis_names, w, denom, feats.dtype)
+    else:
+      # ---- merge: accumulation tree, innermost axis up -------------------
+      # Level l all_gathers the subtree representatives' blocks over ONE
+      # mesh axis (c_l children) and reruns the same distributed greedy
+      # with psums over the axis SUFFIX -- exactly this subtree's shards.
+      # psum/all_gather return identical bits on every participant, so the
+      # whole subtree carries identical representatives upward without a
+      # re-broadcast; with b = m the loop is a single level over the full
+      # mesh -- the flat merge's own op sequence, hence bit-identical.
+      Q, Qv, Qg = sel, valid, gsel
+      r_lv = len(axis_names)
+      for li in range(r_lv):
+        root = li == r_lv - 1
+        ax = axis_names[r_lv - 1 - li]
+        sub_axes = axis_names[r_lv - 1 - li:]
+        c_l = mesh.shape[ax]
+        s_l = _mesh_size(mesh, sub_axes)
+        kprev = Q.shape[0]
+        B = jax.lax.all_gather(Q, ax)                  # (c_l, kprev, d)
+        Bvalid = jax.lax.all_gather(Qv, ax)
+        Bgids = jax.lax.all_gather(Qg, ax)
+        Bflat = B.reshape(c_l * kprev, d)
+        Bmask = Bvalid.reshape(c_l * kprev)
+        Bgflat = Bgids.reshape(c_l * kprev)
+        # Thm-10 holder *per subtree*: the first alive shard among the s_l
+        # consecutive combined indices this level's psums span, re-elected
+        # from the liveness mask at every level -- a dead interior node's
+        # subtree keeps merging under its next alive member's U subset
+        base = (me // s_l) * s_l
+        sub_keep = jax.lax.dynamic_slice(keep, (base,), (s_l,))
+        u_holder = base + jnp.argmax(sub_keep)
+        w = jnp.where(u_subset_eval, (me == u_holder).astype(jnp.float32),
+                      1.0)
+        w = w * my_keep.astype(jnp.float32)
+        denom = jnp.maximum(_psum(n_live * w, sub_axes), 1.0)
+        if root:
+          # A_max over the root's children (== per-machine when b = m);
+          # a child is alive iff ANY shard of its subtree is
+          def value_of(sel_i, valid_i):
+            st = set_value_feats(objective,
+                                 objective.init(local_feats, evalw),
+                                 sel_i, valid_i)
+            return objective.value(st) * n_live * w
+          part_vals = jax.vmap(value_of)(B, Bvalid)    # (c_l,)
+          stage1_vals = _psum(part_vals, sub_axes) / denom
+          child_keep = jnp.any(keep.reshape(c_l, s_l // c_l), axis=1)
+          stage1_vals = jnp.where(child_keep, stage1_vals, -jnp.inf)
+          best_i = jnp.argmax(stage1_vals)
+        engine = _objective_engine(objective, local_feats, Bflat, Bmask,
+                                   Bgflat, eval_mask=evalw)
+        Q, Qv, Qg, v_merged = _dist_greedy_core(
+            engine, k_final if root else kappa, sub_axes, w, denom,
+            feats.dtype)
+      merged_feats, merged_valid, merged_gids = Q, Qv, Qg
 
     # ---- pick the better of A_B and A_max --------------------------------
     v_best_single = stage1_vals[best_i]
@@ -651,7 +880,10 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
                         backend: str | None = None,
                         gids: Array | None = None,
                         liveness_age: Array | None = None,
-                        liveness_deadline: float | None = None):
+                        liveness_deadline: float | None = None,
+                        mode: str = "standard",
+                        merge: str = "flat",
+                        tree_branch: int | None = None):
   """Perf-optimized sharded GreeDi for the facility-location objective over
   any fused similarity kernel (the production data-selection path).
 
@@ -675,7 +907,16 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
   (``gids = -1``: excluded from candidates, evaluation mass, and A_max), and
   the liveness collective (``liveness_age``/``liveness_deadline``, same
   contract as ``greedi_sharded``).
+
+  ``mode="lazy"`` routes round 1 through ``_fast_r1_lazy``: tile-bound lazy
+  pruning over the cached similarity columns, bit-identical selections to
+  ``mode="standard"`` (the kappa-fold FLOP cut composes with lazy pruning).
+  ``merge``/``tree_branch`` select the flat vs accumulation-tree merge with
+  the same contract as ``greedi_sharded`` (b = m reduces to flat
+  bit-exactly).
   """
+  if mode not in ("standard", "lazy"):
+    raise ValueError(f"mode must be 'standard' or 'lazy', got {mode!r}")
   if kernel not in dispatch.FUSED_SIMS:
     raise ValueError(
         f"greedi_sharded_fast caches similarities through the 'pairwise' "
@@ -684,6 +925,8 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
   sim = dispatch.resolve("pairwise", backend or "auto")
   h = _kernel_h(kernel_kwargs)  # same default resolution as the objectives
   m = _mesh_size(mesh, axis_names)
+  mesh, axis_names = _resolve_merge_mesh(mesh, axis_names, m, merge,
+                                         tree_branch)
   n, d = feats.shape
   assert n % m == 0, (n, m)
   if straggler_keep is None:
@@ -706,8 +949,6 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     vrow = local_valid.astype(jnp.float32)
     n_live = jnp.sum(vrow)
     w = my_keep.astype(jnp.float32)
-    denom = _psum(n_live * w, axis_names)
-    denom = jnp.maximum(denom, 1.0)
 
     # ---- round 1: local greedy over the precomputed local sim matrix ----
     # hole EVAL rows are zeroed out of the similarity block so they carry no
@@ -715,21 +956,25 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     s11 = sim(local_feats, local_feats, kernel=kernel, h=h)  # (nl, nl) f32
     s11 = s11 * vrow[:, None]
 
-    def r1_body(t, c):
-      cov, selmask, sel_idx, took = c
-      gains = jnp.sum(jnp.maximum(s11 - cov[:, None], 0.0), axis=0)
-      feasible = (~selmask) & local_valid
-      _, j = masked_top1(gains, feasible)
-      take = jnp.any(feasible)
-      cov = jnp.where(take, jnp.maximum(cov, s11[:, j]), cov)
-      selmask = selmask.at[j].set(jnp.where(take, True, selmask[j]))
-      return (cov, selmask, sel_idx.at[t].set(j), took.at[t].set(take))
+    if mode == "lazy":
+      sel_idx, took, r1_resc = _fast_r1_lazy(s11, local_valid, kappa, d)
+    else:
+      def r1_body(t, c):
+        cov, selmask, sel_idx, took = c
+        gains = jnp.sum(jnp.maximum(s11 - cov[:, None], 0.0), axis=0)
+        feasible = (~selmask) & local_valid
+        _, j = masked_top1(gains, feasible)
+        take = jnp.any(feasible)
+        cov = jnp.where(take, jnp.maximum(cov, s11[:, j]), cov)
+        selmask = selmask.at[j].set(jnp.where(take, True, selmask[j]))
+        return (cov, selmask, sel_idx.at[t].set(j), took.at[t].set(take))
 
-    cov0 = jnp.zeros((n_local,), jnp.float32)
-    _, _, sel_idx, took = _ufori(
-        0, kappa, r1_body,
-        (cov0, jnp.zeros((n_local,), bool),
-         jnp.zeros((kappa,), jnp.int32), jnp.zeros((kappa,), bool)))
+      cov0 = jnp.zeros((n_local,), jnp.float32)
+      _, _, sel_idx, took = _ufori(
+          0, kappa, r1_body,
+          (cov0, jnp.zeros((n_local,), bool),
+           jnp.zeros((kappa,), jnp.int32), jnp.zeros((kappa,), bool)))
+      r1_resc = jnp.int32(0)
     sel = local_feats[sel_idx]                                # (kappa, d)
     # steps past the live local rows find nothing feasible; invalidate them
     # exactly like the generic path's greedy (idx = -1 once nothing is
@@ -738,39 +983,87 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     gsel = jnp.where(took, local_gids[sel_idx], -1)
     valid = my_keep & took
 
-    # ---- merge + ONE cross-similarity matmul ------------------------------
-    B = jax.lax.all_gather(sel, axis_names)                   # (m, kappa, d)
-    Bvalid = jax.lax.all_gather(valid, axis_names)            # (m, kappa)
-    Bgids = jax.lax.all_gather(gsel, axis_names)              # (m, kappa)
-    Bflat = B.reshape(m * kappa, d)
-    Bmask = Bvalid.reshape(m * kappa)
-    Bgflat = Bgids.reshape(m * kappa)
-    s2 = sim(local_feats, Bflat, kernel=kernel, h=h)          # (nl, m*kappa)
-    s2 = s2 * vrow[:, None]
+    if merge == "flat":
+      # ---- merge + ONE cross-similarity matmul ----------------------------
+      denom = _psum(n_live * w, axis_names)
+      denom = jnp.maximum(denom, 1.0)
+      B = jax.lax.all_gather(sel, axis_names)                 # (m, kappa, d)
+      Bvalid = jax.lax.all_gather(valid, axis_names)          # (m, kappa)
+      Bgids = jax.lax.all_gather(gsel, axis_names)            # (m, kappa)
+      Bflat = B.reshape(m * kappa, d)
+      Bmask = Bvalid.reshape(m * kappa)
+      Bgflat = Bgids.reshape(m * kappa)
+      s2 = sim(local_feats, Bflat, kernel=kernel, h=h)        # (nl, m*kappa)
+      s2 = s2 * vrow[:, None]
 
-    # ---- A_max: no replay needed ------------------------------------------
-    # invalid candidate columns (padding past a machine's live rows, or rows
-    # of a dead machine) carry no coverage in f(A_i)
-    s2_pos = jnp.maximum(s2, 0.0) * Bmask.astype(jnp.float32)[None, :]
-    per_machine = jnp.max(s2_pos.reshape(n_local, m, kappa), axis=2)  # (nl,m)
-    stage1_vals = _psum(jnp.sum(per_machine, axis=0) * w, axis_names) / denom
-    stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
-    best_i = jnp.argmax(stage1_vals)
+      # ---- A_max: no replay needed ----------------------------------------
+      # invalid candidate columns (padding past a machine's live rows, or
+      # rows of a dead machine) carry no coverage in f(A_i)
+      s2_pos = jnp.maximum(s2, 0.0) * Bmask.astype(jnp.float32)[None, :]
+      per_machine = jnp.max(s2_pos.reshape(n_local, m, kappa), axis=2)
+      stage1_vals = _psum(jnp.sum(per_machine, axis=0) * w,
+                          axis_names) / denom
+      stage1_vals = jnp.where(keep, stage1_vals, -jnp.inf)
+      best_i = jnp.argmax(stage1_vals)
 
-    # ---- round 2: the shared core over cached similarity columns ----------
-    # s2's columns are Bflat's rows by construction, so the cached-gain
-    # closures and the candidate block stay in lockstep inside the engine
-    engine = _Engine(
-        state0=jnp.zeros((n_local,), jnp.float32),
-        partial_gains=lambda cov: jnp.sum(
-            jnp.maximum(s2 - cov[:, None], 0.0), axis=0),
-        apply_update=lambda cov, j, feat, take: jnp.where(
-            take, jnp.maximum(cov, s2[:, j]), cov),
-        partial_value=jnp.sum,
-        cands=Bflat, cmask=Bmask, cgids=Bgflat,
-    )
-    merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
-        engine, k_final, axis_names, w, denom, feats.dtype)
+      # ---- round 2: the shared core over cached similarity columns --------
+      # s2's columns are Bflat's rows by construction, so the cached-gain
+      # closures and the candidate block stay in lockstep inside the engine
+      engine = _Engine(
+          state0=jnp.zeros((n_local,), jnp.float32),
+          partial_gains=lambda cov: jnp.sum(
+              jnp.maximum(s2 - cov[:, None], 0.0), axis=0),
+          apply_update=lambda cov, j, feat, take: jnp.where(
+              take, jnp.maximum(cov, s2[:, j]), cov),
+          partial_value=jnp.sum,
+          cands=Bflat, cmask=Bmask, cgids=Bgflat,
+      )
+      merged_feats, merged_valid, merged_gids, v_merged = _dist_greedy_core(
+          engine, k_final, axis_names, w, denom, feats.dtype)
+    else:
+      # ---- merge: accumulation tree over cached similarities --------------
+      # same level structure as greedi_sharded's tree branch; each level
+      # caches ONE (nl, c_l*kprev) cross-similarity block -- the per-level
+      # peak replaces the flat (nl, m*kappa) block
+      Q, Qv, Qg = sel, valid, gsel
+      r_lv = len(axis_names)
+      for li in range(r_lv):
+        root = li == r_lv - 1
+        ax = axis_names[r_lv - 1 - li]
+        sub_axes = axis_names[r_lv - 1 - li:]
+        c_l = mesh.shape[ax]
+        kprev = Q.shape[0]
+        B = jax.lax.all_gather(Q, ax)                  # (c_l, kprev, d)
+        Bvalid = jax.lax.all_gather(Qv, ax)
+        Bgids = jax.lax.all_gather(Qg, ax)
+        Bflat = B.reshape(c_l * kprev, d)
+        Bmask = Bvalid.reshape(c_l * kprev)
+        Bgflat = Bgids.reshape(c_l * kprev)
+        denom = jnp.maximum(_psum(n_live * w, sub_axes), 1.0)
+        s2 = sim(local_feats, Bflat, kernel=kernel, h=h)
+        s2 = s2 * vrow[:, None]
+        if root:
+          s2_pos = jnp.maximum(s2, 0.0) * Bmask.astype(jnp.float32)[None, :]
+          per_child = jnp.max(s2_pos.reshape(n_local, c_l, kprev), axis=2)
+          stage1_vals = _psum(jnp.sum(per_child, axis=0) * w,
+                              sub_axes) / denom
+          s_l = _mesh_size(mesh, sub_axes)
+          child_keep = jnp.any(keep.reshape(c_l, s_l // c_l), axis=1)
+          stage1_vals = jnp.where(child_keep, stage1_vals, -jnp.inf)
+          best_i = jnp.argmax(stage1_vals)
+        engine = _Engine(
+            state0=jnp.zeros((n_local,), jnp.float32),
+            partial_gains=lambda cov, s2=s2: jnp.sum(
+                jnp.maximum(s2 - cov[:, None], 0.0), axis=0),
+            apply_update=lambda cov, j, feat, take, s2=s2: jnp.where(
+                take, jnp.maximum(cov, s2[:, j]), cov),
+            partial_value=jnp.sum,
+            cands=Bflat, cmask=Bmask, cgids=Bgflat,
+        )
+        Q, Qv, Qg, v_merged = _dist_greedy_core(
+            engine, k_final if root else kappa, sub_axes, w, denom,
+            feats.dtype)
+      merged_feats, merged_valid, merged_gids = Q, Qv, Qg
 
     v_best_single = stage1_vals[best_i]
     use_merged = v_merged >= v_best_single
@@ -781,10 +1074,13 @@ def greedi_sharded_fast(feats: Array, *, mesh, kappa: int, k_final: int,
     sel_gids = jnp.where(use_merged, merged_gids,
                          _take_k(Bgids[best_i], k_final, -1))
     value = jnp.maximum(v_merged, v_best_single)
-    # the fast path's round 1 is standard greedy -- no lazy rescans
+    if mode == "lazy":
+      rescans = jax.lax.all_gather(r1_resc, axis_names).reshape(m)
+    else:
+      # standard round 1 scans every column every step -- no lazy rescans
+      rescans = jnp.zeros((m,), jnp.int32)
     return GreediResult(sel_feats, sel_valid, value, v_merged, v_best_single,
-                        stage1_vals, sel_gids, keep,
-                        jnp.zeros((m,), jnp.int32))
+                        stage1_vals, sel_gids, keep, rescans)
 
   shmapped = _shard_map(
       fn, mesh=mesh,

@@ -50,7 +50,11 @@ def greedi_select_indices_sharded(rng: Array, feats: Array, *, mesh,
                                   axis_names: tuple[str, ...] = ("data",),
                                   fast: bool = True,
                                   straggler_keep: Array | None = None,
-                                  backend: str | None = None) -> np.ndarray:
+                                  backend: str | None = None,
+                                  mode: str = "standard",
+                                  merge: str = "flat",
+                                  tree_branch: int | None = None
+                                  ) -> np.ndarray:
   """GreeDi over a device mesh returning global indices of the coreset.
 
   The ground set is randomly partitioned with the same key schedule as
@@ -69,6 +73,12 @@ def greedi_select_indices_sharded(rng: Array, feats: Array, *, mesh,
       / rbf via the pairwise oracle) instead of the generic objective path.
     straggler_keep: optional (m,) bool mask of alive machines.
     backend: gain-oracle / pairwise backend override (kernels/dispatch.py).
+    mode: round-1 greedy mode ("standard" | "lazy"; bit-identical
+      selections on both paths -- the fast path's lazy variant prunes the
+      cached similarity columns).
+    merge: "flat" or "tree" -- accumulation-tree merge with ``tree_branch``
+      children per node (see core/greedi.py; b = m reduces to flat
+      bit-exactly).
   """
   n, d = feats.shape
   m = GD._mesh_size(mesh, axis_names)
@@ -82,13 +92,15 @@ def greedi_select_indices_sharded(rng: Array, feats: Array, *, mesh,
     r = GD.greedi_sharded_fast(
         feats_sh, mesh=mesh, kappa=kappa, k_final=k_final,
         axis_names=axis_names, kernel=kernel, kernel_kwargs=kernel_kwargs,
-        straggler_keep=straggler_keep, rng=r_sel, backend=backend, gids=gids)
+        straggler_keep=straggler_keep, rng=r_sel, backend=backend, gids=gids,
+        mode=mode, merge=merge, tree_branch=tree_branch)
   else:
     obj = O.FacilityLocation(kernel=kernel, kernel_kwargs=kernel_kwargs)
     r = GD.greedi_sharded(
         feats_sh, mesh=mesh, kappa=kappa, k_final=k_final, objective=obj,
         axis_names=axis_names, straggler_keep=straggler_keep, rng=r_sel,
-        backend=backend, gids=gids)
+        backend=backend, gids=gids, mode=mode, merge=merge,
+        tree_branch=tree_branch)
   sel = np.asarray(r.sel_gids)
   return sel[sel >= 0]
 

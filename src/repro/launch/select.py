@@ -97,6 +97,11 @@ def main() -> None:
   ap.add_argument("--no-fast", action="store_true",
                   help="sharded path: use the generic objective engine "
                   "instead of the cached-similarity fast engine")
+  ap.add_argument("--merge-tree", type=int, default=0, metavar="B",
+                  help="merge round-1 blocks through an accumulation tree "
+                  "with B children per node instead of one flat all_gather "
+                  "(sharded and service modes; 0 = flat; B = mesh size is "
+                  "bit-identical to flat -- see docs/greedi.md)")
   ap.add_argument("--epochs", type=int, default=0,
                   help="run the multi-epoch SelectionService for this many "
                   "epochs (mesh mode only)")
@@ -179,7 +184,9 @@ def main() -> None:
     svc = SelectionService(mesh, d=args.d, kappa=kappa, k_final=args.k,
                            capacity=args.n, kernel=args.kernel,
                            backend=args.backend, warm_start=not args.cold,
-                           deadline=args.deadline, objective=args.objective)
+                           deadline=args.deadline, objective=args.objective,
+                           merge="tree" if args.merge_tree else "flat",
+                           tree_branch=args.merge_tree or None)
     if args.metrics_port is not None:
       # board wired in: POST /healthz beats feed the same HeartbeatBoard
       # as in-process beats (the out-of-band liveness path)
@@ -222,7 +229,9 @@ def main() -> None:
     # (saturated coverage selects over the abs-mapped corpus)
     feats = jax.numpy.asarray(feats_np)
     mode_fields = dict(mode="service", m=args.mesh, epochs=args.epochs,
-                       objective=args.objective)
+                       objective=args.objective,
+                       merge=f"tree{args.merge_tree}" if args.merge_tree
+                       else "flat")
   elif args.mesh:
     from repro.util import make_mesh  # jax imported post-env-setup
     mesh = make_mesh((args.mesh,), ("data",))
@@ -232,9 +241,13 @@ def main() -> None:
     sel = greedi_select_indices_sharded(
         jax.random.PRNGKey(0), feats, mesh=mesh, kappa=kappa,
         k_final=args.k, kernel=args.kernel, fast=not args.no_fast,
-        backend=args.backend)
+        backend=args.backend,
+        merge="tree" if args.merge_tree else "flat",
+        tree_branch=args.merge_tree or None)
     mode_fields = dict(mode="sharded", m=args.mesh,
-                       engine="generic" if args.no_fast else "fast")
+                       engine="generic" if args.no_fast else "fast",
+                       merge=f"tree{args.merge_tree}" if args.merge_tree
+                       else "flat")
   else:
     if args.metrics_port is not None:
       sidecar = obs.Sidecar(port=args.metrics_port)

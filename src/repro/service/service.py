@@ -181,6 +181,11 @@ class SelectionService:
     query_mask_cap / query_batch_tile: multi-tenant query knobs, forwarded
       to the store -- the fixed per-query exclusion-list capacity and the
       compiled batch width of ``query_batch`` (None = autotuned).
+    merge / tree_branch: epoch merge strategy (core/greedi.py): "flat"
+      all_gathers all m round-1 blocks at once; "tree" runs the
+      accumulation-tree merge with ``tree_branch`` children per node, so
+      the peak per-shard gathered block is (b*kappa, d) per level instead
+      of (m*kappa, d).  ``tree_branch = m`` reduces to flat bit-exactly.
   """
 
   def __init__(self, mesh, *, d: int, kappa: int, k_final: int,
@@ -191,7 +196,8 @@ class SelectionService:
                seed: int = 0, append_block: int = 1024,
                feat_dtype=np.float32, objective: str | Any = "facility",
                sieve: bool = True, query_mask_cap: int = 16,
-               query_batch_tile: int | None = None):
+               query_batch_tile: int | None = None,
+               merge: str = "flat", tree_branch: int | None = None):
     self.mesh = mesh
     self._axis_names = axis_names
     self._m = GD._mesh_size(mesh, axis_names)
@@ -200,6 +206,12 @@ class SelectionService:
     self._k_final = k_final
     self._mode = mode
     self._deadline = deadline
+    self._merge = merge
+    self._tree_branch = tree_branch
+    # validates merge/tree_branch eagerly (mesh must factor) and fixes the
+    # peak per-shard merged-candidate block the epoch jit will gather
+    self._merge_peak_rows = GD.merge_peak_rows(
+        self._m, kappa, merge=merge, tree_branch=tree_branch)
     if isinstance(objective, str):
       if objective == "info_gain":
         # one state instance serves round 1 (kappa steps) and round 2 /
@@ -280,13 +292,18 @@ class SelectionService:
           feats_sh, mesh=self.mesh, kappa=self._kappa,
           k_final=self._k_final, objective=obj, axis_names=axis_names,
           rng=r_run, backend=self._backend, gids=gids_sh, mode=self._mode,
-          warm_bounds=wb, liveness_age=ages, liveness_deadline=deadline)
-      # device-fed diagnostic, UNCONDITIONAL extra output (the no-retrace
+          warm_bounds=wb, liveness_age=ages, liveness_deadline=deadline,
+          merge=self._merge, tree_branch=self._tree_branch)
+      # device-fed diagnostics, UNCONDITIONAL extra outputs (the no-retrace
       # contract of repro.obs): per-shard live evaluation mass under this
-      # epoch's partition.  The host only device_gets it when obs is enabled.
+      # epoch's partition, and the per-shard peak merged-candidate rows the
+      # merge gathered (O(b*kappa) under merge="tree" vs O(m*kappa) flat --
+      # the live counterpart of the docs/service.md transfer table).  The
+      # host only device_gets them when obs is enabled.
       eval_mass = jnp.sum((gids_sh >= 0).reshape(m, npp).astype(jnp.int32),
                           axis=1)
-      return result, eval_mass
+      merge_rows = jnp.full((m,), self._merge_peak_rows, jnp.int32)
+      return result, eval_mass, merge_rows
 
     # the raw (unjitted) epoch body is the analyzer's traceable entry point
     # (repro.analysis.entries traces it with jax.make_jaxpr at store shapes)
@@ -527,23 +544,30 @@ class SelectionService:
     # zero corpus) ran this epoch effectively cold -- report that, so
     # dashboards don't misread cold epochs as warm
     warm_eff = self._warm and self.store.bounds_populated
+    # host->device bytes this epoch: the corpus block is device-resident,
+    # so only the arguments built here cross (ages + deadline + rng key)
+    h2d = int(ages.nbytes) + 4 + 8
     with obs.span("service.epoch", epoch=self._epoch_idx,
                   warm=warm_eff) as sp:
-      r, eval_mass = self._epoch_fn(self.store.feats, self.store.gids,
-                                    self.store.ubound_device, ages, deadline,
-                                    rng)
-      jax.block_until_ready((r, eval_mass))
+      r, eval_mass, merge_rows = self._epoch_fn(
+          self.store.feats, self.store.gids, self.store.ubound_device, ages,
+          deadline, rng)
+      jax.block_until_ready((r, eval_mass, merge_rows))
     wall = sp.wall_s
     sv = np.asarray(r.sel_valid)
-    sel = np.asarray(r.sel_gids)[sv]
-    sel_feats = np.asarray(r.sel_feats)[sv]
+    sel_all = np.asarray(r.sel_gids)
+    feats_all = np.asarray(r.sel_feats)
+    d2h = sv.nbytes + sel_all.nbytes + feats_all.nbytes
+    sel = sel_all[sv]
+    sel_feats = feats_all[sv]
     keep = sel >= 0
     sel, sel_feats = sel[keep], sel_feats[keep]
     stats = EpochStats(epoch=self._epoch_idx, n_live=self.store.n_docs,
                        capacity=self.store.capacity, value=float(r.value),
                        alive=np.asarray(r.alive), warm=warm_eff,
                        wall_s=wall, retraces=self._trace_count)
-    self._feed_epoch_metrics(stats, r, eval_mass)
+    self._feed_epoch_metrics(stats, r, eval_mass, merge_rows,
+                             h2d_bytes=h2d, d2h_bytes=d2h)
     self._epoch_idx += 1
     result = EpochResult(sel, stats, r)
     # epoch output seeds the fresh sieve grid: queries between epochs start
@@ -565,16 +589,21 @@ class SelectionService:
                   "query wall clock (batch: whole drained batch)").observe(
                       wall_s, path=path)
 
-  def _feed_epoch_metrics(self, stats: EpochStats, r, eval_mass) -> None:
+  def _feed_epoch_metrics(self, stats: EpochStats, r, eval_mass, merge_rows,
+                          *, h2d_bytes: int, d2h_bytes: int) -> None:
     """Feed the metrics registry after an epoch (docs/observability.md).
 
     Registry updates are always on (cheap host math over already-fetched
-    stats); the device-fed diagnostics -- per-shard eval mass and lazy tile
-    rescans -- cross D2H only when obs is enabled, so the disabled service
-    pays no extra transfers.
+    stats); the device-fed diagnostics -- per-shard eval mass, lazy tile
+    rescans, and per-shard peak merge rows -- cross D2H only when obs is
+    enabled, so the disabled service pays no extra transfers.
     """
     reg = obs.REGISTRY
     reg.counter("repro_epochs_total", "selection epochs run").inc()
+    xfer = reg.counter("repro_transfer_bytes_total",
+                       "host<->device bytes moved, by path")
+    xfer.inc(h2d_bytes, path="epoch_h2d")
+    xfer.inc(d2h_bytes, path="epoch_d2h")
     reg.histogram("repro_epoch_wall_seconds",
                   "device-synced epoch wall clock").observe(stats.wall_s)
     reg.gauge("repro_epoch_value", "f(selection) of the last epoch").set(
@@ -594,10 +623,19 @@ class SelectionService:
       return
     em = np.asarray(eval_mass)
     rescans = np.asarray(r.r1_rescans)
+    rows = np.asarray(merge_rows)
+    row_bytes = self._d * np.dtype(self.store.feats.dtype).itemsize
     for i in range(em.shape[0]):
       reg.gauge("repro_epoch_eval_mass",
                 "per-shard live evaluation rows (device-fed)").set(
                     int(em[i]), shard=i)
+      reg.gauge("repro_merge_peak_rows",
+                "per-shard peak merged-candidate rows gathered by the "
+                "epoch merge (device-fed; b*kappa tree vs m*kappa flat)"
+                ).set(int(rows[i]), shard=i)
+      reg.gauge("repro_merge_peak_bytes",
+                "per-shard peak merged-candidate bytes (rows * d * "
+                "itemsize)").set(int(rows[i]) * row_bytes, shard=i)
     reg.counter("repro_lazy_tile_rescans_total",
                 "round-1 lazy tiles rescanned (device-fed)").inc(
                     int(rescans.sum()))

@@ -671,7 +671,9 @@ class CorpusStore:
                                   self._sieve_feat, jnp.int32(kq),
                                   jnp.asarray(excl), jnp.int32(seed))
     self._query_count += 1
-    return np.asarray(gids), np.asarray(scores)
+    gids, scores = np.asarray(gids), np.asarray(scores)
+    self._feed_transfer(h2d=excl.nbytes + 8, d2h=gids.nbytes + scores.nbytes)
+    return gids, scores
 
   def query_sieves_batch(self, ks, exclude, seeds):
     """Batched sieve merge: one device call per query tile answers a whole
@@ -720,8 +722,11 @@ class CorpusStore:
       g, s = self._query_batch_fn(self._sieve_gid, self._sieve_gain,
                                   self._sieve_feat, jnp.asarray(kc),
                                   jnp.asarray(ec), jnp.asarray(sc))
-      out_g.append(np.asarray(g)[:nb])
-      out_s.append(np.asarray(s)[:nb])
+      g, s = np.asarray(g), np.asarray(s)
+      self._feed_transfer(h2d=kc.nbytes + ec.nbytes + sc.nbytes,
+                          d2h=g.nbytes + s.nbytes)
+      out_g.append(g[:nb])
+      out_s.append(s[:nb])
       self._query_batch_calls += 1
     self._query_batch_queries += b
     return np.concatenate(out_g), np.concatenate(out_s)
@@ -802,9 +807,12 @@ class CorpusStore:
         ec = exclude[off:off + bq]
       g, s, nv = self._query_exact_fn(self._feats, self._gids,
                                       jnp.asarray(kc), jnp.asarray(ec))
-      out_g.append(np.asarray(g)[:nb])
-      out_s.append(np.asarray(s)[:nb])
-      out_n.append(np.asarray(nv)[:nb])
+      g, s, nv = np.asarray(g), np.asarray(s), np.asarray(nv)
+      self._feed_transfer(h2d=kc.nbytes + ec.nbytes,
+                          d2h=g.nbytes + s.nbytes + nv.nbytes)
+      out_g.append(g[:nb])
+      out_s.append(s[:nb])
+      out_n.append(nv[:nb])
     return (np.concatenate(out_g), np.concatenate(out_s),
             np.concatenate(out_n))
 
@@ -874,7 +882,20 @@ class CorpusStore:
     while n_total > self._cap:
       self._grow()
 
-  def _feed_append_metrics(self, rows_written: int, diag) -> None:
+  def _feed_transfer(self, *, h2d: int = 0, d2h: int = 0) -> None:
+    """Count query-path host<->device bytes (always on; host ints only).
+    One counter family spans every transfer path -- append writes, epoch
+    arguments/results, and the query tiers -- so the docs/service.md
+    transfer table has a live row per label."""
+    xfer = obs.REGISTRY.counter("repro_transfer_bytes_total",
+                                "host<->device bytes moved, by path")
+    if h2d:
+      xfer.inc(h2d, path="query_h2d")
+    if d2h:
+      xfer.inc(d2h, path="query_d2h")
+
+  def _feed_append_metrics(self, rows_written: int, diag,
+                           h2d_bytes: int = 0) -> None:
     """Feed the registry after one append chunk (docs/observability.md).
 
     The chunk/row counters are always on (host ints).  ``diag`` is the
@@ -887,6 +908,9 @@ class CorpusStore:
                 "fixed-shape append chunks written").inc()
     reg.counter("repro_append_rows_total",
                 "document rows appended").inc(rows_written)
+    reg.counter("repro_transfer_bytes_total",
+                "host<->device bytes moved, by path").inc(
+                    h2d_bytes, path="append_h2d")
     reg.gauge("repro_store_growths", "capacity doublings so far").set(
         self._growths)
     if not obs.enabled():
@@ -976,7 +1000,11 @@ class CorpusStore:
          self._sieve_cnt, self._sieve_delta,
          self._sieve_jtop) = out[4:self._n_state]
       self._n += cb
-      self._feed_append_metrics(cb, out[self._n_state:])
+      # the writer's H2D traffic: only the fixed-shape chunk crosses (the
+      # resident block is donated in place), plus the n scalar
+      self._feed_append_metrics(
+          cb, out[self._n_state:],
+          h2d_bytes=rows.nbytes + rgids.nbytes + rvalid.nbytes + 4)
 
     # every chunk landed: commit the id bookkeeping
     if auto:

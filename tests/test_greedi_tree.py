@@ -1,0 +1,271 @@
+"""Accumulation-tree merge (core/greedi.py merge="tree"): level structure,
+b = m flat-reduction bit-exactness, liveness through every level, and the
+service wiring.  Multi-device protocol behavior runs in subprocess meshes
+(forced host devices) like the other sharded suites."""
+import numpy as np
+import pytest
+
+from repro.core import greedi as GD
+
+
+# ---------------------------------------------------------------------------
+# host-side level structure (no mesh needed)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_factors():
+  assert GD._tree_factors(64, 4) == (4, 4, 4)
+  assert GD._tree_factors(8, 2) == (2, 2, 2)
+  assert GD._tree_factors(8, 8) == (8,)
+  assert GD._tree_factors(12, 4) == (4, 3)      # final outer factor <= b
+  assert GD._tree_factors(1, 1) == (1,)
+  with pytest.raises(ValueError, match="does not factor"):
+    GD._tree_factors(12, 8)                     # 12 % 8 != 0
+
+
+def test_norm_branch():
+  assert GD._norm_branch(64, None) == 8         # default
+  assert GD._norm_branch(4, None) == 4          # clamped to mesh
+  assert GD._norm_branch(8, 64) == 8            # b >= m -> one level
+  with pytest.raises(ValueError, match="tree_branch"):
+    GD._norm_branch(8, 1)
+
+
+def test_merge_peak_rows():
+  # the O(b*kappa) vs O(m*kappa) accounting the bench/obs gauges report
+  assert GD.merge_peak_rows(64, 8) == 512
+  assert GD.merge_peak_rows(64, 8, merge="tree", tree_branch=4) == 32
+  assert GD.merge_peak_rows(64, 8, merge="tree", tree_branch=64) == 512
+  assert GD.merge_peak_rows(12, 8, merge="tree", tree_branch=4) == 32
+  with pytest.raises(ValueError, match="merge"):
+    GD.merge_peak_rows(8, 8, merge="ring")
+
+
+# ---------------------------------------------------------------------------
+# protocol parity and quality (subprocess meshes)
+# ---------------------------------------------------------------------------
+
+
+def test_tree_b_eq_m_bit_identical(subrun):
+  """The degenerate one-level tree (b = m) must reduce to the flat merge
+  bit-exactly -- selections, sel_gids, values, AND stage1_values -- on both
+  the generic and the cached-similarity fast path."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded, greedi_sharded_fast
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(0), (256, 12))
+mesh = make_mesh((8,), ("data",))
+obj = O.FacilityLocation(kernel="linear")
+def check(flat, tree):
+  assert np.array_equal(np.asarray(flat.sel_gids), np.asarray(tree.sel_gids))
+  assert np.array_equal(np.asarray(flat.sel_valid),
+                        np.asarray(tree.sel_valid))
+  assert np.asarray(flat.value) == np.asarray(tree.value)
+  assert np.array_equal(np.asarray(flat.stage1_values),
+                        np.asarray(tree.stage1_values))
+  sv = np.asarray(flat.sel_valid)
+  assert np.array_equal(np.asarray(flat.sel_feats)[sv],
+                        np.asarray(tree.sel_feats)[sv])
+check(greedi_sharded(f, mesh=mesh, kappa=8, k_final=10, objective=obj),
+      greedi_sharded(f, mesh=mesh, kappa=8, k_final=10, objective=obj,
+                     merge="tree", tree_branch=8))
+check(greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=10),
+      greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=10,
+                          merge="tree", tree_branch=8))
+# u_subset_eval (Thm 10) under b = m: same holder election, same bits
+check(greedi_sharded(f, mesh=mesh, kappa=8, k_final=10, objective=obj,
+                     u_subset_eval=True),
+      greedi_sharded(f, mesh=mesh, kappa=8, k_final=10, objective=obj,
+                     u_subset_eval=True, merge="tree", tree_branch=8))
+print("BIT_IDENTICAL")
+""", n_devices=8)
+  assert "BIT_IDENTICAL" in out
+
+
+def test_tree_multilevel_quality_and_gids(subrun):
+  """A real 3-level tree (m=8, b=2) stays near centralized-greedy quality,
+  selects valid unique gids, and the fast path matches the generic path's
+  selection exactly (same merge math at every level)."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import objectives as O
+from repro.core.greedi import (centralized_greedy, greedi_sharded,
+                               greedi_sharded_fast)
+from repro.util import make_mesh
+f = jax.random.normal(jax.random.PRNGKey(1), (256, 12))
+f = f / jnp.linalg.norm(f, axis=1, keepdims=True)
+mesh = make_mesh((8,), ("data",))
+obj = O.FacilityLocation(kernel="linear")
+r = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                   merge="tree", tree_branch=2)
+rv, rg = np.asarray(r.sel_valid), np.asarray(r.sel_gids)
+assert rv.all()
+sel = rg[rv]
+assert (sel >= 0).all() and np.unique(sel).size == sel.size
+# stage1_values is per ROOT CHILD in a multi-level tree: 2 entries here
+assert np.asarray(r.stage1_values).shape == (2,)
+_, v_c = centralized_greedy(f, 8, objective=obj,
+                            init_for=lambda ef, em: obj.init(ef, em))
+ratio = float(r.value / v_c)
+print("RATIO", ratio)
+assert ratio > 0.85
+rf = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8,
+                         merge="tree", tree_branch=2)
+assert np.array_equal(np.asarray(rf.sel_gids), rg)
+# a 2-level factorization of the same mesh also works (b=4 -> (4, 2))
+r42 = greedi_sharded(f, mesh=mesh, kappa=8, k_final=8, objective=obj,
+                     merge="tree", tree_branch=4)
+assert np.asarray(r42.sel_valid).all()
+print("MULTILEVEL_OK")
+""", n_devices=8)
+  assert "MULTILEVEL_OK" in out
+
+
+def test_tree_liveness_kills(subrun):
+  """Kill a leaf, an interior node (a subtree's first shard -- its default
+  Thm-10 holder), and a whole root-child subtree.  The dead shards must be
+  reported in ``alive``, contribute no candidates and no evaluation mass at
+  ANY level (scrambling their rows cannot move the result), and the killed
+  holder's subtree re-elects its next alive member."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.greedi import greedi_sharded_fast
+from repro.util import make_mesh
+mesh = make_mesh((8,), ("data",))
+f = jax.random.normal(jax.random.PRNGKey(2), (256, 12))
+npp = 256 // 8
+
+def run(feats, ages, **kw):
+  return greedi_sharded_fast(feats, mesh=mesh, kappa=6, k_final=10,
+                             liveness_age=ages, liveness_deadline=1.0,
+                             merge="tree", tree_branch=2, **kw)
+
+for name, dead in (("leaf", [5]), ("interior", [2]), ("subtree", [4, 5, 6, 7])):
+  ages = jnp.zeros((8,)).at[jnp.asarray(dead)].set(9.9)
+  r = run(f, ages)
+  alive = np.asarray(r.alive)
+  assert not alive[dead].any() and alive.sum() == 8 - len(dead), (name, alive)
+  sv, sg = np.asarray(r.sel_valid), np.asarray(r.sel_gids)
+  assert sv.any(), name
+  sel = sg[sv]
+  dead_rows = np.concatenate([np.arange(i * npp, (i + 1) * npp)
+                              for i in dead])
+  assert not np.isin(sel, dead_rows).any(), (name, sel)
+  # no dead evaluation mass / candidates at any level: replacing the dead
+  # shards' rows with garbage must not change ANYTHING in the result
+  f2 = np.asarray(f).copy()
+  f2[dead_rows] = 1e3 * np.arange(len(dead_rows) * 12).reshape(-1, 12)
+  r2 = run(jnp.asarray(f2), ages)
+  assert np.array_equal(sg, np.asarray(r2.sel_gids)), name
+  assert np.asarray(r.value) == np.asarray(r2.value), name
+  print("KILL_OK", name, float(r.value))
+
+# holder re-election inside the tree, observed through the generic path's
+# Thm-10 U-subset evaluation: killing subtree {2,3}'s default holder (shard
+# 2) must leave a *finite* value fed by shard 3's U subset at that level
+from repro.core import objectives as O
+from repro.core.greedi import greedi_sharded
+obj = O.FacilityLocation(kernel="linear")
+ages = jnp.zeros((8,)).at[2].set(9.9)
+ru = greedi_sharded(f, mesh=mesh, kappa=6, k_final=10, objective=obj,
+                    u_subset_eval=True, liveness_age=ages,
+                    liveness_deadline=1.0, merge="tree", tree_branch=2)
+assert np.isfinite(float(ru.value)) and float(ru.value) > 0
+assert not np.asarray(ru.alive)[2]
+print("REELECT_OK", float(ru.value))
+""", n_devices=8)
+  assert out.count("KILL_OK") == 3
+  assert "REELECT_OK" in out
+
+
+def test_fast_lazy_round1_bit_identical(subrun):
+  """greedi_sharded_fast(mode="lazy") -- tile-bound lazy pruning over the
+  cached similarity columns -- selects bit-identically to the standard
+  full-column scan, composes with both merges, and reports rescans."""
+  out = subrun("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.greedi import greedi_sharded_fast
+from repro.util import make_mesh
+mesh = make_mesh((4,), ("data",))
+for seed, kernel in ((0, "linear"), (1, "rbf")):
+  f = jax.random.normal(jax.random.PRNGKey(seed), (512, 16))
+  std = greedi_sharded_fast(f, mesh=mesh, kappa=12, k_final=16,
+                            kernel=kernel)
+  lz = greedi_sharded_fast(f, mesh=mesh, kappa=12, k_final=16,
+                           kernel=kernel, mode="lazy")
+  assert np.array_equal(np.asarray(std.sel_gids), np.asarray(lz.sel_gids))
+  assert np.asarray(std.value) == np.asarray(lz.value)
+  assert np.array_equal(np.asarray(std.stage1_values),
+                        np.asarray(lz.stage1_values))
+  lzt = greedi_sharded_fast(f, mesh=mesh, kappa=12, k_final=16,
+                            kernel=kernel, mode="lazy", merge="tree",
+                            tree_branch=2)
+  stt = greedi_sharded_fast(f, mesh=mesh, kappa=12, k_final=16,
+                            kernel=kernel, merge="tree", tree_branch=2)
+  assert np.array_equal(np.asarray(stt.sel_gids), np.asarray(lzt.sel_gids))
+  assert (np.asarray(lz.r1_rescans) > 0).all()
+# hole rows (gids = -1) stay excluded under lazy round 1
+f = jax.random.normal(jax.random.PRNGKey(3), (512, 16))
+gids = jnp.where(jnp.arange(512) % 5 == 0, -1, jnp.arange(512))
+a = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8, gids=gids)
+b = greedi_sharded_fast(f, mesh=mesh, kappa=8, k_final=8, gids=gids,
+                        mode="lazy")
+assert np.array_equal(np.asarray(a.sel_gids), np.asarray(b.sel_gids))
+assert not np.isin(-1, np.asarray(b.sel_gids)[np.asarray(b.sel_valid)])
+print("LAZY_BITS_OK")
+""", n_devices=4)
+  assert "LAZY_BITS_OK" in out
+
+
+def test_tree_errors_and_validation():
+  from repro.util import make_mesh
+  import jax
+  import jax.numpy as jnp
+  mesh = make_mesh((1,), ("data",))
+  f = jax.random.normal(jax.random.PRNGKey(0), (16, 4))
+  with pytest.raises(ValueError, match="merge"):
+    GD.greedi_sharded_fast(f, mesh=mesh, kappa=2, k_final=2, merge="ring")
+  with pytest.raises(ValueError, match="mode"):
+    GD.greedi_sharded_fast(f, mesh=mesh, kappa=2, k_final=2, mode="bogus")
+  # m=1 tree degenerates to flat and still runs
+  r = GD.greedi_sharded_fast(f, mesh=mesh, kappa=2, k_final=2, merge="tree")
+  assert np.asarray(r.sel_valid).any()
+
+
+def test_service_tree_epoch(subrun):
+  """SelectionService(merge="tree"): b = m epochs match the flat service's
+  selection exactly, a multi-level tree serves valid epochs, and the
+  merge-peak/transfer metric families are fed."""
+  out = subrun("""
+import numpy as np
+from repro import obs
+from repro.service import SelectionService
+from repro.util import make_mesh
+obs.enable()
+mesh = make_mesh((8,), ("data",))
+feats = np.random.default_rng(0).normal(size=(512, 8)).astype(np.float32)
+mk = dict(d=8, kappa=6, k_final=10, capacity=512)
+svc_f = SelectionService(mesh, **mk)
+svc_m = SelectionService(mesh, merge="tree", tree_branch=8, **mk)
+svc_t = SelectionService(mesh, merge="tree", tree_branch=2, **mk)
+for s in (svc_f, svc_m, svc_t):
+  s.append(feats)
+rf, rm, rt = svc_f.epoch(), svc_m.epoch(), svc_t.epoch()
+assert np.array_equal(rf.sel_gids, rm.sel_gids)      # b = m == flat
+assert rt.sel_gids.size and (rt.sel_gids >= 0).all()
+snap = obs.REGISTRY.snapshot()
+rows = {s["value"] for s in snap["repro_merge_peak_rows"]["series"]}
+assert rows == {12.0}, rows          # tree svc ran last: peak b*kappa = 12
+paths = {s["labels"]["path"]
+         for s in snap["repro_transfer_bytes_total"]["series"]}
+assert {"append_h2d", "epoch_h2d", "epoch_d2h"} <= paths, paths
+# a second epoch must NOT retrace (the no-retrace contract holds with the
+# tree merge + device-fed merge-rows output)
+t0 = svc_t.stats_traces if hasattr(svc_t, "stats_traces") else svc_t._trace_count
+svc_t.epoch()
+assert svc_t._trace_count == t0
+print("SERVICE_TREE_OK")
+""", n_devices=8)
+  assert "SERVICE_TREE_OK" in out
